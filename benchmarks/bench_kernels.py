@@ -1,0 +1,45 @@
+"""Microbenchmarks for the Pallas kernel wrappers (interpret on CPU) and
+their jnp oracles. Prints name,us_per_call,derived CSV lines."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(mode, out):
+    rng = jax.random.PRNGKey(0)
+    logits = jax.random.normal(rng, (4096, 9))
+    us_ref = _time(jax.jit(lambda l: R.masked_pseudo_ce_ref(l, 0.95)), logits)
+    out.append(f"kern,cpu,masked_pseudo_ce_ref,{us_ref:.0f}")
+    print(f"masked_pseudo_ce ref       {us_ref:10.0f} us/call")
+
+    x = jax.random.normal(rng, (1 << 20,))
+    us = _time(jax.jit(lambda v: R.sparse_delta_ref(
+        jnp.pad(v, (0, 0)), 0.5)), x)
+    out.append(f"kern,cpu,sparse_delta_ref,{us:.0f}")
+    print(f"sparse_delta ref (1M)      {us:10.0f} us/call")
+
+    d = jax.random.normal(rng, (6, 1 << 18))
+    w = jnp.arange(1, 7, dtype=jnp.float32) / 21
+    us = _time(jax.jit(R.staleness_agg_ref), d, w)
+    out.append(f"kern,cpu,staleness_agg_ref,{us:.0f}")
+    print(f"staleness_agg ref (6x256k) {us:10.0f} us/call")
+
+    q = jax.random.normal(rng, (1, 256, 4, 64))
+    k = jax.random.normal(rng, (1, 256, 4, 64))
+    us = _time(jax.jit(lambda a, b: R.flash_attention_ref(a, b, b)), q, k)
+    out.append(f"kern,cpu,flash_attention_ref,{us:.0f}")
+    print(f"flash_attention ref        {us:10.0f} us/call")

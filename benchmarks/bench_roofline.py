@@ -1,0 +1,30 @@
+"""Roofline summary (§Roofline deliverable): reads the dry-run artifacts in
+results/ (produced by `python -m repro.launch.dryrun --all --out ...`) and
+prints the per-(arch x shape) three-term roofline table."""
+import glob
+import json
+import os
+
+
+def run(mode, out):
+    paths = sorted(glob.glob(os.path.join("results", "dryrun*.json")))
+    if not paths:
+        print("bench_roofline: no results/dryrun*.json found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod "
+              "--out results/dryrun_pod.json` first (skipping)")
+        return
+    rows = []
+    for p in paths:
+        rows.extend(json.load(open(p)))
+    print(f"{'case':44s} {'mesh':8s} {'comp_ms':>9s} {'mem_ms':>10s} "
+          f"{'coll_ms':>10s} {'bound':>10s} {'useful':>7s}")
+    for r in rows:
+        rl = r["roofline"]
+        name = f"{r['arch']}:{r['shape']}"
+        print(f"{name:44s} {r['mesh']:8s} {rl['t_compute_ms']:9.1f} "
+              f"{rl['t_memory_ms']:10.1f} {rl['t_collective_ms']:10.1f} "
+              f"{rl['bottleneck']:>10s} {rl['useful_flops_ratio']:7.3f}")
+        out.append(
+            f"roofline,{r['mesh']},{name},{rl['t_compute_ms']:.1f},"
+            f"{rl['t_memory_ms']:.1f},{rl['t_collective_ms']:.1f},"
+            f"{rl['bottleneck']},{rl['useful_flops_ratio']:.3f}")

@@ -1,0 +1,54 @@
+"""Shared benchmark scaffolding for the paper-table reproductions.
+
+Fast mode (default for `python -m benchmarks.run`) uses a reduced data scale
+and fewer rounds so the whole suite completes on one CPU core; --full uses
+scale 0.01 / 12 rounds / both scenarios per table (closer to the paper's
+resolution). Trends, not absolute third-decimal values, are the reproduction
+target (synthetic data; see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+from repro.core import FedS3AConfig, FedS3ATrainer
+from repro.data import make_dataset
+
+FAST = {"scale": 0.006, "rounds": 8, "scenarios": ("basic",)}
+FULL = {"scale": 0.01, "rounds": 12, "scenarios": ("basic", "balanced")}
+
+
+@functools.lru_cache(maxsize=8)
+def dataset(scenario, scale, server_frac=0.05, seed=0):
+    return make_dataset(scenario, scale=scale, server_frac=server_frac,
+                        seed=seed)
+
+
+def run_feds3a(scenario, *, scale, rounds, seed=0, server_frac=0.05,
+               **cfg_overrides):
+    data = dataset(scenario, scale, server_frac, seed)
+    cfg = FedS3AConfig(rounds=rounds, seed=seed, **cfg_overrides)
+    t0 = time.time()
+    tr = FedS3ATrainer(data, cfg)
+    res = tr.train()
+    res["wall_s"] = time.time() - t0
+    return res
+
+
+def fmt_row(name, res):
+    m = res["metrics"]
+    return (f"{name:36s} acc={m['accuracy']:.4f} prec={m['precision']:.4f} "
+            f"rec={m['recall']:.4f} f1={m['f1']:.4f} fpr={m['fpr']:.4f} "
+            f"art={res['art']:.1f} aco={res['aco']:.2f}")
+
+
+def csv_row(table, scenario, name, res):
+    m = res["metrics"]
+    return (f"{table},{scenario},{name},{m['accuracy']:.4f},{m['precision']:.4f},"
+            f"{m['recall']:.4f},{m['f1']:.4f},{m['fpr']:.4f},"
+            f"{res['art']:.1f},{res['aco']:.3f},{res['wall_s']:.0f}")
+
+
+CSV_HEADER = ("table,scenario,variant,accuracy,precision,recall,f1,fpr,"
+              "art_s,aco,wall_s")

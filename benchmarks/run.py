@@ -1,0 +1,65 @@
+"""Benchmark aggregator — one module per paper table (V-XII), plus kernel
+microbenchmarks and the roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast mode
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-resolution
+  PYTHONPATH=src python -m benchmarks.run --only T5,T12
+"""
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_kernels, bench_roofline, table05_staleness_fns,
+                        table06_round_weight_fns, table07_staleness_tolerance,
+                        table08_participation, table09_server_data,
+                        table10_group_agg, table11_dynamic_weight,
+                        table12_comparison)
+from benchmarks.common import CSV_HEADER, FAST, FULL
+
+TABLES = {
+    "T5": table05_staleness_fns,
+    "T6": table06_round_weight_fns,
+    "T7": table07_staleness_tolerance,
+    "T8": table08_participation,
+    "T9": table09_server_data,
+    "T10": table10_group_agg,
+    "T11": table11_dynamic_weight,
+    "T12": table12_comparison,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table ids (e.g. T5,T12,kernels)")
+    ap.add_argument("--csv", default="results/benchmarks.csv")
+    args = ap.parse_args()
+
+    mode = FULL if args.full else FAST
+    names = list(TABLES) if not args.only else args.only.split(",")
+
+    out = [CSV_HEADER]
+    t0 = time.time()
+    for name in names:
+        if name not in TABLES:
+            print(f"unknown table {name}", file=sys.stderr)
+            continue
+        print(f"===== {name} ({TABLES[name].__doc__.splitlines()[0]})")
+        t1 = time.time()
+        TABLES[name].run(mode, out)
+        print(f"----- {name} done in {time.time()-t1:.0f}s\n")
+
+    if args.csv:
+        import os
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        with open(args.csv, "w") as f:
+            f.write("\n".join(out) + "\n")
+        print(f"CSV -> {args.csv}")
+    print(f"total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Paper Table V: impact of the staleness function g(r - r_i)."""
+from benchmarks.common import csv_row, fmt_row, run_feds3a
+
+VARIANTS = ["constant", "polynomial", "hinge", "exponential"]
+
+
+def run(mode, out):
+    for scenario in mode["scenarios"]:
+        for fn in VARIANTS:
+            res = run_feds3a(scenario, scale=mode["scale"],
+                             rounds=mode["rounds"], staleness_function=fn)
+            print(fmt_row(f"[T5 {scenario}] {fn}", res))
+            out.append(csv_row("T5", scenario, fn, res))

@@ -1,0 +1,16 @@
+"""Paper Table VI: adaptive learning rate + round-weight function h(r)."""
+from benchmarks.common import csv_row, fmt_row, run_feds3a
+
+VARIANTS = ["non_adaptive", "constant", "logarithmic", "polynomial",
+            "exponential_smoothing", "exponential"]
+
+
+def run(mode, out):
+    for scenario in mode["scenarios"]:
+        for fn in VARIANTS:
+            kw = (dict(adaptive_lr=False) if fn == "non_adaptive"
+                  else dict(adaptive_lr=True, round_weight_function=fn))
+            res = run_feds3a(scenario, scale=mode["scale"],
+                             rounds=mode["rounds"], **kw)
+            print(fmt_row(f"[T6 {scenario}] {fn}", res))
+            out.append(csv_row("T6", scenario, fn, res))

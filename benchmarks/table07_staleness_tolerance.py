@@ -1,0 +1,11 @@
+"""Paper Table VII: impact of the staleness tolerance tau."""
+from benchmarks.common import csv_row, fmt_row, run_feds3a
+
+
+def run(mode, out):
+    for scenario in mode["scenarios"]:
+        for tau in (0, 1, 2, 3, 4):
+            res = run_feds3a(scenario, scale=mode["scale"],
+                             rounds=mode["rounds"], tau=tau)
+            print(fmt_row(f"[T7 {scenario}] tau={tau}", res))
+            out.append(csv_row("T7", scenario, f"tau={tau}", res))

@@ -1,0 +1,14 @@
+"""Paper Table VIII: participation proportion C (incl. ART round efficiency).
+
+C=0.1 is asynchronous FL (aggregate on first arrival), C=1 synchronous.
+"""
+from benchmarks.common import csv_row, fmt_row, run_feds3a
+
+
+def run(mode, out):
+    for scenario in mode["scenarios"]:
+        for C in (0.1, 0.4, 0.5, 0.6, 1.0):
+            res = run_feds3a(scenario, scale=mode["scale"],
+                             rounds=mode["rounds"], C=C)
+            print(fmt_row(f"[T8 {scenario}] C={C}", res))
+            out.append(csv_row("T8", scenario, f"C={C}", res))

@@ -1,0 +1,11 @@
+"""Paper Table IX: size of the server's labeled dataset (1..7% of train)."""
+from benchmarks.common import csv_row, fmt_row, run_feds3a
+
+
+def run(mode, out):
+    for scenario in mode["scenarios"]:
+        for frac in (0.01, 0.02, 0.04, 0.05, 0.07):
+            res = run_feds3a(scenario, scale=mode["scale"],
+                             rounds=mode["rounds"], server_frac=frac)
+            print(fmt_row(f"[T9 {scenario}] server={frac:.0%}", res))
+            out.append(csv_row("T9", scenario, f"server={frac:.0%}", res))

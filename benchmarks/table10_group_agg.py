@@ -1,0 +1,11 @@
+"""Paper Table X: group-based aggregation ablation (basic scenario only —
+in the balanced scenario grouping degenerates to random groups, §V-E1)."""
+from benchmarks.common import csv_row, fmt_row, run_feds3a
+
+
+def run(mode, out):
+    for gb, name in ((False, "non_group"), (True, "group_based")):
+        res = run_feds3a("basic", scale=mode["scale"], rounds=mode["rounds"],
+                         group_based=gb)
+        print(fmt_row(f"[T10 basic] {name}", res))
+        out.append(csv_row("T10", "basic", name, res))

@@ -1,0 +1,16 @@
+"""Paper Table XI: dynamic supervised-learning weight f(r) vs fixed 1/2 and
+fixed 1/(C*M+1)."""
+from benchmarks.common import csv_row, fmt_row, run_feds3a
+
+VARIANTS = [("fixed_alpha", "fixed-1/2"), ("adaptive", "adaptive"),
+            ("fixed_beta", "fixed-1/7")]
+
+
+def run(mode, out):
+    for scenario in mode["scenarios"]:
+        for key, name in VARIANTS:
+            res = run_feds3a(scenario, scale=mode["scale"],
+                             rounds=mode["rounds"],
+                             supervised_weight_mode=key)
+            print(fmt_row(f"[T11 {scenario}] {name}", res))
+            out.append(csv_row("T11", scenario, name, res))

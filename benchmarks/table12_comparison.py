@@ -1,0 +1,42 @@
+"""Paper Table XII: FedS3A vs FedAvg-SSL-Partial / FedAvg-SSL-All /
+FedAsync-SSL / Local-SSL (performance + ART + ACO)."""
+import time
+
+from benchmarks.common import csv_row, dataset, fmt_row, run_feds3a
+from repro.core import FedAvgSSL, FedAsyncSSL, FedS3AConfig, LocalSSL
+
+
+def _run_baseline(cls, scenario, bench_mode, **kw):
+    data = dataset(scenario, bench_mode["scale"], 0.05, 0)
+    cfg = FedS3AConfig(rounds=bench_mode["rounds"])
+    t0 = time.time()
+    algo = cls(data, cfg, **kw)
+    res = algo.train()
+    res["wall_s"] = time.time() - t0
+    return res
+
+
+def run(mode, out):
+    for scenario in mode["scenarios"]:
+        res = run_feds3a(scenario, scale=mode["scale"], rounds=mode["rounds"])
+        print(fmt_row(f"[T12 {scenario}] FedS3A", res))
+        out.append(csv_row("T12", scenario, "FedS3A", res))
+
+        for name, cls, kw in (
+            ("FedAvg-SSL-Partial", FedAvgSSL, dict(mode="partial")),
+            ("FedAvg-SSL-All", FedAvgSSL, dict(mode="all")),
+        ):
+            res = _run_baseline(cls, scenario, mode, **kw)
+            print(fmt_row(f"[T12 {scenario}] {name}", res))
+            out.append(csv_row("T12", scenario, name, res))
+
+        # FedAsync aggregates per-arrival: give it M x rounds arrivals for a
+        # comparable wall-clock horizon
+        amode = dict(mode, rounds=mode["rounds"] * 4)
+        res = _run_baseline(FedAsyncSSL, scenario, amode)
+        print(fmt_row(f"[T12 {scenario}] FedAsync-SSL", res))
+        out.append(csv_row("T12", scenario, "FedAsync-SSL", res))
+
+    res = _run_baseline(LocalSSL, "balanced", mode)
+    print(fmt_row("[T12 balanced] Local-SSL", res))
+    out.append(csv_row("T12", "balanced", "Local-SSL", res))

@@ -1,0 +1,125 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+v5e hardware constants (per chip): 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s
+per ICI link. The compiled module is post-SPMD, so FLOPs / bytes / collective
+payloads parsed from it are PER-DEVICE quantities; the roofline terms below
+are therefore directly "seconds per step on one chip", and the slowest term
+is the projected bottleneck.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output payload bytes of every collective op, by op kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # e.g.:  %all-reduce.5 = bf16[1024,512]{1,0} all-reduce(...)
+        m = re.match(r"%?[\w.\-]+ = (.*?) ([a-z\-]+)\(", line)
+        if not m:
+            continue
+        shape_str, opname = m.groups()
+        op = opname.rstrip("-start").rstrip("-done") if opname else opname
+        for kind in _COLLECTIVES:
+            if opname == kind or opname == kind + "-start":
+                out[kind] += _shape_bytes(shape_str)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class Roofline:
+    name: str
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    coll_bytes: float            # per device
+    coll_breakdown: dict = field(default_factory=dict)
+    model_flops: float = 0.0     # 6*N*D useful flops (global)
+    chips: int = 256
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self):
+        total = self.flops * self.chips
+        return (self.model_flops / total) if total else 0.0
+
+    def row(self):
+        return (f"{self.name:44s} {self.t_compute*1e3:10.2f} "
+                f"{self.t_memory*1e3:10.2f} {self.t_collective*1e3:10.2f} "
+                f"{self.bottleneck:10s} {self.useful_flops_ratio:8.3f}")
+
+
+def analyze(name, compiled, *, model_flops=0.0, chips=256) -> Roofline:
+    """Trip-count-aware HLO cost model (see hlo_cost.py) — XLA's own
+    cost_analysis() counts while bodies once and is useless for scanned
+    layers / microbatch accumulation."""
+    from repro.analysis.hlo_cost import analyze_text
+    r = analyze_text(compiled.as_text())
+    coll = dict(r["collectives"])
+    coll["total"] = r["collective_bytes"]
+    return Roofline(name=name, flops=r["flops"], hbm_bytes=r["hbm_bytes"],
+                    coll_bytes=r["collective_bytes"], coll_breakdown=coll,
+                    model_flops=model_flops, chips=chips)
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """6 * N_active * tokens (train counts fwd+bwd; decode counts one token)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # decode: one token per seq

@@ -1,0 +1,62 @@
+"""Minimal msgpack pytree checkpointing (params / optimizer / FL state).
+
+Layout: a single .msgpack file holding {"treedef": <repr>, "leaves": [...]}
+where each leaf is {"dtype", "shape", "data"(raw bytes)}. Works for any pytree
+of jnp/np arrays + python scalars; keeps the FedS3A server restartable
+mid-training (global params, optimizer state, participation matrix, round).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    if isinstance(x, (int, float, bool, str)) or x is None:
+        return {"py": x}
+    arr = np.asarray(x)
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(d):
+    if "py" in d:
+        return d["py"]
+    arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"]))
+    return arr.reshape(d["shape"]).copy()
+
+
+def save_checkpoint(path, tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto()
+        if hasattr(treedef, "serialize_using_proto") else None,
+        "leaves": [_pack_leaf(jax.device_get(l)) for l in leaves],
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path, like):
+    """Restore into the structure of ``like`` (treedef source of truth)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    if len(leaves) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected {len(leaves_like)}")
+    out = []
+    for got, want in zip(leaves, leaves_like):
+        if hasattr(want, "shape") and tuple(np.shape(got)) != tuple(want.shape):
+            raise ValueError(f"shape mismatch {np.shape(got)} vs {want.shape}")
+        if hasattr(want, "dtype") and hasattr(got, "astype"):
+            got = got.astype(want.dtype)
+        out.append(got)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,36 @@
+"""Architecture configs. Import `load_all()` to populate the registry."""
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    InputShape,
+    INPUT_SHAPES,
+    get_config,
+    list_configs,
+    register,
+)
+
+ARCH_MODULES = [
+    "whisper_medium",
+    "jamba_1_5_large_398b",
+    "deepseek_67b",
+    "deepseek_v2_236b",
+    "qwen2_1_5b",
+    "internlm2_20b",
+    "xlstm_125m",
+    "llama4_maverick_400b_a17b",
+    "granite_8b",
+    "pixtral_12b",
+    "feds3a_cnn",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True

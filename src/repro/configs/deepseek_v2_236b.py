@@ -1,0 +1,37 @@
+"""deepseek-v2-236b [moe] — MLA kv_lora=512, 2 shared + 160 routed top-6
+[arXiv:2405.04434].
+
+60 layers, d_model=5120, 128 heads, expert d_ff=1536, vocab=102400.
+Layer 0 is dense (d_ff=12288 in the real model; we keep expert-width shared MLP
+semantics via moe_layer_offset=1 ... period 1 with first layer dense).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v2-236b",
+    arch_type="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=12288,               # dense layers' FFN width (layer 0)
+    vocab_size=102400,
+    mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    moe=True,
+    num_experts=160,
+    experts_per_token=6,
+    num_shared_experts=2,
+    moe_d_ff=1536,
+    moe_layer_period=1,
+    moe_layer_offset=0,
+    first_k_dense=1,
+
+    window=8192,              # sliding-window decode carve-in for long_500k
+    opt_state_dtype="bfloat16",
+    source="arXiv:2405.04434",
+))

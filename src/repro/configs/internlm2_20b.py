@@ -1,0 +1,20 @@
+"""internlm2-20b [dense] — GQA [arXiv:2403.17297].
+
+48 layers, d_model=6144, 48 heads (GQA kv=8), d_ff=16384, vocab=92544.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internlm2-20b",
+    arch_type="dense",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92544,
+    head_dim=128,
+    window=8192,              # sliding-window decode carve-in for long_500k
+    rope_theta=1e6,
+    source="arXiv:2403.17297",
+))

@@ -1,0 +1,34 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887].
+
+72 layers, d_model=8192, 64 heads (GQA kv=8), d_ff=24576, vocab=65536.
+One attention layer per 8 (offset 4, as in Jamba blocks); MoE every other layer.
+398B total; optimizer states kept in bf16 (memory reality — see DESIGN.md §7).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b",
+    arch_type="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    head_dim=128,
+    ssm_type="mamba",
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    d_state=16,
+    conv_kernel=4,
+    mamba_expand=2,
+    moe=True,
+    num_experts=16,
+    experts_per_token=2,
+    moe_layer_period=2,
+    moe_layer_offset=1,
+    moe_d_ff=24576,
+    opt_state_dtype="bfloat16",
+    source="arXiv:2403.19887",
+))

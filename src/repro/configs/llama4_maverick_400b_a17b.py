@@ -1,0 +1,33 @@
+"""llama4-maverick-400b-a17b [moe] — MoE 128e top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E].
+
+48 layers, d_model=5120, 40 heads (GQA kv=8), expert d_ff=8192, vocab=202048.
+MoE every other layer (interleave step 2, as the Scout reference), 1 shared
+expert; dense layers use d_ff=16384. Early-fusion vision stub: `input_specs`
+can prepend patch embeddings.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    arch_type="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=202048,
+    head_dim=128,
+    moe=True,
+    num_experts=128,
+    experts_per_token=1,
+    num_shared_experts=1,
+    moe_d_ff=8192,
+    moe_layer_period=2,
+    moe_layer_offset=1,
+    num_vision_patches=576,    # early-fusion image tokens (stubbed projector)
+    window=8192,               # llama4 uses chunked/sliding local attention; also long_500k carve-in
+    rope_theta=5e5,
+    opt_state_dtype="bfloat16",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+))

@@ -1,0 +1,25 @@
+"""pixtral-12b [vlm] — pixtral-ViT + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409].
+
+40 layers, d_model=5120, 32 heads (GQA kv=8), head_dim=128 (attention inner dim
+4096 != d_model), d_ff=14336, vocab=131072. Vision encoder + projector are a
+stub: `input_specs()` provides (B, num_patches, d_model) patch embeddings that
+are prepended to the text sequence.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pixtral-12b",
+    arch_type="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=131072,
+    head_dim=128,
+    num_vision_patches=1024,
+    window=8192,              # sliding-window decode carve-in for long_500k
+    rope_theta=1e9,
+    source="hf:mistralai/Pixtral-12B-2409",
+))

@@ -1,0 +1,26 @@
+"""whisper-medium [audio] — enc-dec, conv frontend stubbed [arXiv:2212.04356].
+
+24 decoder layers (+24 encoder layers), d_model=1024, 16 heads (MHA, kv=16),
+d_ff=4096, vocab=51865. `input_specs()` supplies precomputed (B, 1500, d_model)
+mel/conv frame embeddings for the encoder.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    head_dim=64,
+    is_encoder_decoder=True,
+    encoder_layers=24,
+    num_encoder_positions=1500,
+    window=8192,              # sliding-window decode carve-in for long shapes
+    gated_mlp=False,          # whisper uses plain GELU MLP
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+))

@@ -1,0 +1,24 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks, xLSTM[7:1] [arXiv:2405.04517].
+
+12 layers, d_model=768, 4 heads, no FFN (d_ff=0; xLSTM blocks carry their own
+up/down projections), vocab=50304. One sLSTM block per 8 (offset 7), rest mLSTM.
+Sub-quadratic: runs long_500k natively with constant-size recurrent state.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-125m",
+    arch_type="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=192,
+    ssm_type="xlstm",
+    slstm_period=8,
+    slstm_offset=7,
+    tie_embeddings=True,
+    source="arXiv:2405.04517",
+))

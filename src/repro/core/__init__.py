@@ -1,0 +1,5 @@
+"""FedS3A — the paper's primary contribution: federated semi-supervised +
+semi-asynchronous learning (scheduler, aggregation, pseudo-labeling,
+staleness control, sparse-diff communication, baselines)."""
+from repro.core.feds3a import FedS3AConfig, FedS3ATrainer  # noqa: F401
+from repro.core.baselines import FedAvgSSL, FedAsyncSSL, LocalSSL  # noqa: F401

@@ -1,0 +1,101 @@
+"""FedS3A aggregation functions (§IV-D, Eq. 7-10).
+
+All variants take the participating clients' parameters, data sizes,
+stalenesses and the server's supervised parameters, and return the new global
+model. The group-based variant (Eq. 10) averages |D|-weighted + g(s)-decayed
+within each k-means group and arithmetically across groups; the flat variant
+(Eq. 9) skips grouping; Eq. 7/8 ablations are expressible via flags.
+
+The heavy weighted sum runs through the Pallas staleness_agg kernel when
+``use_kernel`` (one VMEM pass over the stacked client deltas).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_comm import flatten_tree, unflatten_like
+from repro.kernels import ops as kops
+
+
+def _weighted_sum_trees(trees, weights, *, use_kernel=False):
+    weights = jnp.asarray(weights, jnp.float32)
+    if use_kernel:
+        stack = jnp.stack([flatten_tree(t) for t in trees])
+        flat = kops.staleness_agg(stack, weights)
+        return unflatten_like(flat, trees[0])
+    out = jax.tree.map(lambda *ls: sum(w * l.astype(jnp.float32)
+                                       for w, l in zip(weights, ls)), *trees)
+    return jax.tree.map(lambda a, b: a.astype(b.dtype), out, trees[0])
+
+
+def aggregate(server_params, client_params, *, data_sizes, stalenesses,
+              g_fn, f_weight, groups=None, use_kernel=False):
+    """FedS3A global update.
+
+    server_params: supervised model omega_s^{r+1}
+    client_params: list of participating clients' models omega_i^{r_i+1}
+    data_sizes:    |D_i| per participant
+    stalenesses:   r - r_i per participant
+    g_fn:          staleness function
+    f_weight:      f(r), the dynamic supervised weight
+    groups:        optional group index per participant (Eq. 10); None -> Eq. 9
+    """
+    data_sizes = np.asarray(data_sizes, dtype=np.float64)
+    g = np.array([g_fn(s) for s in stalenesses], dtype=np.float64)
+
+    if groups is None:
+        w = data_sizes * g
+        w = w / max(data_sizes.sum(), 1e-12)
+        # Eq. 9: weights |D_i|/|D_c| * g(s_i) (not renormalized; g shrinks
+        # stale contributions relative to the fresh ones)
+        w = w / max(w.sum(), 1e-12)
+        unsup = _weighted_sum_trees(client_params, w, use_kernel=use_kernel)
+    else:
+        groups = np.asarray(groups)
+        uniq = np.unique(groups)
+        group_models = []
+        for gidx in uniq:
+            sel = np.where(groups == gidx)[0]
+            dg = data_sizes[sel]
+            wg = dg * g[sel]
+            wg = wg / max(wg.sum(), 1e-12)
+            group_models.append(_weighted_sum_trees(
+                [client_params[i] for i in sel], wg, use_kernel=use_kernel))
+        w = np.full(len(group_models), 1.0 / len(group_models))
+        unsup = _weighted_sum_trees(group_models, w, use_kernel=use_kernel)
+
+    return jax.tree.map(
+        lambda s, u: (f_weight * s.astype(jnp.float32) +
+                      (1.0 - f_weight) * u.astype(jnp.float32)).astype(s.dtype),
+        server_params, unsup)
+
+
+def fedavg(client_params, data_sizes):
+    """Eq. 3 (plain FedAvg over clients)."""
+    w = np.asarray(data_sizes, dtype=np.float64)
+    w = w / w.sum()
+    return _weighted_sum_trees(client_params, w)
+
+
+def fedavg_ssl(server_params, client_params, data_sizes, f_weight):
+    """Eq. 8: FedAvg + dynamic supervised weight (the adapted baseline)."""
+    unsup = fedavg(client_params, data_sizes)
+    return jax.tree.map(
+        lambda s, u: (f_weight * s.astype(jnp.float32) +
+                      (1.0 - f_weight) * u.astype(jnp.float32)).astype(s.dtype),
+        server_params, unsup)
+
+
+def fedasync_blend(global_params, client_params, *, staleness, alpha=0.9,
+                   a=0.5):
+    """FedAsync [Xie et al. 2019] mixing with polynomial staleness decay
+    (alpha=0.9, a=0.5 — the best-performing combination per the paper; the
+    proximal rho=0.005 term lives in the client loss, handled by L2 in the
+    baseline trainer)."""
+    alpha_t = min(alpha * (staleness + 1.0) ** (-a), 1.0)
+    return jax.tree.map(
+        lambda gp, cp: ((1 - alpha_t) * gp.astype(jnp.float32) +
+                        alpha_t * cp.astype(jnp.float32)).astype(gp.dtype),
+        global_params, client_params)

@@ -1,0 +1,187 @@
+"""Comparison algorithms (§V-F1), adapted to the disjoint FSSL scenario the
+same way the paper adapts them: the server's supervised model joins each
+global update with the dynamic supervised weight.
+
+* FedAvg-SSL-Partial — 6 pre-selected clients per round, synchronous
+* FedAvg-SSL-All     — all clients per round, synchronous
+* FedAsync-SSL       — aggregate on every single arrival (FedAsync mixing,
+                       polynomial staleness, forced sync past staleness 16)
+* Local-SSL          — centralized semi-supervised ceiling
+"""
+from __future__ import annotations
+
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.feds3a_cnn import CONFIG as CNN_CONFIG
+from repro.core import aggregation as agg
+from repro.core.feds3a import FedS3AConfig
+from repro.core.functions import supervised_weight
+from repro.core.metrics import weighted_metrics
+from repro.core.pseudo_label import (make_client_epoch, make_server_epoch,
+                                     predict_fn)
+from repro.core.scheduler import paper_latency
+from repro.models.cnn import init_cnn
+from repro.optimizer import adam_init
+
+
+class _Base:
+    def __init__(self, data, config: FedS3AConfig | None = None):
+        self.cfg = config or FedS3AConfig()
+        self.data = data
+        self.M = len(data["clients"])
+        self.cnn = CNN_CONFIG
+        self.rng = jax.random.PRNGKey(self.cfg.seed)
+        self.client_epoch = make_client_epoch(
+            self.cnn, batch_size=self.cfg.batch_size,
+            threshold=self.cfg.threshold, l1=self.cfg.l1)
+        self.server_epoch = make_server_epoch(
+            self.cnn, batch_size=self.cfg.batch_size, l1=self.cfg.l1)
+        self.predict = predict_fn(self.cnn)
+        sizes = [len(c["x"]) for c in data["clients"]]
+        ref_total = 453004
+        f = ref_total / max(sum(sizes), 1)
+        self.latencies = [paper_latency(int(s * f)) for s in sizes]
+        self.np_rng = np.random.default_rng(self.cfg.seed)
+
+        self.rng, k = jax.random.split(self.rng)
+        params = init_cnn(self.cnn, k)
+        opt = adam_init(params)
+        for _ in range(self.cfg.init_server_epochs):
+            self.rng, k = jax.random.split(self.rng)
+            params, opt, _ = self.server_epoch(
+                params, opt, data["server"]["x"], data["server"]["y"],
+                self.cfg.lr, k)
+        self.global_params = params
+        self.server_opt = opt
+        self.comm_bytes = 0
+        self.dense_bytes = 0
+
+    def _count_comm(self, n_msgs):
+        n = sum(l.size for l in jax.tree.leaves(self.global_params))
+        self.comm_bytes += n_msgs * n * 4
+        self.dense_bytes += n_msgs * n * 4
+
+    def _train_client(self, i, params, lr):
+        self.rng, k = jax.random.split(self.rng)
+        x = self.data["clients"][i]["x"]
+        opt = adam_init(params)
+        for _ in range(self.cfg.epochs):
+            params, opt, _ = self.client_epoch(params, opt, x, lr, k)
+        return params
+
+    def _server_step(self):
+        self.rng, k = jax.random.split(self.rng)
+        sp, self.server_opt, _ = self.server_epoch(
+            self.global_params, self.server_opt,
+            self.data["server"]["x"], self.data["server"]["y"], self.cfg.lr, k)
+        return sp
+
+    def evaluate(self):
+        test = self.data["test"]
+        preds = np.asarray(self.predict(self.global_params, jnp.asarray(test["x"])))
+        return weighted_metrics(test["y"], preds, self.cnn.num_classes)
+
+    @property
+    def aco(self):
+        return self.comm_bytes / self.dense_bytes if self.dense_bytes else 1.0
+
+
+class FedAvgSSL(_Base):
+    """Synchronous FedAvg adapted to FSSL. mode: 'partial' (6 clients) / 'all'."""
+
+    def __init__(self, data, config=None, *, mode="partial", per_round=6):
+        super().__init__(data, config)
+        self.mode = mode
+        self.per_round = per_round if mode == "partial" else self.M
+
+    def train(self, rounds=None):
+        rounds = rounds or self.cfg.rounds
+        arts = []
+        for r in range(rounds):
+            sel = (self.np_rng.choice(self.M, self.per_round, replace=False)
+                   if self.mode == "partial" else np.arange(self.M))
+            models, sizes = [], []
+            for i in sel:
+                models.append(self._train_client(i, self.global_params, self.cfg.lr))
+                sizes.append(len(self.data["clients"][i]["x"]))
+            sp = self._server_step()
+            fw = supervised_weight(r, C=self.per_round / self.M, M=self.M,
+                                   mode=self.cfg.supervised_weight_mode)
+            self.global_params = agg.fedavg_ssl(sp, models, sizes, fw)
+            self._count_comm(2 * len(sel))
+            arts.append(max(self.latencies[i] for i in sel))
+        return {"metrics": self.evaluate(), "art": float(np.mean(arts)),
+                "aco": self.aco, "rounds": rounds}
+
+
+class FedAsyncSSL(_Base):
+    """FedAsync [23] adapted to FSSL: update on every arrival."""
+
+    def __init__(self, data, config=None, *, alpha=0.9, a=0.5, max_stale=16):
+        super().__init__(data, config)
+        self.alpha = alpha
+        self.a = a
+        self.max_stale = max_stale
+
+    def train(self, rounds=None):
+        rounds = rounds or self.cfg.rounds
+        # event loop: every client trains continuously; each arrival = round
+        heap = []
+        version = {i: 0 for i in range(self.M)}
+        base = {i: self.global_params for i in range(self.M)}
+        t = 0.0
+        for i in range(self.M):
+            heapq.heappush(heap, (self.latencies[i], i))
+        times = []
+        g_version = 0
+        prev_t = 0.0
+        for r in range(rounds):
+            t, i = heapq.heappop(heap)
+            newp = self._train_client(i, base[i], self.cfg.lr)
+            s = g_version - version[i]
+            sp = self._server_step()
+            fw = supervised_weight(r, C=1 / self.M, M=self.M,
+                                   mode=self.cfg.supervised_weight_mode)
+            if s <= self.max_stale:
+                blended = agg.fedasync_blend(self.global_params, newp,
+                                             staleness=s, alpha=self.alpha,
+                                             a=self.a)
+                self.global_params = jax.tree.map(
+                    lambda spv, bv: (fw * spv.astype(jnp.float32) +
+                                     (1 - fw) * bv.astype(jnp.float32)
+                                     ).astype(spv.dtype), sp, blended)
+            g_version += 1
+            version[i] = g_version
+            base[i] = self.global_params
+            self._count_comm(2)
+            heapq.heappush(heap, (t + self.latencies[i], i))
+            times.append(t - prev_t)
+            prev_t = t
+        return {"metrics": self.evaluate(), "art": float(np.mean(times)),
+                "aco": self.aco, "rounds": rounds}
+
+
+class LocalSSL(_Base):
+    """Centralized semi-supervised ceiling: labeled server data + pooled
+    unlabeled client data, FixMatch-style pseudo-label training."""
+
+    def train(self, rounds=None):
+        rounds = rounds or self.cfg.rounds
+        x_all = np.concatenate([c["x"] for c in self.data["clients"]])
+        params, opt = self.global_params, adam_init(self.global_params)
+        uopt = adam_init(params)
+        for r in range(rounds):
+            self.rng, k1 = jax.random.split(self.rng)
+            params, opt, _ = self.server_epoch(
+                params, opt, self.data["server"]["x"],
+                self.data["server"]["y"], self.cfg.lr, k1)
+            self.rng, k2 = jax.random.split(self.rng)
+            params, uopt, _ = self.client_epoch(params, uopt, x_all,
+                                                self.cfg.lr, k2)
+        self.global_params = params
+        return {"metrics": self.evaluate(), "art": float("nan"),
+                "aco": float("nan"), "rounds": rounds}

@@ -1,0 +1,137 @@
+"""FedS3A on the production mesh: the paper's federated round as a single
+pjit-compiled step over ANY model-zoo architecture.
+
+Mapping (DESIGN.md §3): the M federated clients are the ``data`` mesh axis.
+One fl_train_step executes:
+
+  1. every client runs local SGD steps on its own shard of the batch
+     (vmap over the client axis — params broadcast, batch/client-state sharded),
+  2. client deltas are sparsified (paper §IV-F, top-k magnitude mask),
+  3. the staleness/size-weighted, participation-masked aggregation (Eq. 9/10)
+     happens as ONE weighted reduction over the client axis — XLA lowers it to
+     the reduce-scatter/all-reduce this paper's parameter-server would be,
+  4. the server's supervised delta joins with the dynamic weight f(r).
+
+Because participation/staleness arrive as DATA (mask + staleness vectors),
+the same compiled step serves every semi-async round — no recompilation as
+the arriving subset changes (TPU-friendly static shapes).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.training.steps import lm_loss
+
+
+def sgd_local_steps(cfg: ModelConfig, *, lr, num_steps=1, window=None,
+                    impl="flash", moe_impl="einsum"):
+    """Local training a client runs per round: ``num_steps`` SGD steps over
+    its microbatches. batch leaves: (num_steps, b, ...)."""
+
+    def local(params, batch):
+        def one(p, mb):
+            g = jax.grad(lambda pp: lm_loss(cfg, pp, mb, window=window,
+                                            impl=impl, moe_impl=moe_impl))(p)
+            p = jax.tree.map(
+                lambda x, gg: (x.astype(jnp.float32) -
+                               lr * gg.astype(jnp.float32)).astype(x.dtype),
+                p, g)
+            return p, None
+
+        params, _ = jax.lax.scan(one, params, batch)
+        return params
+
+    return local
+
+
+def _topk_mask(delta_flat_leaf, keep_frac):
+    """Per-leaf magnitude threshold approximating the (1-keep_frac) quantile.
+
+    NOT jnp.quantile: an exact quantile sorts the flattened leaf, and on
+    model-sharded deltas GSPMD implements that as a full all-gather per leaf
+    per client — 85 GB/round/device measured, i.e. the paper's own
+    sparsification step costing more wire than it saves (EXPERIMENTS §Perf C).
+    Instead the threshold comes from mean/std of |delta| (scalar reductions,
+    bytes-free): for ~gaussian deltas thr = mu + z(keep_frac) * sigma.
+    """
+    a = jnp.abs(delta_flat_leaf.astype(jnp.float32))
+    mu = jnp.mean(a)
+    sigma = jnp.std(a)
+    # z such that P(|x| > thr) ~ keep_frac for half-normal |x|
+    z = {0.5: 0.0, 0.25: 0.72, 0.2: 0.9, 0.1: 1.4}.get(round(keep_frac, 2), 0.9)
+    thr = mu + z * sigma
+    return jnp.where(a >= thr, delta_flat_leaf, 0)
+
+
+def make_fl_train_step(cfg: ModelConfig, *, num_clients, lr=1e-3,
+                       local_steps=1, keep_frac=0.0, window=None,
+                       impl="flash", moe_impl="einsum", f_weight=0.25,
+                       staleness_decay=1.359, reduce_dtype="bfloat16"):
+    """Returns fl_step(global_params, batch, mask, staleness, sizes)
+       -> (new_global_params, aggregate_weight_sum).
+
+    batch leaves: (M, local_steps, b, ...) — client-major, sharded over the
+    ``data`` axis. mask/staleness/sizes: (M,).
+    The server's supervised step is the M=0 slot by convention (its mask is
+    folded into f_weight outside for the paper-CNN runs; for the LM demo all
+    slots are clients).
+    """
+    local = sgd_local_steps(cfg, lr=lr, num_steps=local_steps, window=window,
+                            impl=impl, moe_impl=moe_impl)
+
+    def fl_step(global_params, batch, mask, staleness, sizes):
+        # 1. local training, batched over the client axis
+        new_params = jax.vmap(local, in_axes=(None, 0))(global_params, batch)
+
+        # 2. deltas (+ optional paper sparsification)
+        deltas = jax.tree.map(
+            lambda n, g: n - g[None].astype(n.dtype), new_params, global_params)
+        if keep_frac:
+            deltas = jax.tree.map(
+                jax.vmap(partial(_topk_mask, keep_frac=keep_frac)), deltas)
+
+        # 3. Eq. 9 weights: |D_i|/|D_c| * g(r - r_i) * participation
+        g_s = staleness_decay ** (-staleness.astype(jnp.float32))
+        w = mask.astype(jnp.float32) * sizes.astype(jnp.float32) * g_s
+        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+        # 4. ONE weighted reduction over the client axis (the FL collective).
+        # The reduction runs in ``reduce_dtype`` (bf16 default): the all-reduce
+        # payload is the partial-sum dtype, so this halves the FL wire bytes —
+        # the beyond-paper counterpart of the paper's sparse-diff idea
+        # (EXPERIMENTS.md §Perf case C).
+        rdt = jnp.dtype(reduce_dtype)
+
+        def reduce_leaf(d, g):
+            upd = jnp.einsum("m,m...->...", w.astype(rdt), d.astype(rdt))
+            return (g.astype(jnp.float32) +
+                    (1.0 - f_weight) * upd.astype(jnp.float32)).astype(g.dtype)
+
+        new_global = jax.tree.map(reduce_leaf, deltas, global_params)
+        return new_global, jnp.sum(w)
+
+    return fl_step
+
+
+def fl_input_specs(cfg: ModelConfig, *, num_clients, local_steps, batch_per_step,
+                   seq_len):
+    """ShapeDtypeStructs for the FL dry-run."""
+    M = num_clients
+    b = {"tokens": jax.ShapeDtypeStruct((M, local_steps, batch_per_step, seq_len),
+                                        jnp.int32)}
+    if cfg.num_vision_patches:
+        b["patches"] = jax.ShapeDtypeStruct(
+            (M, local_steps, batch_per_step, cfg.num_vision_patches, cfg.d_model),
+            jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        b["frames"] = jax.ShapeDtypeStruct(
+            (M, local_steps, batch_per_step, cfg.num_encoder_positions, cfg.d_model),
+            jnp.bfloat16)
+    mask = jax.ShapeDtypeStruct((M,), jnp.float32)
+    stal = jax.ShapeDtypeStruct((M,), jnp.float32)
+    sizes = jax.ShapeDtypeStruct((M,), jnp.float32)
+    return b, mask, stal, sizes

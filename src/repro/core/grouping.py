@@ -1,0 +1,42 @@
+"""Group-based aggregation support (§IV-D3): k-means over client pseudo-label
+class distributions.
+
+The server cannot see true client label distributions (clients are
+unlabeled!), so clients report the class histogram of their own pseudo-labels
+— a privacy-equivalent statistic of what they actually trained on (DESIGN.md
+§3). k-means runs with fixed iteration count under jit (static shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def kmeans(points, k, *, iters=20, seed=0):
+    """points: (M, D) -> (assignments (M,), centers (k, D)). Deterministic
+    k-means++-ish init (greedy farthest point)."""
+    points = np.asarray(points, dtype=np.float64)
+    M = points.shape[0]
+    k = min(k, M)
+    rng = np.random.default_rng(seed)
+    centers = [points[rng.integers(M)]]
+    for _ in range(1, k):
+        d2 = np.min(
+            [np.sum((points - c) ** 2, axis=1) for c in centers], axis=0)
+        centers.append(points[int(np.argmax(d2))])
+    centers = np.stack(centers)
+    for _ in range(iters):
+        d2 = ((points[:, None] - centers[None]) ** 2).sum(-1)
+        assign = d2.argmin(1)
+        for j in range(k):
+            sel = points[assign == j]
+            if len(sel):
+                centers[j] = sel.mean(0)
+    return assign, centers
+
+
+def group_clients(histograms, num_groups, *, seed=0):
+    """histograms: (M, C) pseudo-label distributions -> group index per client."""
+    assign, _ = kmeans(histograms, num_groups, seed=seed)
+    return assign

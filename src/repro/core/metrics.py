@@ -1,0 +1,38 @@
+"""Paper metrics (§V-C): class-weighted Accuracy / Precision / Recall / F1 /
+FPR, computed per class one-vs-rest and weighted by class support.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def weighted_metrics(y_true, y_pred, num_classes):
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    n = len(y_true)
+    support = np.bincount(y_true, minlength=num_classes).astype(np.float64)
+    w = support / max(n, 1)
+
+    prec = np.zeros(num_classes)
+    rec = np.zeros(num_classes)
+    f1 = np.zeros(num_classes)
+    fpr = np.zeros(num_classes)
+    acc_c = np.zeros(num_classes)
+    for c in range(num_classes):
+        tp = np.sum((y_pred == c) & (y_true == c))
+        fp = np.sum((y_pred == c) & (y_true != c))
+        fn = np.sum((y_pred != c) & (y_true == c))
+        tn = n - tp - fp - fn
+        prec[c] = tp / max(tp + fp, 1)
+        rec[c] = tp / max(tp + fn, 1)
+        f1[c] = 2 * tp / max(2 * tp + fn + fp, 1)
+        fpr[c] = fp / max(fp + tn, 1)
+        acc_c[c] = (tp + tn) / max(n, 1)
+
+    return {
+        "accuracy": float(np.mean(y_true == y_pred)),
+        "precision": float(np.sum(w * prec)),
+        "recall": float(np.sum(w * rec)),
+        "f1": float(np.sum(w * f1)),
+        "fpr": float(np.sum(w * fpr)),
+    }

@@ -1,0 +1,148 @@
+"""Client-side unsupervised training via pseudo-labeling (Eq. 5) and the
+server-side supervised step (Eq. 6), for the paper's CNN.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.cnn import cnn_forward
+from repro.optimizer import adam_init, adam_update
+
+
+def pseudo_label_loss(cfg, params, x, *, threshold=0.95, rng=None,
+                      use_kernel=True):
+    """Eq. 5: mean over samples of 1[max p >= theta] * CE(argmax, p)."""
+    logits = cnn_forward(cfg, params, x, train=rng is not None, rng=rng)
+    if use_kernel:
+        loss, mask = kops.masked_pseudo_ce(logits, threshold)
+    else:
+        from repro.kernels.ref import masked_pseudo_ce_ref
+        loss, mask = masked_pseudo_ce_ref(logits, threshold)
+    return jnp.sum(loss) / x.shape[0], jnp.sum(mask)
+
+
+def supervised_loss(cfg, params, x, y, *, rng=None):
+    """Eq. 6: plain cross entropy on the server's labeled data."""
+    logits = cnn_forward(cfg, params, x, train=rng is not None, rng=rng)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def make_client_epoch(cfg, *, batch_size=100, threshold=0.95, l1=0.0,
+                      use_kernel=False):
+    """One unsupervised epoch (E=1 per paper default) over a client's data.
+
+    Data is padded to a multiple of batch_size with a validity mask so one
+    jitted function serves every client size. lru_cache'd so every trainer
+    (each benchmark config) shares the compiled step.
+    """
+
+    @partial(jax.jit, static_argnames=("nb",))
+    def epoch(params, opt, x, valid, lr, rng, nb):
+        xb = x.reshape(nb, batch_size, -1)
+        vb = valid.reshape(nb, batch_size)
+
+        def step(carry, inp):
+            params, opt, rng = carry
+            xi, vi = inp
+            rng, dr = jax.random.split(rng)
+
+            def loss_fn(p):
+                logits = cnn_forward(cfg, p, xi, train=True, rng=dr)
+                if use_kernel:
+                    loss, _ = kops.masked_pseudo_ce(logits, threshold)
+                else:
+                    from repro.kernels.ref import masked_pseudo_ce_ref
+                    loss, _ = masked_pseudo_ce_ref(logits, threshold)
+                return jnp.sum(loss * vi) / jnp.maximum(jnp.sum(vi), 1.0)
+
+            l, g = jax.value_and_grad(loss_fn)(params)
+            params, opt = adam_update(g, opt, params, lr=lr, l1=l1)
+            return (params, opt, rng), l
+
+        (params, opt, _), losses = jax.lax.scan(step, (params, opt, rng), (xb, vb))
+        return params, opt, jnp.mean(losses)
+
+    def run(params, opt, x_np, lr, rng):
+        import numpy as np
+        n = len(x_np)
+        nb = max((n + batch_size - 1) // batch_size, 1)
+        pad = nb * batch_size - n
+        x = np.concatenate([x_np, np.zeros((pad, x_np.shape[1]), x_np.dtype)]) \
+            if pad else x_np
+        valid = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+        return epoch(params, opt, jnp.asarray(x), jnp.asarray(valid),
+                     jnp.float32(lr), rng, nb)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def make_server_epoch(cfg, *, batch_size=100, l1=0.0):
+    @partial(jax.jit, static_argnames=("nb",))
+    def epoch(params, opt, x, y, valid, lr, rng, nb):
+        xb = x.reshape(nb, batch_size, -1)
+        yb = y.reshape(nb, batch_size)
+        vb = valid.reshape(nb, batch_size)
+
+        def step(carry, inp):
+            params, opt, rng = carry
+            xi, yi, vi = inp
+            rng, dr = jax.random.split(rng)
+
+            def loss_fn(p):
+                logits = cnn_forward(cfg, p, xi, train=True, rng=dr)
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                ce = -jnp.take_along_axis(logp, yi[:, None], axis=-1)[:, 0]
+                return jnp.sum(ce * vi) / jnp.maximum(jnp.sum(vi), 1.0)
+
+            l, g = jax.value_and_grad(loss_fn)(params)
+            params, opt = adam_update(g, opt, params, lr=lr, l1=l1)
+            return (params, opt, rng), l
+
+        (params, opt, _), losses = jax.lax.scan(step, (params, opt, rng),
+                                                (xb, yb, vb))
+        return params, opt, jnp.mean(losses)
+
+    def run(params, opt, x_np, y_np, lr, rng):
+        import numpy as np
+        n = len(x_np)
+        nb = max((n + batch_size - 1) // batch_size, 1)
+        pad = nb * batch_size - n
+        if pad:
+            x = np.concatenate([x_np, np.zeros((pad, x_np.shape[1]), x_np.dtype)])
+            y = np.concatenate([y_np, np.zeros(pad, y_np.dtype)])
+        else:
+            x, y = x_np, y_np
+        valid = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+        return epoch(params, opt, jnp.asarray(x), jnp.asarray(y),
+                     jnp.asarray(valid), jnp.float32(lr), rng, nb)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def predict_fn(cfg):
+    @jax.jit
+    def predict(params, x):
+        return jnp.argmax(cnn_forward(cfg, params, x), axis=-1)
+    return predict
+
+
+@functools.lru_cache(maxsize=None)
+def class_histogram(cfg):
+    """Pseudo-label class distribution of a client (used for grouping —
+    the server never sees true client labels)."""
+    @jax.jit
+    def hist(params, x):
+        pred = jnp.argmax(cnn_forward(cfg, params, x), axis=-1)
+        return jnp.bincount(pred, length=cfg.num_classes) / x.shape[0]
+    return hist

@@ -1,0 +1,7 @@
+from repro.data.synthetic_cicids import (  # noqa: F401
+    CLASS_NAMES,
+    BASIC_SCENARIO,
+    BALANCED_SCENARIO,
+    make_dataset,
+    shannon_entropy,
+)

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    param_specs,
+    batch_specs,
+    cache_specs,
+    maybe_constraint,
+)

@@ -1,0 +1,55 @@
+"""Pallas kernel for the paper's pseudo-label loss (Eq. 5).
+
+Fuses softmax + confidence threshold + pseudo-label CE into a single VMEM
+pass over the logits: loss_i = -1[max p_i >= theta] * log(max_c p_ic).
+The unfused jnp version makes three HBM round-trips over (N, C) logits
+(softmax, max, gather); on large unlabeled client batches this layer is the
+training hot spot of the FedS3A client step.
+
+Grid: (N // blk,); block (blk, C_pad) in VMEM. C is padded to the 128-lane
+width by the wrapper (padded classes get -inf logits).
+
+Oracle: kernels/ref.py::masked_pseudo_ce_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pseudo_ce_kernel(logits_ref, loss_ref, mask_ref, *, threshold):
+    x = logits_ref[...].astype(jnp.float32)          # (blk, C_pad)
+    m = jnp.max(x, axis=1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[:, None]), axis=1))
+    max_logp = m - lse                               # log max softmax
+    mask = (max_logp >= jnp.log(threshold)).astype(jnp.float32)
+    loss_ref[...] = -mask * max_logp
+    mask_ref[...] = mask
+
+
+def masked_pseudo_ce_pallas(logits, threshold, *, blk=256, interpret=True):
+    """logits: (N, C). Returns (loss (N,), mask (N,))."""
+    N, C = logits.shape
+    C_pad = max(128, ((C + 127) // 128) * 128)
+    blk = min(blk, N)
+    if N % blk:
+        blk = N  # fall back to one block
+    if C_pad != C:
+        pad = jnp.full((N, C_pad - C), -1e30, logits.dtype)
+        logits = jnp.concatenate([logits, pad], axis=1)
+
+    kernel = functools.partial(_pseudo_ce_kernel, threshold=threshold)
+    loss, mask = pl.pallas_call(
+        kernel,
+        grid=(N // blk,),
+        in_specs=[pl.BlockSpec((blk, C_pad), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((blk,), lambda i: (i,)),
+                   pl.BlockSpec((blk,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.float32),
+                   jax.ShapeDtypeStruct((N,), jnp.float32)],
+        interpret=interpret,
+    )(logits)
+    return loss, mask

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they lower
+to Mosaic. ``masked_pseudo_ce`` carries a custom VJP so the FedS3A client loss
+is differentiable (backward is the standard (p - onehot) * mask softmax grad).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.masked_pseudo_ce import masked_pseudo_ce_pallas
+from repro.kernels.sparse_delta import sparse_delta_pallas
+from repro.kernels.staleness_agg import staleness_agg_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, window=None, causal=True):
+    """q: (B,S,Hq,hd); k/v: (B,S,Hkv,hd) — GQA KV broadcast handled here."""
+    G = q.shape[2] // k.shape[2]
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=_interpret())
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def masked_pseudo_ce(logits, threshold):
+    loss, mask = masked_pseudo_ce_pallas(logits, threshold,
+                                         interpret=_interpret())
+    return loss, mask
+
+
+def _mpce_fwd(logits, threshold):
+    loss, mask = masked_pseudo_ce(logits, threshold)
+    return (loss, mask), (logits, mask)
+
+
+def _mpce_bwd(threshold, res, g):
+    logits, mask = res
+    g_loss = g[0]
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                            dtype=jnp.float32)
+    d = (p - onehot) * (mask * g_loss)[:, None]
+    return (d.astype(logits.dtype),)
+
+
+masked_pseudo_ce.defvjp(_mpce_fwd, _mpce_bwd)
+
+
+def sparse_delta(x, threshold):
+    """Flattened delta -> (masked delta, per-512-block nnz)."""
+    n = x.shape[0]
+    pad = (-n) % 512
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    masked, nnz = sparse_delta_pallas(x, threshold, interpret=_interpret())
+    return masked[:n], nnz
+
+
+def staleness_agg(deltas, weights):
+    """(K, N) stacked deltas x (K,) weights -> (N,) fp32 weighted sum."""
+    k, n = deltas.shape
+    pad = (-n) % 512
+    if pad:
+        deltas = jnp.concatenate(
+            [deltas, jnp.zeros((k, pad), deltas.dtype)], axis=1)
+    return staleness_agg_pallas(deltas, weights, interpret=_interpret())[:n]

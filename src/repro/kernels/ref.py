@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,S,H,hd); k/v: (B,S,H,hd) (KV pre-broadcast to full heads)."""
+    B, S, H, hd = q.shape
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if causal:
+        qp = jnp.arange(S)
+        mask = qp[None, :] <= qp[:, None]
+        if window is not None:
+            mask &= qp[None, :] > (qp[:, None] - window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def masked_pseudo_ce_ref(logits, threshold):
+    """Paper Eq. 5: confidence-thresholded pseudo-label cross entropy.
+
+    logits: (N, C). Returns (per_sample_loss (N,), mask (N,)).
+    loss_i = 1[max softmax_i >= theta] * CE(argmax_i, softmax_i)
+           = -mask_i * log(max_i softmax_i)
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    max_logp = jnp.max(logp, axis=-1)
+    mask = (jnp.exp(max_logp) >= threshold).astype(jnp.float32)
+    return -mask * max_logp, mask
+
+
+def sparse_delta_ref(x, threshold):
+    """Paper §IV-F: magnitude-threshold sparsification of a parameter delta.
+
+    x: (N,) flattened delta. Returns (masked (N,), nnz_per_block (nblk,))
+    with block size 512 (matches the kernel tiling).
+    """
+    blk = 512
+    n = x.shape[0]
+    assert n % blk == 0
+    keep = jnp.abs(x) >= threshold
+    masked = jnp.where(keep, x, 0).astype(x.dtype)
+    nnz = keep.reshape(n // blk, blk).sum(axis=1).astype(jnp.int32)
+    return masked, nnz
+
+
+def staleness_agg_ref(deltas, weights):
+    """Paper Eq. 10 inner sum: staleness/size-weighted client aggregation.
+
+    deltas: (K, N) stacked client deltas; weights: (K,) already containing
+    |D_i|/|D_G| * g(r - r_i) * participation mask. Returns (N,) fp32.
+    """
+    return jnp.einsum("k,kn->n", weights.astype(jnp.float32),
+                      deltas.astype(jnp.float32))

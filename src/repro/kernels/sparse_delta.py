@@ -1,0 +1,46 @@
+"""Pallas kernel for the paper's sparse-difference transmission (§IV-F).
+
+Fuses |x| >= threshold masking with the per-block nonzero count in one VMEM
+pass over the flattened parameter delta. The count feeds the ACO metric
+(payload bytes / dense bytes) and the comm layer's compaction bookkeeping;
+unfused, XLA reads the delta twice (mask, then reduce).
+
+Grid: (N // 512,); block (1, 512) — 512 = 4 * 128 lanes.
+
+Oracle: kernels/ref.py::sparse_delta_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK = 512
+
+
+def _sparse_delta_kernel(x_ref, out_ref, nnz_ref, *, threshold):
+    x = x_ref[...]                                   # (1, BLK)
+    keep = jnp.abs(x.astype(jnp.float32)) >= threshold
+    out_ref[...] = jnp.where(keep, x, 0).astype(out_ref.dtype)
+    nnz_ref[...] = jnp.sum(keep.astype(jnp.int32), axis=1)
+
+
+def sparse_delta_pallas(x, threshold, *, interpret=True):
+    """x: (N,) with N % 512 == 0. Returns (masked (N,), nnz (N//512,) int32)."""
+    N = x.shape[0]
+    assert N % BLK == 0, N
+    nblk = N // BLK
+    kernel = functools.partial(_sparse_delta_kernel, threshold=threshold)
+    masked, nnz = pl.pallas_call(
+        kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, BLK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, BLK), lambda i: (i, 0)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((nblk, BLK), x.dtype),
+                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
+        interpret=interpret,
+    )(x.reshape(nblk, BLK))
+    return masked.reshape(N), nnz

@@ -1,0 +1,42 @@
+"""Pallas kernel for the FedS3A aggregation inner sum (Eq. 10).
+
+out = sum_k w_k * delta_k over K stacked client deltas, where w_k already
+folds |D_i|/|D_Gk| * g(r - r_i) * participation. Fusing the weighted
+reduction means ONE pass over the (K, N) stack instead of K separate
+scaled-add passes (the server aggregates every round; for a 1.5B-param model
+the stack is 10s of GB).
+
+Grid: (N // 512,); block (K, 512) in VMEM with the weight vector (K, 1).
+
+Oracle: kernels/ref.py::staleness_agg_ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK = 512
+
+
+def _staleness_agg_kernel(d_ref, w_ref, o_ref):
+    d = d_ref[...].astype(jnp.float32)               # (K, BLK)
+    w = w_ref[...].astype(jnp.float32)               # (K, 1)
+    o_ref[...] = jnp.sum(d * w, axis=0)
+
+
+def staleness_agg_pallas(deltas, weights, *, interpret=True):
+    """deltas: (K, N) with N % 512 == 0; weights: (K,). Returns (N,) fp32."""
+    K, N = deltas.shape
+    assert N % BLK == 0, N
+    nblk = N // BLK
+    out = pl.pallas_call(
+        _staleness_agg_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((K, BLK), lambda i: (0, i)),
+                  pl.BlockSpec((K, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((BLK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(deltas, weights.reshape(K, 1))
+    return out

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing jax.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production mesh: one pod = (data=16, model=16) = 256 chips;
+    multi-pod adds a leading pod axis: (pod=2, data=16, model=16) = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "run through repro.launch.dryrun which forces 512 host devices")
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    arr = np.array(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices tests forced."""
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    arr = np.array(devices).reshape(shape)
+    return jax.sharding.Mesh(arr, axes)

@@ -1,0 +1,129 @@
+"""Per-(architecture x input-shape) dry-run case construction.
+
+``build_case`` returns everything the dry-run / roofline harness needs:
+the step function, ShapeDtypeStruct arguments (no allocation!), and the
+in_shardings pytrees for the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, INPUT_SHAPES, ModelConfig
+from repro.distributed.sharding import (
+    batch_axes, batch_specs, cache_specs, mesh_axis_sizes, opt_specs,
+    param_specs)
+from repro.models import lm
+from repro.optimizer import adam_init
+from repro.training.steps import (
+    make_forward_step, make_serve_step, make_train_step)
+
+P = jax.sharding.PartitionSpec
+
+
+def _sds(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def has_full_attention(cfg: ModelConfig) -> bool:
+    """Any attention layer without a sliding window?"""
+    kinds = [cfg.block_kind(i) for i in range(cfg.num_layers)]
+    return ATTN in kinds and cfg.window is None
+
+
+def uses_window(cfg: ModelConfig, seq_len: int) -> bool:
+    return cfg.window is not None and seq_len > 32_768
+
+
+@dataclass
+class Case:
+    name: str
+    cfg: ModelConfig
+    step_fn: Any
+    args: tuple
+    in_shardings: tuple
+    kind: str
+    notes: str = ""
+
+
+def build_case(cfg: ModelConfig, shape_name: str, mesh, *,
+               fsdp: bool = True, moe_impl: str = "einsum",
+               attn_impl: str = "flash", seq_parallel: bool = False,
+               lr: float = 3e-4, capacity_factor: float = 1.25,
+               serve_profile: str = "fsdp") -> Case:
+    shape = INPUT_SHAPES[shape_name]
+    axis_sizes = mesh_axis_sizes(mesh)
+    ba = batch_axes(axis_sizes)
+    n_batch_shards = 1
+    for a in ba:
+        n_batch_shards *= axis_sizes[a]
+
+    # MoE token groups track the batch shards (GShard grouping)
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, moe_groups=n_batch_shards)
+
+    B = shape.global_batch
+    S = shape.seq_len
+    text_len = S - cfg.num_vision_patches if cfg.num_vision_patches else S
+
+    def mk_batch():
+        b = {"tokens": jax.ShapeDtypeStruct((B, text_len), jnp.int32)}
+        if cfg.num_vision_patches:
+            b["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_vision_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            b["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_encoder_positions, cfg.d_model), jnp.bfloat16)
+        return b
+
+    params_shape = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_specs(cfg, params_shape, axis_sizes, fsdp=fsdp)
+
+    if shape.kind == "train":
+        nm = max(B // n_batch_shards, 1)
+        step = make_train_step(cfg, lr=lr, num_microbatches=nm,
+                               impl=attn_impl, moe_impl=moe_impl,
+                               seq_parallel=seq_parallel)
+        opt_shape = jax.eval_shape(
+            lambda: adam_init(params_shape, dtype=jnp.dtype(cfg.opt_state_dtype)))
+        batch = mk_batch()
+        args = (params_shape, opt_shape, batch)
+        shardings = (pspecs, opt_specs(cfg, opt_shape, pspecs),
+                     batch_specs(cfg, batch, axis_sizes))
+        notes = f"microbatches={nm} fsdp={fsdp} seq_parallel={seq_parallel}"
+        return Case(f"{cfg.name}:{shape_name}", cfg, step, args, shardings,
+                    "train", notes)
+
+    # inference: serve in bf16 params
+    icfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    params_shape = jax.eval_shape(lambda: lm.init_params(icfg, jax.random.PRNGKey(0)))
+    pspecs = param_specs(icfg, params_shape, axis_sizes, fsdp=fsdp,
+                         profile=serve_profile)
+
+    if shape.kind == "prefill":
+        step = make_forward_step(icfg, impl=attn_impl, moe_impl=moe_impl,
+                                 seq_parallel=seq_parallel)
+        batch = mk_batch()
+        args = (params_shape, batch)
+        shardings = (pspecs, batch_specs(icfg, batch, axis_sizes))
+        return Case(f"{cfg.name}:{shape_name}", icfg, step, args, shardings,
+                    "prefill", f"fsdp={fsdp}")
+
+    # decode
+    ring = uses_window(icfg, S)
+    cache_len = icfg.window if ring else S
+    notes = f"ring_window={icfg.window}" if ring else f"full_cache={S}"
+    cache_shape = jax.eval_shape(lambda: lm.init_cache(icfg, B, cache_len))
+    cspecs = cache_specs(icfg, cache_shape, axis_sizes, batch_size=B)
+    step = make_serve_step(icfg, ring=ring, moe_impl=moe_impl)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_spec = P(ba) if B % max(n_batch_shards, 1) == 0 and B >= n_batch_shards else P()
+    args = (params_shape, cache_shape, token, index)
+    shardings = (pspecs, cspecs, tok_spec, P())
+    return Case(f"{cfg.name}:{shape_name}", icfg, step, args, shardings,
+                "decode", notes + f" fsdp={fsdp}")

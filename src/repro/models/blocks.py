@@ -1,0 +1,214 @@
+"""Residual blocks: init / forward / decode, dispatched on the layer signature
+``(kind, is_moe)`` from ``ModelConfig.layer_pattern()``.
+
+Block anatomy:
+  ATTN  : x + attn(ln1(x));  x + {mlp|moe}(ln2(x))   (mla when cfg.mla)
+  MAMBA : x + mamba(ln1(x)); x + {mlp|moe}(ln2(x))   (jamba-style)
+  MLSTM : x + mlstm(ln1(x))                           (FFN inside the block)
+  SLSTM : x + slstm(ln1(x))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.models import layers as L
+from repro.models import xlstm as X
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_block(cfg: ModelConfig, rng, sig, *, cross_attn=False):
+    kind, is_moe = sig
+    ks = jax.random.split(rng, 6)
+    p = {"ln1": L.init_rmsnorm(cfg, ks[0])}
+    if kind == ATTN:
+        p["attn"] = L.init_mla(cfg, ks[1]) if cfg.mla else L.init_attention(cfg, ks[1])
+    elif kind == MAMBA:
+        p["mamba"] = L.init_mamba(cfg, ks[1])
+    elif kind == MLSTM:
+        p["cell"] = X.init_mlstm(cfg, ks[1])
+        return p
+    elif kind == SLSTM:
+        p["cell"] = X.init_slstm(cfg, ks[1])
+        return p
+    if cross_attn:
+        p["ln_x"] = L.init_rmsnorm(cfg, ks[4])
+        p["xattn"] = L.init_attention(cfg, ks[5])
+    if is_moe:
+        p["ln2"] = L.init_rmsnorm(cfg, ks[2])
+        p["moe"] = L.init_moe(cfg, ks[3])
+    elif cfg.d_ff:
+        p["ln2"] = L.init_rmsnorm(cfg, ks[2])
+        p["mlp"] = L.init_mlp(cfg, ks[3])
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def apply_block(cfg: ModelConfig, params, sig, x, positions, *, enc_out=None,
+                window=None, impl="ref", moe_impl="einsum", collect_cache=False,
+                causal=True):
+    """Returns (x, aux_loss, cache_or_None).
+
+    ``collect_cache``: capture per-layer decode state during prefill.
+    """
+    kind, is_moe = sig
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+
+    h = L.rmsnorm(cfg, params["ln1"], x)
+    if kind == ATTN:
+        if cfg.mla:
+            a = L.mla_attention(cfg, params["attn"], h, positions, impl=impl)
+            if collect_cache:
+                ckv, krope = L.mla_kv_latents(cfg, params["attn"], h, positions)
+                cache = {"ckv": ckv, "krope": krope}
+        else:
+            a = L.attention(cfg, params["attn"], h, positions, window=window,
+                            impl=impl, causal=causal)
+            if collect_cache:
+                cache = _attn_kv(cfg, params["attn"], h, positions)
+        x = x + a
+    elif kind == MAMBA:
+        if collect_cache:
+            a, (conv, ssm) = L.mamba(cfg, params["mamba"], h, return_state=True)
+            cache = {"conv": conv, "ssm": ssm}
+        else:
+            a = L.mamba(cfg, params["mamba"], h)
+        x = x + a
+    elif kind == MLSTM:
+        uz = h @ params["cell"]["up"].astype(h.dtype)
+        u, z = jnp.split(uz, 2, axis=-1)
+        q, k, v, ir, fr = X._mlstm_qkvif(cfg, params["cell"], u)
+        hh, state = X.mlstm_cell_chunked(q, k, v, ir, fr)
+        hh = hh.reshape(x.shape[0], x.shape[1], -1).astype(h.dtype) * jax.nn.silu(z)
+        x = x + hh @ params["cell"]["down"].astype(h.dtype)
+        if collect_cache:
+            cache = {"C": state[0], "n": state[1], "m": state[2]}
+    elif kind == SLSTM:
+        if collect_cache:
+            out, st = X.slstm(cfg, params["cell"], h, return_state=True)
+            cache = {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+            x = x + out
+        else:
+            x = x + X.slstm(cfg, params["cell"], h)
+
+    if "xattn" in params and enc_out is not None:
+        h = L.rmsnorm(cfg, params["ln_x"], x)
+        x = x + L.attention(cfg, params["xattn"], h, positions,
+                            kv_override=enc_out, causal=False)
+
+    if is_moe:
+        h = L.rmsnorm(cfg, params["ln2"], x)
+        m, a_loss = L.moe(cfg, params["moe"], h, impl=moe_impl)
+        x = x + m
+        aux = aux + a_loss
+    elif "mlp" in params:
+        h = L.rmsnorm(cfg, params["ln2"], x)
+        x = x + L.mlp(cfg, params["mlp"], h)
+    return x, aux, cache
+
+
+def _attn_kv(cfg, attn_params, h, positions, *, rotate=True):
+    """Recompute K/V for cache capture during prefill. ``rotate=False`` for
+    cross-attention (rope-free, matching the kv_override forward path)."""
+    B, S, _ = h.shape
+    dt = h.dtype
+    hd = cfg.resolved_head_dim
+    k = (h @ attn_params["wk"].astype(dt))
+    v = (h @ attn_params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + attn_params["bk"].astype(dt)
+        v = v + attn_params["bv"].astype(dt)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if rotate:
+        k = L.apply_rope(cfg, k, positions)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# decode (single token)
+# ---------------------------------------------------------------------------
+def apply_block_decode(cfg: ModelConfig, params, sig, x, cache, index, *,
+                       ring=False, moe_impl="einsum"):
+    """x: (B, d). cache: this block's state pytree. Returns (x, new_cache)."""
+    kind, is_moe = sig
+
+    h = L.rmsnorm(cfg, params["ln1"], x[:, None, :])[:, 0]
+    if kind == ATTN:
+        if cfg.mla:
+            a, ckv, krope = L.mla_decode(cfg, params["attn"], h,
+                                         cache["ckv"], cache["krope"], index)
+            cache = dict(cache, ckv=ckv, krope=krope)
+        else:
+            a, k, v = L.attention_decode(cfg, params["attn"], h,
+                                         cache["k"], cache["v"], index, ring=ring)
+            cache = dict(cache, k=k, v=v)
+        x = x + a
+    elif kind == MAMBA:
+        a, conv, ssm = L.mamba_decode(cfg, params["mamba"], h,
+                                      cache["conv"], cache["ssm"])
+        cache = dict(cache, conv=conv, ssm=ssm)
+        x = x + a
+    elif kind == MLSTM:
+        a, state = X.mlstm_decode(cfg, params["cell"], h,
+                                  (cache["C"], cache["n"], cache["m"]))
+        cache = dict(cache, C=state[0], n=state[1], m=state[2])
+        x = x + a
+    elif kind == SLSTM:
+        a, state = X.slstm_decode(cfg, params["cell"], h,
+                                  (cache["c"], cache["n"], cache["m"], cache["h"]))
+        cache = dict(cache, c=state[0], n=state[1], m=state[2], h=state[3])
+        x = x + a
+
+    if "xattn" in params and "cross_k" in cache:
+        h = L.rmsnorm(cfg, params["ln_x"], x[:, None, :])[:, 0]
+        x = x + L.attention_cross_decode(cfg, params["xattn"], h,
+                                         cache["cross_k"], cache["cross_v"])
+
+    if is_moe:
+        h = L.rmsnorm(cfg, params["ln2"], x[:, None, :])
+        m, _ = L.moe(cfg, params["moe"], h, impl=moe_impl)
+        x = x + m[:, 0]
+    elif "mlp" in params:
+        h = L.rmsnorm(cfg, params["ln2"], x[:, None, :])[:, 0]
+        x = x + L.mlp(cfg, params["mlp"], h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# cache allocation
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg: ModelConfig, sig, batch, cache_len, *,
+                     cross_len=0, dtype=None):
+    """Zero decode-state for one block."""
+    kind, _ = sig
+    dt = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    c = {}
+    if kind == ATTN:
+        if cfg.mla:
+            c["ckv"] = jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dt)
+            c["krope"] = jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dt)
+        else:
+            c["k"] = jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dt)
+            c["v"] = jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dt)
+    elif kind == MAMBA:
+        di = cfg.mamba_expand * cfg.d_model
+        c["conv"] = jnp.zeros((batch, cfg.conv_kernel - 1, di), dt)
+        c["ssm"] = jnp.zeros((batch, di, cfg.d_state), jnp.float32)
+    elif kind == MLSTM:
+        C0, n0, m0 = X.init_mlstm_state(cfg, batch)
+        c = {"C": C0, "n": n0, "m": m0}
+    elif kind == SLSTM:
+        s = X.init_slstm_state(cfg, batch)
+        c = {"c": s[0], "n": s[1], "m": s[2], "h": s[3]}
+    if cross_len:
+        c["cross_k"] = jnp.zeros((batch, cross_len, cfg.num_kv_heads, hd), dt)
+        c["cross_v"] = jnp.zeros((batch, cross_len, cfg.num_kv_heads, hd), dt)
+    return c

@@ -1,0 +1,707 @@
+"""Core neural layers: norm, RoPE, GQA/MLA/sliding-window attention, MLP, MoE,
+Mamba selective scan (chunked), xLSTM (mLSTM chunked-parallel + sLSTM recurrent).
+
+Convention: every layer is a pair of pure functions
+  ``init_<layer>(cfg, rng) -> params``   (pytree of jnp arrays, param_dtype)
+  ``<layer>(cfg, params, x, ...) -> y``  (compute in cfg.dtype)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _dense_init(rng, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(cfg, rng, dim=None):
+    dim = dim or cfg.d_model
+    return {"scale": jnp.ones((dim,), pdtype(cfg))}
+
+
+def rmsnorm(cfg, params, x):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + cfg.norm_eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg, dim):
+    half = dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return inv  # (half,)
+
+
+def apply_rope(cfg, x, positions, dim=None):
+    """x: (..., S, H, hd) or (..., H, hd) with positions broadcastable to (..., S)."""
+    dim = dim or x.shape[-1]
+    inv = rope_freqs(cfg, dim)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    sin = sin[..., None, :]  # broadcast over head axis
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention, XLA-level (nested lax.scan over q/k blocks, online softmax).
+# Structural twin of kernels/flash_attention.py; keeps peak memory at
+# B*H*qblk*kblk instead of B*H*Sq*Sk. Default for long-sequence train/prefill.
+# ---------------------------------------------------------------------------
+# default flash tile sizes; the launcher/perf pass overrides via
+# set_flash_blocks (bigger tiles = higher arithmetic intensity per HBM byte,
+# bounded by VMEM)
+FLASH_BLOCKS = {"qblk": 512, "kblk": 512, "tile_bf16": False,
+                "constrain": True}
+
+
+def set_flash_blocks(qblk, kblk, tile_bf16=None, constrain=None):
+    FLASH_BLOCKS["qblk"] = qblk
+    FLASH_BLOCKS["kblk"] = kblk
+    if tile_bf16 is not None:
+        FLASH_BLOCKS["tile_bf16"] = tile_bf16
+    if constrain is not None:
+        # under vmap (FL client axis) the internal batch/head constraints
+        # fight the mapped-axis sharding and GSPMD inserts resharding
+        # all-to-alls; the FL launcher disables them
+        FLASH_BLOCKS["constrain"] = constrain
+
+
+def flash_attention_xla(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                        qblk=None, kblk=None):
+    """Remat wrapper: without it, scan autodiff stashes every (qblk x kblk)
+    probability tile as a stacked residual — O(S^2) memory, exactly what flash
+    attention exists to avoid. Backward recomputes the tiles instead (the
+    standard flash-backward trade)."""
+    f = partial(_flash_attention_xla_impl, causal=causal, window=window,
+                qblk=qblk or FLASH_BLOCKS["qblk"],
+                kblk=kblk or FLASH_BLOCKS["kblk"])
+    return jax.checkpoint(f)(q, k, v, q_pos, k_pos)
+
+
+def _flash_attention_xla_impl(q, k, v, q_pos, k_pos, *, causal=True,
+                              window=None, qblk=512, kblk=512):
+    """q: (B,Sq,Hq,hd); k/v: (B,Sk,Hkv,hd). positions: (B,Sq)/(B,Sk).
+
+    GQA KV heads are pre-broadcast to the full head count so the head dim
+    shards cleanly over the model axis; every loop-carried tensor carries an
+    explicit sharding constraint — otherwise GSPMD replicates the whole loop
+    body across the batch axis (measured 16x FLOP blowup on the dry-run).
+    """
+    from repro.distributed.sharding import maybe_constraint as _mc
+    maybe_constraint = _mc if FLASH_BLOCKS["constrain"] else (lambda x, s: x)
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    hdv = v.shape[-1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qblk = min(qblk, Sq)
+    kblk = min(kblk, Sk)
+    if Sq % qblk or Sk % kblk:
+        mask = _causal_mask(q_pos, k_pos, window) if causal else None
+        return _sdpa(q, k, v, mask, scale)
+    nq, nk = Sq // qblk, Sk // kblk
+    if G > 1:  # broadcast KV to all heads: clean head sharding on the mesh
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    ba = ("pod", "data")
+    blk_spec = (None, ba, "model", None, None)
+
+    qb = q.reshape(B, nq, qblk, Hq, hd).transpose(1, 0, 3, 2, 4)   # (nq,B,H,qblk,hd)
+    kb = k.reshape(B, nk, kblk, Hq, hd).transpose(1, 0, 3, 2, 4)   # (nk,B,H,kblk,hd)
+    vb = v.reshape(B, nk, kblk, Hq, hdv).transpose(1, 0, 3, 2, 4)
+    qb = maybe_constraint(qb, blk_spec)
+    kb = maybe_constraint(kb, blk_spec)
+    vb = maybe_constraint(vb, blk_spec)
+
+    # Positions are derived from the scan counters (qi*qblk + iota), NOT from
+    # precomputed position tensors: loop-invariant position blocks get hoisted
+    # by XLA into a materialized O(S^2) boolean mask (measured: dominated HBM
+    # traffic on the dry-run).
+    iq = jnp.arange(qblk, dtype=jnp.int32)
+    ik = jnp.arange(kblk, dtype=jnp.int32)
+
+    def q_block(_, xs_q):
+        qi, qidx = xs_q                              # (B,H,qblk,hd), scalar
+        qp = qidx * qblk + iq                        # (qblk,)
+        m0 = maybe_constraint(jnp.full((B, Hq, qblk), -1e30, jnp.float32),
+                              (ba, "model", None))
+        l0 = maybe_constraint(jnp.zeros((B, Hq, qblk), jnp.float32),
+                              (ba, "model", None))
+        a0 = maybe_constraint(jnp.zeros((B, Hq, qblk, hdv), jnp.float32),
+                              (ba, "model", None, None))
+
+        def k_block(carry, xs_k):
+            m, l, acc = carry
+            ki, vi, kidx = xs_k
+            kp = kidx * kblk + ik                    # (kblk,)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, ki).astype(jnp.float32) * scale
+            if causal:
+                ok = kp[None, :] <= qp[:, None]      # (qblk,kblk)
+                if window is not None:
+                    ok &= kp[None, :] > (qp[:, None] - window)
+                s = jnp.where(ok[None, None], s, -1e30)
+            if FLASH_BLOCKS["tile_bf16"]:
+                # tile traffic in bf16 (stats stay f32) — models the Pallas
+                # kernel's VMEM residency; halves the dominant HBM term
+                s = s.astype(jnp.bfloat16).astype(jnp.float32)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vi.dtype), vi).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = lax.scan(
+            k_block, (m0, l0, a0), (kb, vb, jnp.arange(nk, dtype=jnp.int32)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_block, None, (qb, jnp.arange(nq, dtype=jnp.int32)))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, Hq, hdv)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, rng):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 5)
+    p = {
+        "wq": _dense_init(ks[0], (d, nq * hd), pdtype(cfg)),
+        "wk": _dense_init(ks[1], (d, nkv * hd), pdtype(cfg)),
+        "wv": _dense_init(ks[2], (d, nkv * hd), pdtype(cfg)),
+        "wo": _dense_init(ks[3], (nq * hd, d), pdtype(cfg)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), pdtype(cfg))
+        p["bk"] = jnp.zeros((nkv * hd,), pdtype(cfg))
+        p["bv"] = jnp.zeros((nkv * hd,), pdtype(cfg))
+    return p
+
+
+def _causal_mask(q_pos, k_pos, window):
+    """(..., Sq, Sk) boolean mask. True = attend."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,Hq,hd), k/v: (B,Sk,Hkv,hd_v) with Hq = G*Hkv (hd_v may differ)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    hd_v = v.shape[3]
+    G = Hq // Hkv
+    q = q.reshape(B, Sq, Hkv, G, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, Hq, hd_v)
+
+
+def attention(cfg: ModelConfig, params, x, positions, *, window=None,
+              kv_override=None, causal=True, impl="ref"):
+    """Full (or sliding-window) self-attention; cross-attention when
+    ``kv_override`` supplies (k_inp, v_inp) source activations."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dt = cdtype(cfg)
+
+    q = (x @ params["wq"].astype(dt))
+    src = x if kv_override is None else kv_override
+    k = (src @ params["wk"].astype(dt))
+    v = (src @ params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, nq, hd)
+    k = k.reshape(B, src.shape[1], nkv, hd)
+    v = v.reshape(B, src.shape[1], nkv, hd)
+
+    if kv_override is None:  # self-attention: rotate
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+        mask = None
+        if causal:
+            kpos = positions
+            mask = _causal_mask(positions, kpos, window)
+    else:
+        mask = None  # cross-attention: full visibility
+
+    if impl == "pallas" and kv_override is None and causal:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, window=window)
+    elif impl == "flash" and kv_override is None and causal:
+        out = flash_attention_xla(q, k, v, positions, positions, window=window)
+    else:
+        out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(hd))
+    return out.reshape(B, S, nq * hd) @ params["wo"].astype(dt)
+
+
+def attention_decode(cfg: ModelConfig, params, x, cache_k, cache_v, index, *,
+                     ring=False):
+    """One-token decode. x: (B, d). cache_k/v: (B, S, Hkv, hd).
+
+    ``ring``: cache is a ring buffer (sliding window); index wraps.
+    Returns (out (B, d), new_k, new_v).
+    """
+    B, d = x.shape
+    S = cache_k.shape[1]
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dt = cdtype(cfg)
+
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, 1, nq, hd)
+    k = k.reshape(B, 1, nkv, hd)
+    v = v.reshape(B, 1, nkv, hd)
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    q = apply_rope(cfg, q, pos)
+    k = apply_rope(cfg, k, pos)
+
+    slot = jnp.mod(index, S) if ring else index
+    cache_k = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    if ring:
+        valid = (kpos <= slot) | (index >= S)          # ring fully valid once wrapped
+    else:
+        valid = kpos <= index
+    mask = jnp.broadcast_to(valid, (B, 1, S))
+
+    out = _sdpa(q, cache_k.astype(dt), cache_v.astype(dt), mask, 1.0 / math.sqrt(hd))
+    out = out.reshape(B, nq * hd) @ params["wo"].astype(dt)
+    return out, cache_k, cache_v
+
+
+def attention_cross_decode(cfg: ModelConfig, params, x, cross_k, cross_v):
+    """Decode-time cross-attention against precomputed encoder KV."""
+    B, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq = cfg.num_heads
+    dt = cdtype(cfg)
+    q = (x @ params["wq"].astype(dt)).reshape(B, 1, nq, hd)
+    out = _sdpa(q, cross_k.astype(dt), cross_v.astype(dt), None, 1.0 / math.sqrt(hd))
+    return out.reshape(B, nq * hd) @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank KV with decode in compressed latent space
+# ---------------------------------------------------------------------------
+def init_mla(cfg: ModelConfig, rng):
+    d = cfg.d_model
+    H = cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(rng, 7)
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = _dense_init(ks[0], (d, cfg.q_lora_rank), pdtype(cfg))
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), pdtype(cfg))
+        p["wq_b"] = _dense_init(ks[1], (cfg.q_lora_rank, H * qd), pdtype(cfg))
+    else:
+        p["wq"] = _dense_init(ks[0], (d, H * qd), pdtype(cfg))
+    p["wkv_a"] = _dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), pdtype(cfg))
+    p["kv_norm"] = jnp.ones((cfg.kv_lora_rank,), pdtype(cfg))
+    # up-projections from latent: separate K-nope and V parts
+    p["wk_b"] = _dense_init(ks[3], (cfg.kv_lora_rank, H * cfg.qk_nope_dim), pdtype(cfg))
+    p["wv_b"] = _dense_init(ks[4], (cfg.kv_lora_rank, H * cfg.v_head_dim), pdtype(cfg))
+    p["wo"] = _dense_init(ks[5], (H * cfg.v_head_dim, d), pdtype(cfg))
+    return p
+
+
+def _mla_q(cfg, params, x, dt):
+    H = cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        ql = x @ params["wq_a"].astype(dt)
+        ql = rmsnorm(cfg, {"scale": params["q_norm"]}, ql)
+        q = ql @ params["wq_b"].astype(dt)
+    else:
+        q = x @ params["wq"].astype(dt)
+    return q.reshape(*x.shape[:-1], H, qd)
+
+
+def mla_kv_latents(cfg: ModelConfig, params, x, positions):
+    """(c_kv (B,S,rank), k_rope (B,S,rope)) — what MLA decode caches."""
+    dt = cdtype(cfg)
+    kv = x @ params["wkv_a"].astype(dt)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(cfg, {"scale": params["kv_norm"]}, c_kv)
+    k_rope = apply_rope(cfg, k_rope[:, :, None, :], positions)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(cfg: ModelConfig, params, x, positions, *, impl="ref"):
+    """Training/prefill MLA (expanded form)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dt = cdtype(cfg)
+    q = _mla_q(cfg, params, x, dt)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(cfg, q_rope, positions)
+
+    kv = x @ params["wkv_a"].astype(dt)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(cfg, {"scale": params["kv_norm"]}, c_kv)
+    k_rope = apply_rope(cfg, k_rope[:, :, None, :], positions)  # (B,S,1,rope)
+
+    k_nope = (c_kv @ params["wk_b"].astype(dt)).reshape(B, S, H, cfg.qk_nope_dim)
+    v = (c_kv @ params["wv_b"].astype(dt)).reshape(B, S, H, cfg.v_head_dim)
+
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # NOTE: scale uses full qk dim; flash path rescales q so its internal
+    # 1/sqrt(hd) matches.
+    full_scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    if impl in ("flash", "pallas"):
+        qd = q.shape[-1]
+        q_scaled = q * (full_scale * math.sqrt(qd))
+        out = flash_attention_xla(q_scaled, k, v, positions, positions)
+    else:
+        mask = _causal_mask(positions, positions, None)
+        out = _sdpa(q, k, v, mask, full_scale)
+    out = out.reshape(B, S, H * cfg.v_head_dim)
+    return out @ params["wo"].astype(dt)
+
+
+def mla_decode(cfg: ModelConfig, params, x, cache_ckv, cache_krope, index):
+    """Absorbed-weight MLA decode: attention runs in the kv_lora latent space.
+
+    cache_ckv: (B, S, kv_lora), cache_krope: (B, S, rope_dim).
+    This is the MLA memory win: cache is (kv_lora + rope) per token instead of
+    2 * H * head_dim.
+    """
+    B, d = x.shape
+    H = cfg.num_heads
+    dt = cdtype(cfg)
+    S = cache_ckv.shape[1]
+
+    q = _mla_q(cfg, params, x[:, None, :], dt)[:, 0]  # (B,H,qd)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    pos = jnp.full((B,), index, dtype=jnp.int32)
+    q_rope = apply_rope(cfg, q_rope[:, None, :, :], pos[:, None])[:, 0]
+
+    kv = x @ params["wkv_a"].astype(dt)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(cfg, {"scale": params["kv_norm"]}, c_kv)
+    k_rope = apply_rope(cfg, k_rope[:, None, None, :], pos[:, None])[:, 0, 0]
+
+    cache_ckv = lax.dynamic_update_slice(cache_ckv, c_kv[:, None].astype(cache_ckv.dtype), (0, index, 0))
+    cache_krope = lax.dynamic_update_slice(cache_krope, k_rope[:, None].astype(cache_krope.dtype), (0, index, 0))
+
+    # absorb wk_b into q: q_lat (B,H,kv_lora)
+    wk_b = params["wk_b"].astype(dt).reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope, wk_b)
+
+    # decode softmax stays in the compute dtype with f32-ACCUMULATED
+    # reductions: the (B, H, S) score tensor is the decode memory bottleneck
+    # (8.4 GB/layer/device at 32k cache, batch 128 — EXPERIMENTS §Perf B it3);
+    # an f32 copy doubles it, while dtype-accumulated reduces fuse the convert.
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat, cache_ckv.astype(dt))
+              + jnp.einsum("bhr,bsr->bhs", q_rope, cache_krope.astype(dt)))
+    logits = logits * jnp.asarray(scale, dt)
+    valid = jnp.arange(S) <= index
+    logits = jnp.where(valid[None, None, :], logits, jnp.asarray(-3e4, dt))
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+    w = (p / l.astype(dt))
+
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", w, cache_ckv.astype(dt))   # (B,H,kv_lora)
+    wv_b = params["wv_b"].astype(dt).reshape(cfg.kv_lora_rank, H, cfg.v_head_dim)
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, wv_b).reshape(B, H * cfg.v_head_dim)
+    return ctx @ params["wo"].astype(dt), cache_ckv, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, rng, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_up": _dense_init(ks[0], (d, ff), pdtype(cfg)),
+        "w_down": _dense_init(ks[1], (ff, d), pdtype(cfg)),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = _dense_init(ks[2], (d, ff), pdtype(cfg))
+    return p
+
+
+def mlp(cfg: ModelConfig, params, x):
+    dt = cdtype(cfg)
+    up = x @ params["w_up"].astype(dt)
+    if cfg.gated_mlp:
+        up = jax.nn.silu(x @ params["w_gate"].astype(dt)) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity-based einsum dispatch; sort-based variant in
+# repro.models.moe_sort used by the perf pass)
+# ---------------------------------------------------------------------------
+def init_moe(cfg: ModelConfig, rng):
+    d = cfg.d_model
+    ff = cfg.resolved_moe_d_ff
+    E = cfg.num_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, E), pdtype(cfg), scale=0.02),
+        "w_gate": _dense_init(ks[1], (E, d, ff), pdtype(cfg)),
+        "w_up": _dense_init(ks[2], (E, d, ff), pdtype(cfg)),
+        "w_down": _dense_init(ks[3], (E, ff, d), pdtype(cfg)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=ff * cfg.num_shared_experts)
+    return p
+
+
+def moe_router(cfg: ModelConfig, params, x):
+    """Returns (combine (T,E) float weights, aux_loss scalar). x: (T, d)."""
+    logits = (x @ params["router"].astype(cdtype(cfg))).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = lax.top_k(probs, cfg.experts_per_token)
+    vals = vals / jnp.sum(vals, axis=-1, keepdims=True)
+    combine = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None], idx
+    ].set(vals)
+    # load-balance aux loss (Switch): E * sum_e (frac_tokens_e * mean_prob_e)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean((combine > 0).astype(jnp.float32), axis=0)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return combine, aux
+
+
+def _expert_ffn(cfg, params, ex_in):
+    """ex_in: (G, E, cap, d) -> (G, E, cap, d), expert-parallel on the mesh.
+
+    Sharding constraints force the GShard all-to-all: dispatch buffers arrive
+    group-sharded (data axis), compute happens expert-sharded (model axis).
+    """
+    from repro.distributed.sharding import maybe_constraint
+    dt = ex_in.dtype
+    ex_in = maybe_constraint(ex_in, (None, "model", None, None))
+    h = jnp.einsum("gecd,edf->gecf", ex_in, params["w_up"].astype(dt))
+    g = jnp.einsum("gecd,edf->gecf", ex_in, params["w_gate"].astype(dt))
+    ex_out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * h,
+                        params["w_down"].astype(dt))
+    return maybe_constraint(ex_out, ("data", None, None, None))
+
+
+def moe(cfg: ModelConfig, params, x, *, capacity_factor=None, impl="einsum"):
+    """x: (B, S, d) -> (B, S, d), aux_loss.
+
+    GShard-style group-wise dispatch: tokens are split into ``cfg.moe_groups``
+    groups (aligned with the data mesh axis); capacity is per group, so the
+    dispatch tensors stay linear in the per-group token count.
+    """
+    B, S, d = x.shape
+    dt = cdtype(cfg)
+    T = B * S
+    E = cfg.num_experts
+    G = min(cfg.moe_groups, T)
+    if T % G:
+        G = 1
+    Tg = T // G
+    xt = x.reshape(T, d)
+
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    combine, aux = moe_router(cfg, params, xt)                  # (T,E) fp32
+    xg = xt.reshape(G, Tg, d)
+    cg = combine.reshape(G, Tg, E).astype(dt)
+    cap = max(int(Tg * cfg.experts_per_token / E * capacity_factor), 4)
+
+    if impl == "sort":
+        out = _moe_sort_grouped(cfg, params, xg, cg, cap).reshape(T, d)
+    else:
+        # position of each token within its expert queue, per group
+        sel = (cg > 0)
+        pos = jnp.cumsum(sel.astype(jnp.int32), axis=1) - 1     # (G,Tg,E)
+        keep = sel & (pos < cap)
+        disp = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=dt)
+        disp = disp * keep[..., None].astype(dt)                # (G,Tg,E,cap)
+        ex_in = jnp.einsum("gtec,gtd->gecd", disp, xg)
+        ex_out = _expert_ffn(cfg, params, ex_in)
+        w = disp * cg[..., None]
+        out = jnp.einsum("gtec,gecd->gtd", w, ex_out).reshape(T, d)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(cfg, params["shared"], xt)
+    return out.reshape(B, S, d), aux
+
+
+def _moe_sort_grouped(cfg, params, xg, cg, cap):
+    from repro.models.moe_sort import moe_sort_dispatch_group, moe_sort_combine
+    ex_in, info = jax.vmap(
+        lambda xs, cs: moe_sort_dispatch_group(cfg, xs, cs, cap)
+    )(xg, cg)
+    ex_out = _expert_ffn(cfg, params, ex_in)
+    return jax.vmap(
+        lambda eo, xs, inf: moe_sort_combine(cfg, eo, xs.shape[0], inf)
+    )(ex_out, xg, info)
+
+
+# ---------------------------------------------------------------------------
+# Mamba block (selective scan, chunked for TPU memory hierarchy)
+# ---------------------------------------------------------------------------
+def init_mamba(cfg: ModelConfig, rng):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds = cfg.d_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), pdtype(cfg)),
+        "conv_w": _dense_init(ks[1], (cfg.conv_kernel, di), pdtype(cfg), scale=0.5),
+        "conv_b": jnp.zeros((di,), pdtype(cfg)),
+        "x_proj": _dense_init(ks[2], (di, dt_rank + 2 * ds), pdtype(cfg)),
+        "dt_proj": _dense_init(ks[3], (dt_rank, di), pdtype(cfg)),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1), pdtype(cfg)),  # softplus^-1(1)~
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(pdtype(cfg)),
+        "D": jnp.ones((di,), pdtype(cfg)),
+        "out_proj": _dense_init(ks[4], (di, d), pdtype(cfg)),
+    }
+
+
+def _mamba_gates(cfg, params, u, dt_):
+    """u: (..., di). Returns dt (softplus), B_, C_ from x_proj."""
+    dt_rank = max(cfg.d_model // 16, 1)
+    ds = cfg.d_state
+    proj = u @ params["x_proj"].astype(dt_)
+    dtr, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dtr @ params["dt_proj"].astype(dt_) + params["dt_bias"].astype(dt_))
+    return dt, B_, C_
+
+
+def mamba(cfg: ModelConfig, params, x, *, chunk=256, return_state=False):
+    """Training/prefill selective scan. x: (B,S,d)."""
+    B, S, d = x.shape
+    dt_ = cdtype(cfg)
+    di = cfg.mamba_expand * d
+    ds = cfg.d_state
+    K = cfg.conv_kernel
+
+    xz = x @ params["in_proj"].astype(dt_)
+    u, z = jnp.split(xz, 2, axis=-1)                   # (B,S,di)
+
+    # depthwise causal conv along S
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    conv_w = params["conv_w"].astype(dt_)              # (K, di)
+    u = sum(pad[:, i:i + S, :] * conv_w[i] for i in range(K)) + params["conv_b"].astype(dt_)
+    u = jax.nn.silu(u)
+
+    dt, B_, C_ = _mamba_gates(cfg, params, u, dt_)     # dt:(B,S,di) B_,C_:(B,S,ds)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di,ds)
+
+    # chunked linear recurrence h_t = a_t * h_{t-1} + b_t
+    nchunks = max(S // chunk, 1)
+    Lc = S // nchunks if S % nchunks == 0 else S       # fall back to one chunk
+    if S % max(nchunks, 1) != 0:
+        nchunks, Lc = 1, S
+
+    def chunk_body(h0, inp):
+        dt_c, B_c, C_c, u_c = inp                      # (Lc, B, ...)
+        a = jnp.exp(dt_c.astype(jnp.float32)[..., None] * A)          # (Lc,B,di,ds)
+        b = (dt_c.astype(jnp.float32) * u_c.astype(jnp.float32))[..., None] * B_c.astype(jnp.float32)[..., None, :]
+        # include carry as first element: h_t = (prod a) h0 + scan(b)
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_s, b_s = lax.associative_scan(comb, (a, b), axis=0)
+        h = a_s * h0[None] + b_s                       # (Lc,B,di,ds)
+        y = jnp.einsum("lbds,lbs->lbd", h, C_c.astype(jnp.float32))
+        return h[-1], y
+
+    from repro.distributed.sharding import maybe_constraint
+    perm = lambda t: t.reshape(B, nchunks, Lc, *t.shape[2:]).transpose(1, 2, 0, *range(3, t.ndim + 1))
+    dt_ch, B_ch, C_ch, u_ch = (perm(t) for t in (dt, B_, C_, u))      # (nc,Lc,B,...)
+    h0 = maybe_constraint(jnp.zeros((B, di, ds), jnp.float32),
+                          (("pod", "data"), "model", None))
+    dt_ch = maybe_constraint(dt_ch, (None, None, ("pod", "data"), "model"))
+    u_ch = maybe_constraint(u_ch, (None, None, ("pod", "data"), "model"))
+    h_final, ys = lax.scan(chunk_body, h0, (dt_ch, B_ch, C_ch, u_ch))
+    y = ys.transpose(2, 0, 1, 3).reshape(B, S, di).astype(dt_)
+
+    y = y + u * params["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    if return_state:
+        # conv state: last K-1 pre-conv inputs (pre-activation u from in_proj)
+        u_pre = jnp.split(x @ params["in_proj"].astype(dt_), 2, axis=-1)[0]
+        conv_state = u_pre[:, S - (K - 1):, :]
+        return out, (conv_state, h_final)
+    return out
+
+
+def mamba_decode(cfg: ModelConfig, params, x, conv_state, ssm_state):
+    """One-token decode. x: (B,d); conv_state: (B,K-1,di); ssm_state: (B,di,ds)."""
+    dt_ = cdtype(cfg)
+    K = cfg.conv_kernel
+
+    xz = x @ params["in_proj"].astype(dt_)
+    u, z = jnp.split(xz, 2, axis=-1)                   # (B,di)
+
+    window = jnp.concatenate([conv_state.astype(dt_), u[:, None, :]], axis=1)  # (B,K,di)
+    conv_w = params["conv_w"].astype(dt_)
+    u_c = jnp.einsum("bkd,kd->bd", window, conv_w) + params["conv_b"].astype(dt_)
+    u_c = jax.nn.silu(u_c)
+    new_conv_state = window[:, 1:, :].astype(conv_state.dtype)
+
+    dt, B_, C_ = _mamba_gates(cfg, params, u_c, dt_)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)               # (B,di,ds)
+    b = (dt.astype(jnp.float32) * u_c.astype(jnp.float32))[..., None] * B_.astype(jnp.float32)[:, None, :]
+    h = a * ssm_state.astype(jnp.float32) + b
+    y = jnp.einsum("bds,bs->bd", h, C_.astype(jnp.float32)).astype(dt_)
+    y = y + u_c * params["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dt_), new_conv_state, h.astype(ssm_state.dtype)

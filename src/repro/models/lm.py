@@ -1,0 +1,305 @@
+"""Full model assembly: embeddings, frontend stubs, scan-over-layers, heads.
+
+All 10 assigned architectures are instances of this module with different
+:class:`ModelConfig`. Layer parameters for structurally-identical layers are
+stacked and executed with ``lax.scan`` (keeps HLO small and compile times sane
+for 95-layer models); structurally-irregular prefixes are unrolled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# scan planning
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def scan_plan(cfg: ModelConfig):
+    """Return (prefix_len, period, reps) maximizing scanned repetitions."""
+    sigs = cfg.layer_pattern()
+    n = len(sigs)
+    best = (0, 1, 0)  # prefix, period, reps
+    best_score = (-1, 0, 0)
+    for prefix in range(n + 1):
+        rem = n - prefix
+        if rem == 0:
+            continue
+        for period in range(1, rem + 1):
+            if rem % period:
+                continue
+            if all(sigs[i] == sigs[i + period] for i in range(prefix, n - period)):
+                reps = rem // period
+                score = (reps, -prefix, -period)
+                if score > best_score:
+                    best_score = score
+                    best = (prefix, period, reps)
+                break  # smallest valid period for this prefix is optimal
+    prefix, period, reps = best
+    if reps < 2:  # not worth scanning; unroll everything
+        return n, 1, 0
+    return prefix, period, reps
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, rng):
+    sigs = cfg.layer_pattern()
+    prefix_len, period, reps = scan_plan(cfg)
+    keys = jax.random.split(rng, 8)
+    d = cfg.d_model
+    cross = cfg.is_encoder_decoder
+
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, d)) * 0.02
+                  ).astype(L.pdtype(cfg)),
+        "final_norm": L.init_rmsnorm(cfg, keys[1]),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(keys[2], (d, cfg.vocab_size), L.pdtype(cfg))
+    if cfg.num_vision_patches:
+        params["vision_proj"] = L._dense_init(keys[3], (d, d), L.pdtype(cfg))
+
+    pk = jax.random.split(keys[4], max(prefix_len, 1))
+    params["prefix"] = [
+        B.init_block(cfg, pk[i], sigs[i], cross_attn=cross) for i in range(prefix_len)
+    ]
+    if reps:
+        params["scan"] = {}
+        for j in range(period):
+            sig = sigs[prefix_len + j]
+            rk = jax.random.split(jax.random.fold_in(keys[5], j), reps)
+            params["scan"][f"pos_{j}"] = jax.vmap(
+                lambda r: B.init_block(cfg, r, sig, cross_attn=cross)
+            )(rk)
+
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(keys[6], 4)
+        enc_sig = (ATTN, False)
+        erk = jax.random.split(ek[0], cfg.encoder_layers)
+        params["encoder"] = {
+            "pos": (jax.random.normal(ek[1], (cfg.num_encoder_positions, d)) * 0.02
+                    ).astype(L.pdtype(cfg)),
+            "scan": jax.vmap(lambda r: B.init_block(cfg, r, enc_sig))(erk),
+            "norm": L.init_rmsnorm(cfg, ek[2]),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper stub-frontend)
+# ---------------------------------------------------------------------------
+def encode(cfg: ModelConfig, params, frames, *, remat=True):
+    """frames: (B, F, d) precomputed conv/mel embeddings (frontend stub)."""
+    dt = L.cdtype(cfg)
+    x = frames.astype(dt) + params["encoder"]["pos"].astype(dt)[None, :frames.shape[1]]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]), frames.shape[:2])
+    sig = (ATTN, False)
+
+    def body(x, blk):
+        x, _, _ = B.apply_block(cfg, blk, sig, x, positions, causal=False)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["encoder"]["scan"])
+    return L.rmsnorm(cfg, params["encoder"]["norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def forward(cfg: ModelConfig, params, batch, *, window=None, impl="ref",
+            moe_impl="einsum", remat=True, collect_cache=False,
+            seq_parallel=False, head_mode="full"):
+    """batch: {"tokens": (B,S) int32, optional "frames": (B,F,d),
+    "patches": (B,P,d)}. Returns (logits fp32, aux, caches|None).
+    ``seq_parallel``: constrain activations to (batch, "model", None) between
+    blocks so remat-saved tensors are sharded over the model axis too.
+    ``head_mode``: "full" logits (B,S,V) or "last" logits (B,V)."""
+    from repro.distributed.sharding import maybe_constraint
+    sigs = cfg.layer_pattern()
+    prefix_len, period, reps = scan_plan(cfg)
+    dt = L.cdtype(cfg)
+    sp = (lambda t: maybe_constraint(t, (("pod", "data"), "model", None))) \
+        if seq_parallel else (lambda t: t)
+
+    tokens = batch["tokens"]
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.num_vision_patches and "patches" in batch:
+        patches = batch["patches"].astype(dt) @ params["vision_proj"].astype(dt)
+        x = jnp.concatenate([patches, x], axis=1)
+    Bsz, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (Bsz, S))
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(cfg, params, batch["frames"], remat=remat)
+
+    aux = jnp.zeros((), jnp.float32)
+    caches = {"prefix": [], "scan": {}} if collect_cache else None
+
+    x = sp(x)
+    for i in range(prefix_len):
+        x, a, c = B.apply_block(cfg, params["prefix"][i], sigs[i], x, positions,
+                                enc_out=enc_out, window=window, impl=impl,
+                                moe_impl=moe_impl, collect_cache=collect_cache)
+        x = sp(x)
+        aux = aux + a
+        if collect_cache:
+            caches["prefix"].append(c)
+
+    if reps:
+        def body(carry, per_rep):
+            x, aux = carry
+            reps_cache = {}
+            for j in range(period):
+                sig = sigs[prefix_len + j]
+                x, a, c = B.apply_block(cfg, per_rep[f"pos_{j}"], sig, x, positions,
+                                        enc_out=enc_out, window=window, impl=impl,
+                                        moe_impl=moe_impl,
+                                        collect_cache=collect_cache)
+                x = sp(x)
+                aux = aux + a
+                if collect_cache:
+                    reps_cache[f"pos_{j}"] = c
+            return (x, aux), (reps_cache if collect_cache else None)
+
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), ys = lax.scan(body, (x, aux), params["scan"])
+        if collect_cache:
+            caches["scan"] = ys
+
+    x = L.rmsnorm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if head_mode == "last":
+        x = x[:, -1]
+    logits = (x @ head.astype(dt)).astype(jnp.float32)
+    return logits, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size, cache_len, *, dtype=None):
+    """Zeroed decode cache for the whole model (prefix list + scan stacks)."""
+    sigs = cfg.layer_pattern()
+    prefix_len, period, reps = scan_plan(cfg)
+    cross = cfg.num_encoder_positions if cfg.is_encoder_decoder else 0
+    cache = {
+        "prefix": [
+            B.init_block_cache(cfg, sigs[i], batch_size, cache_len,
+                               cross_len=cross, dtype=dtype)
+            for i in range(prefix_len)
+        ],
+        "scan": {},
+    }
+    for j in range(period if reps else 0):
+        sig = sigs[prefix_len + j]
+        one = B.init_block_cache(cfg, sig, batch_size, cache_len,
+                                 cross_len=cross, dtype=dtype)
+        cache["scan"][f"pos_{j}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (reps,) + t.shape), one)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, index, *, ring=False,
+                moe_impl="einsum"):
+    """token: (B,) int32; index: scalar int32 position. -> (logits (B,V), cache)."""
+    sigs = cfg.layer_pattern()
+    prefix_len, period, reps = scan_plan(cfg)
+    dt = L.cdtype(cfg)
+
+    x = params["embed"].astype(dt)[token]
+
+    new_prefix = []
+    for i in range(prefix_len):
+        x, c = B.apply_block_decode(cfg, params["prefix"][i], sigs[i], x,
+                                    cache["prefix"][i], index, ring=ring,
+                                    moe_impl=moe_impl)
+        new_prefix.append(c)
+
+    new_scan = cache["scan"]
+    if reps:
+        def body(x, xs):
+            per_rep, per_cache = xs
+            out_cache = {}
+            for j in range(period):
+                sig = sigs[prefix_len + j]
+                x, c = B.apply_block_decode(cfg, per_rep[f"pos_{j}"], sig, x,
+                                            per_cache[f"pos_{j}"], index,
+                                            ring=ring, moe_impl=moe_impl)
+                out_cache[f"pos_{j}"] = c
+            return x, out_cache
+
+        x, new_scan = lax.scan(body, x, (params["scan"], cache["scan"]))
+
+    x = L.rmsnorm(cfg, params["final_norm"], x[:, None, :])[:, 0]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(dt)).astype(jnp.float32)
+    return logits, {"prefix": new_prefix, "scan": new_scan}
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len, *, window=None,
+            impl="ref", moe_impl="einsum"):
+    """Run the prompt and build a decode cache. Returns (last_logits, cache)."""
+    logits, _, caches = forward(cfg, params, batch, window=window, impl=impl,
+                                moe_impl=moe_impl, remat=False, collect_cache=True)
+
+    def pad_seq(t, target, axis=1):
+        if t.ndim > axis and t.shape[axis] < target and t.ndim >= 3:
+            padw = [(0, 0)] * t.ndim
+            padw[axis] = (0, target - t.shape[axis])
+            return jnp.pad(t, padw)
+        return t
+
+    def fix(c):
+        out = {}
+        for k, v in c.items():
+            if k in ("k", "v", "ckv", "krope"):
+                out[k] = pad_seq(v, cache_len, axis=v.ndim - 3 if k in ("k", "v") else v.ndim - 2)
+            else:
+                out[k] = v
+        return out
+
+    def fix_stacked(c):
+        out = {}
+        for k, v in c.items():
+            if k in ("k", "v", "ckv", "krope"):
+                axis = v.ndim - 3 if k in ("k", "v") else v.ndim - 2
+                out[k] = pad_seq(v, cache_len, axis=axis)
+            else:
+                out[k] = v
+        return out
+
+    cache = {
+        "prefix": [fix(c) for c in caches["prefix"]],
+        "scan": {k: fix_stacked(v) for k, v in caches["scan"].items()},
+    }
+    if cfg.is_encoder_decoder:
+        enc_out = encode(cfg, params, batch["frames"], remat=False)
+        # precompute cross KV for every decoder layer
+        sigs = cfg.layer_pattern()
+        prefix_len, period, reps = scan_plan(cfg)
+        pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]), enc_out.shape[:2])
+        for i in range(prefix_len):
+            kv = B._attn_kv(cfg, params["prefix"][i]["xattn"], enc_out, pos,
+                            rotate=False)
+            cache["prefix"][i]["cross_k"] = kv["k"]
+            cache["prefix"][i]["cross_v"] = kv["v"]
+        for j in range(period if reps else 0):
+            blks = params["scan"][f"pos_{j}"]
+            kv = jax.vmap(lambda blk: B._attn_kv(cfg, blk["xattn"], enc_out,
+                                                 pos, rotate=False))(blks)
+            cache["scan"][f"pos_{j}"]["cross_k"] = kv["k"]
+            cache["scan"][f"pos_{j}"]["cross_v"] = kv["v"]
+    return logits[:, -1], cache

@@ -1,0 +1,56 @@
+"""Sort-based MoE dispatch (per token group).
+
+Alternative to the GShard one-hot einsum dispatch in ``layers.moe``: tokens are
+argsorted by expert id and scattered into a compact (E, cap, d) buffer, so the
+O(Tg*E*cap*d) dispatch einsum FLOPs disappear (replaced by gathers/scatters).
+Used by the perf pass (EXPERIMENTS.md §Perf) — for deepseek-v2 (160 experts)
+the einsum dispatch FLOPs rival the expert FLOPs themselves.
+
+Functions here operate on ONE group; ``layers._moe_sort_grouped`` vmaps them
+over the group axis, which keeps the group axis shardable on the data mesh
+axis (every op is batched, so GSPMD partitions it cleanly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def moe_sort_dispatch_group(cfg, xs, cs, cap):
+    """xs: (Tg, d); cs: (Tg, E) combine weights (top-k nonzero).
+
+    Returns (ex_in (E, cap, d), info) where info carries the scatter plan.
+    """
+    Tg, d = xs.shape
+    E = cfg.num_experts
+    k = cfg.experts_per_token
+    dt = xs.dtype
+
+    vals, eidx = lax.top_k(cs, k)                            # (Tg,k)
+    e_flat = eidx.reshape(-1)
+    w_flat = vals.reshape(-1).astype(dt)
+    t_flat = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)
+
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+
+    counts = jnp.bincount(e_s, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(Tg * k, dtype=jnp.int32) - offsets[e_s].astype(jnp.int32)
+    keep = pos < cap
+    slot = jnp.where(keep, e_s * cap + pos, E * cap)         # overflow -> trash row
+
+    buf = jnp.zeros((E * cap + 1, d), dt).at[slot].set(xs[t_s])
+    ex_in = buf[:-1].reshape(E, cap, d)
+    return ex_in, (slot, t_s, w_s * keep.astype(dt))
+
+
+def moe_sort_combine(cfg, ex_out, Tg, info):
+    """ex_out: (E, cap, d) -> (Tg, d) weighted combine."""
+    slot, t_s, w_s = info
+    E_cap, d = ex_out.shape[0] * ex_out.shape[1], ex_out.shape[2]
+    flat = jnp.concatenate([ex_out.reshape(E_cap, d),
+                            jnp.zeros((1, d), ex_out.dtype)])
+    y_assign = flat[slot] * w_s[:, None]
+    return jnp.zeros((Tg, d), ex_out.dtype).at[t_s].add(y_assign)

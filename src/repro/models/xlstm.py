@@ -1,0 +1,259 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, recurrent with block-diagonal recurrent weights).
+
+The chunkwise mLSTM follows the stabilized formulation of the paper's appendix:
+log-sigmoid forget gates, exponential input gates, running max stabilizer ``m``.
+``mlstm_decode`` is the exact per-step recurrence — it doubles as the oracle
+for the chunked form (see tests/test_xlstm.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, pdtype, cdtype, rmsnorm
+
+NEG = -1e30
+
+
+def _heads(cfg: ModelConfig):
+    H = cfg.num_heads
+    di = 2 * cfg.d_model
+    dh = di // H
+    return H, di, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(cfg: ModelConfig, rng):
+    d = cfg.d_model
+    H, di, dh = _heads(cfg)
+    ks = jax.random.split(rng, 8)
+    return {
+        "up": _dense_init(ks[0], (d, 2 * di), pdtype(cfg)),
+        "wq": _dense_init(ks[1], (di, di), pdtype(cfg)),
+        "wk": _dense_init(ks[2], (di, di), pdtype(cfg)),
+        "wv": _dense_init(ks[3], (di, di), pdtype(cfg)),
+        "wi": _dense_init(ks[4], (di, H), pdtype(cfg), scale=0.02),
+        "wf": _dense_init(ks[5], (di, H), pdtype(cfg), scale=0.02),
+        "bf": jnp.full((H,), 3.0, pdtype(cfg)),  # open forget gates at init
+        "bi": jnp.zeros((H,), pdtype(cfg)),
+        "down": _dense_init(ks[6], (di, d), pdtype(cfg)),
+    }
+
+
+def _mlstm_qkvif(cfg, params, u):
+    """u: (..., di) -> q,k,v (..., H, dh); i,f raw gates (..., H)."""
+    H, di, dh = _heads(cfg)
+    dt = u.dtype
+    q = (u @ params["wq"].astype(dt)).reshape(*u.shape[:-1], H, dh)
+    k = (u @ params["wk"].astype(dt)).reshape(*u.shape[:-1], H, dh)
+    v = (u @ params["wv"].astype(dt)).reshape(*u.shape[:-1], H, dh)
+    i_raw = u @ params["wi"].astype(dt) + params["bi"].astype(dt)
+    f_raw = u @ params["wf"].astype(dt) + params["bf"].astype(dt)
+    q = q / math.sqrt(dh)
+    return q, k, v, i_raw.astype(jnp.float32), f_raw.astype(jnp.float32)
+
+
+def mlstm_cell_chunked(q, k, v, i_raw, f_raw, state=None, *, chunk=128):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,dh) with q pre-scaled by 1/sqrt(dh); i_raw,f_raw: (B,S,H) fp32.
+    state: optional (C (B,H,dh,dh), n (B,H,dh), m (B,H)).
+    Returns h (B,S,H,dh), final state.
+    """
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    if S % L != 0:
+        L = S
+    nc = S // L
+
+    # (nc, B, H, L, ...) layout
+    def arr(x, tail):
+        return x.reshape(B, nc, L, H, *tail).transpose(1, 0, 3, 2, *range(4, 4 + len(tail)))
+    qc, kc, vc = (arr(x, (dh,)) for x in (q, k, v))
+    ic = i_raw.reshape(B, nc, L, H).transpose(1, 0, 3, 2)   # (nc,B,H,L)
+    fc = jax.nn.log_sigmoid(f_raw).reshape(B, nc, L, H).transpose(1, 0, 3, 2)
+
+    if state is None:
+        from repro.distributed.sharding import maybe_constraint
+        ba = ("pod", "data")
+        C0 = maybe_constraint(jnp.zeros((B, H, dh, dh), jnp.float32),
+                              (ba, "model", None, None))
+        n0 = maybe_constraint(jnp.zeros((B, H, dh), jnp.float32),
+                              (ba, "model", None))
+        m0 = maybe_constraint(jnp.full((B, H), NEG, jnp.float32),
+                              (ba, "model"))
+        state = (C0, n0, m0)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, inp):
+        C0, n0, m0 = carry
+        qt, kt, vt, it, ft = inp                      # (B,H,L,dh)/(B,H,L)
+        F = jnp.cumsum(ft, axis=-1)                   # (B,H,L) inclusive
+        logD = F[..., :, None] - F[..., None, :] + it[..., None, :]
+        logD = jnp.where(tri, logD, NEG)              # (B,H,L,L)
+        a = F + m0[..., None]                         # state log-weight (B,H,L)
+        m = jnp.maximum(jnp.max(logD, axis=-1), a)    # (B,H,L)
+        w = jnp.exp(logD - m[..., None])              # (B,H,L,L)
+        sw = jnp.exp(a - m)                           # (B,H,L)
+
+        qk = jnp.einsum("bhld,bhsd->bhls", qt.astype(jnp.float32), kt.astype(jnp.float32))
+        num = jnp.einsum("bhls,bhsd->bhld", w * qk, vt.astype(jnp.float32))
+        num = num + sw[..., None] * jnp.einsum("bhld,bhde->bhle", qt.astype(jnp.float32), C0)
+        den = jnp.einsum("bhls,bhls->bhl", w, qk)
+        den = den + sw * jnp.einsum("bhld,bhd->bhl", qt.astype(jnp.float32), n0)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+        # carry to next chunk
+        Fl = F[..., -1]                               # (B,H)
+        lw = Fl[..., None] - F + it                   # (B,H,L) kv weights to chunk end
+        m_next = jnp.maximum(Fl + m0, jnp.max(lw, axis=-1))
+        wkv = jnp.exp(lw - m_next[..., None])
+        C = jnp.exp(Fl + m0 - m_next)[..., None, None] * C0 + jnp.einsum(
+            "bhl,bhld,bhle->bhde", wkv, kt.astype(jnp.float32), vt.astype(jnp.float32))
+        n = jnp.exp(Fl + m0 - m_next)[..., None] * n0 + jnp.einsum(
+            "bhl,bhld->bhd", wkv, kt.astype(jnp.float32))
+        return (C, n, m_next), h
+
+    state, hs = lax.scan(body, state, (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dh)
+    return h, state
+
+
+def mlstm_cell_step(q, k, v, i_raw, f_raw, state):
+    """Exact single-step recurrence. q,k,v: (B,H,dh) (q pre-scaled); gates (B,H)."""
+    C0, n0, m0 = state
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m = jnp.maximum(f_log + m0, i_raw)
+    fp = jnp.exp(f_log + m0 - m)
+    ip = jnp.exp(i_raw - m)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C = fp[..., None, None] * C0 + ip[..., None, None] * kf[..., :, None] * vf[..., None, :]
+    n = fp[..., None] * n0 + ip[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+    return h, (C, n, m)
+
+
+def mlstm(cfg: ModelConfig, params, x, *, chunk=128):
+    """mLSTM block forward. x: (B,S,d)."""
+    dt = cdtype(cfg)
+    B, S, d = x.shape
+    H, di, dh = _heads(cfg)
+    uz = x @ params["up"].astype(dt)
+    u, z = jnp.split(uz, 2, axis=-1)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(cfg, params, u)
+    h, _ = mlstm_cell_chunked(q, k, v, i_raw, f_raw, chunk=chunk)
+    h = h.reshape(B, S, di).astype(dt) * jax.nn.silu(z)
+    return h @ params["down"].astype(dt)
+
+
+def mlstm_decode(cfg: ModelConfig, params, x, state):
+    """One-token decode. x: (B,d); state = (C,n,m)."""
+    dt = cdtype(cfg)
+    B, d = x.shape
+    H, di, dh = _heads(cfg)
+    uz = x @ params["up"].astype(dt)
+    u, z = jnp.split(uz, 2, axis=-1)
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(cfg, params, u)
+    h, state = mlstm_cell_step(q, k, v, i_raw, f_raw, state)
+    h = h.reshape(B, di).astype(dt) * jax.nn.silu(z)
+    return h @ params["down"].astype(dt), state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch):
+    H, di, dh = _heads(cfg)
+    return (
+        jnp.zeros((batch, H, dh, dh), jnp.float32),
+        jnp.zeros((batch, H, dh), jnp.float32),
+        jnp.full((batch, H), NEG, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(cfg: ModelConfig, rng):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(rng, 4)
+    return {
+        "w": _dense_init(ks[0], (d, 4 * d), pdtype(cfg)),             # z,i,f,o
+        "r": _dense_init(ks[1], (4, H, dh, dh), pdtype(cfg), scale=1.0 / math.sqrt(dh)),
+        "b": jnp.concatenate([
+            jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))
+        ]).astype(pdtype(cfg)),
+        "up": _dense_init(ks[2], (d, 4 * d), pdtype(cfg)),            # gated FFN
+        "down": _dense_init(ks[3], (2 * d, d), pdtype(cfg)),
+    }
+
+
+def _slstm_step(cfg, params, x_t, state):
+    """x_t: (B,d). state = (c,n,m,h) each (B,H,dh) / h (B,d)."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    c, n, m, h_prev = state
+    dt = x_t.dtype
+    g = x_t @ params["w"].astype(dt) + params["b"].astype(dt)
+    hp = h_prev.reshape(-1, H, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hp, params["r"].astype(dt))    # (4,B,H,dh)
+    g = g.reshape(-1, 4, H, dh) + jnp.moveaxis(rec, 0, 1)
+    z_r, i_r, f_r, o_r = (g[:, j].astype(jnp.float32) for j in range(4))
+    z = jnp.tanh(z_r)
+    f_log = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(f_log + m, i_r)
+    fp = jnp.exp(f_log + m - m_new)
+    ip = jnp.exp(i_r - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+    h_flat = h.reshape(-1, d).astype(jnp.float32)   # carry stays fp32
+    return (c, n, m_new, h_flat), h_flat
+
+
+def init_slstm_state(cfg: ModelConfig, batch):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, jnp.full((batch, H, dh), NEG, jnp.float32),
+            jnp.zeros((batch, d), jnp.float32))
+
+
+def slstm(cfg: ModelConfig, params, x, *, return_state=False):
+    """sLSTM block forward (recurrent over S). x: (B,S,d)."""
+    from repro.distributed.sharding import maybe_constraint
+    dt = cdtype(cfg)
+    B, S, d = x.shape
+    state = init_slstm_state(cfg, B)
+    state = jax.tree.map(
+        lambda t: maybe_constraint(t.astype(jnp.float32),
+                                   (("pod", "data"),) + (None,) * (t.ndim - 1)),
+        state)
+    step = lambda st, xt: _slstm_step(cfg, params, xt, st)
+    state, hs = lax.scan(step, state, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                                             # (B,S,d)
+    uz = h.astype(dt) @ params["up"].astype(dt)
+    u, z = jnp.split(uz, 2, axis=-1)
+    out = (jax.nn.silu(z) * u) @ params["down"].astype(dt)
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_decode(cfg: ModelConfig, params, x, state):
+    dt = cdtype(cfg)
+    state, h = _slstm_step(cfg, params, x, state)
+    uz = h.astype(dt) @ params["up"].astype(dt)
+    u, z = jnp.split(uz, 2, axis=-1)
+    return (jax.nn.silu(z) * u) @ params["down"].astype(dt), state

@@ -1,0 +1,58 @@
+"""Adam / SGD with optional decoupled weight decay and L1 regularisation.
+
+The FedS3A paper (§IV-F) adds L1 regularisation to the model parameters so the
+inter-round parameter difference is sparse — implemented here as an L1
+subgradient term, shared by the small CNN runs and the big-model trainer.
+
+Optimizer state dtype is configurable (``bfloat16`` for the >=200B models, see
+DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params, dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(grads, opt_state, params, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0, l1=0.0):
+    t = opt_state["t"] + 1
+    tf = t.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        if l1:
+            g = g + l1 * jnp.sign(p.astype(jnp.float32))
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        v_new = b2 * v32 + (1 - b2) * g * g
+        mhat = m_new / (1 - b1 ** tf)
+        vhat = v_new / (1 - b2 ** tf)
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    params_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return params_new, {"m": m_new, "v": v_new, "t": t}
+
+
+def sgd_update(grads, params, *, lr, l1=0.0):
+    def upd(g, p):
+        g = g.astype(jnp.float32)
+        if l1:
+            g = g + l1 * jnp.sign(p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - lr * g).astype(p.dtype)
+    return jax.tree.map(upd, grads, params)

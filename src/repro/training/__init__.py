@@ -1,0 +1,6 @@
+from repro.training.steps import (  # noqa: F401
+    lm_loss,
+    make_train_step,
+    make_prefill_step,
+    make_serve_step,
+)

@@ -1,0 +1,109 @@
+"""Step functions: training (microbatched grad accumulation), prefill, decode.
+
+These are the functions the launcher jits/lowers for the dry-run, and the
+functions FL clients run locally in `repro.core`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.optimizer import adam_update
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, window=None, impl="ref",
+            moe_impl="einsum", remat=True, seq_parallel=False):
+    """Next-token CE (+ MoE aux). VLM: loss only on the text segment."""
+    logits, aux, _ = lm.forward(cfg, params, batch, window=window, impl=impl,
+                                moe_impl=moe_impl, remat=remat,
+                                seq_parallel=seq_parallel)
+    tokens = batch["tokens"]
+    P = logits.shape[1] - tokens.shape[1]      # prepended patches
+    logits = logits[:, P:, :]
+    pred = logits[:, :-1]
+    tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    ce = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        mask = mask[:, 1:].astype(jnp.float32)
+        ce = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        ce = jnp.mean(ce)
+    return ce + cfg.router_aux_loss_coef * aux
+
+
+def make_train_step(cfg: ModelConfig, *, lr=3e-4, num_microbatches=1,
+                    window=None, impl="ref", moe_impl="einsum", l1=0.0,
+                    seq_parallel=False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, loss).
+
+    Gradient accumulation over ``num_microbatches`` via lax.scan keeps live
+    activation memory at one-microbatch scale (DESIGN.md §7).
+    """
+
+    def loss_fn(params, mb):
+        return lm_loss(cfg, params, mb, window=window, impl=impl,
+                       moe_impl=moe_impl, seq_parallel=seq_parallel)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(t):
+                return t.reshape(num_microbatches, t.shape[0] // num_microbatches,
+                                 *t.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            # derive zeros from params so the grad-accumulator scan carry
+            # inherits the param sharding (a plain jnp.zeros carry makes
+            # GSPMD replicate the whole backward pass)
+            zero = jax.tree.map(lambda p: (p * 0).astype(jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss), _ = lax.scan(acc, (zero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss / num_microbatches
+
+        params, opt_state = adam_update(grads, opt_state, params, lr=lr, l1=l1)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len, *, window=None, impl="ref",
+                      moe_impl="einsum"):
+    def prefill_step(params, batch):
+        return lm.prefill(cfg, params, batch, cache_len, window=window, impl=impl,
+                          moe_impl=moe_impl)
+    return prefill_step
+
+
+def make_forward_step(cfg: ModelConfig, *, window=None, impl="ref",
+                      moe_impl="einsum", seq_parallel=False):
+    """Inference forward (prefill compute; last-token logits only)."""
+    def forward_step(params, batch):
+        logits, _, _ = lm.forward(cfg, params, batch, window=window, impl=impl,
+                                  moe_impl=moe_impl, remat=False,
+                                  seq_parallel=seq_parallel, head_mode="last")
+        return logits
+    return forward_step
+
+
+def make_serve_step(cfg: ModelConfig, *, ring=False, moe_impl="einsum"):
+    """One decode iteration: greedy-sample next token, update cache."""
+    def serve_step(params, cache, token, index):
+        logits, cache = lm.decode_step(cfg, params, token, cache, index,
+                                       ring=ring, moe_impl=moe_impl)
+        next_token = jnp.argmax(logits, axis=-1).astype(token.dtype)
+        return next_token, logits, cache
+    return serve_step

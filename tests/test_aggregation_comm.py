@@ -1,0 +1,109 @@
+"""Aggregation (Eq. 7-10) and sparse-diff communication (§IV-F)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import aggregation as agg
+from repro.core.functions import staleness_fn
+from repro.core.grouping import group_clients, kmeans
+from repro.core.sparse_comm import SparseComm, flatten_tree, unflatten_like
+
+
+def _tree(rng, scale=1.0):
+    k1, k2 = jax.random.split(rng)
+    return {"a": jax.random.normal(k1, (7, 5)) * scale,
+            "b": jax.random.normal(k2, (11,)) * scale}
+
+
+def test_aggregate_flat_matches_numpy(rng):
+    clients = [_tree(jax.random.fold_in(rng, i)) for i in range(4)]
+    server = _tree(jax.random.fold_in(rng, 99))
+    sizes = [10, 20, 30, 40]
+    stal = [0, 1, 0, 2]
+    g = staleness_fn("exponential")
+    fw = 0.3
+    out = agg.aggregate(server, clients, data_sizes=sizes, stalenesses=stal,
+                        g_fn=g, f_weight=fw, groups=None)
+    w = np.array(sizes, float) * np.array([g(s) for s in stal])
+    w = w / w.sum()
+    for key in ("a", "b"):
+        expect = fw * np.asarray(server[key]) + (1 - fw) * sum(
+            wi * np.asarray(c[key]) for wi, c in zip(w, clients))
+        np.testing.assert_allclose(np.asarray(out[key]), expect, rtol=1e-5)
+
+
+def test_aggregate_single_group_equals_flat(rng):
+    clients = [_tree(jax.random.fold_in(rng, i)) for i in range(3)]
+    server = _tree(jax.random.fold_in(rng, 99))
+    kw = dict(data_sizes=[1, 2, 3], stalenesses=[0, 0, 1],
+              g_fn=staleness_fn("polynomial"), f_weight=0.4)
+    flat = agg.aggregate(server, clients, groups=None, **kw)
+    grouped = agg.aggregate(server, clients, groups=np.zeros(3, int), **kw)
+    for key in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(flat[key]),
+                                   np.asarray(grouped[key]), rtol=1e-5)
+
+
+def test_aggregate_kernel_path_matches(rng):
+    clients = [_tree(jax.random.fold_in(rng, i)) for i in range(3)]
+    server = _tree(jax.random.fold_in(rng, 99))
+    kw = dict(data_sizes=[5, 5, 5], stalenesses=[0, 1, 2],
+              g_fn=staleness_fn("exponential"), f_weight=0.25, groups=None)
+    a = agg.aggregate(server, clients, use_kernel=False, **kw)
+    b = agg.aggregate(server, clients, use_kernel=True, **kw)
+    for key in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(a[key]), np.asarray(b[key]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fedavg_weights(rng):
+    clients = [_tree(jax.random.fold_in(rng, i)) for i in range(2)]
+    out = agg.fedavg(clients, [1, 3])
+    expect = 0.25 * np.asarray(clients[0]["a"]) + 0.75 * np.asarray(clients[1]["a"])
+    np.testing.assert_allclose(np.asarray(out["a"]), expect, rtol=1e-5)
+
+
+# --- sparse comm -----------------------------------------------------------
+def test_flatten_roundtrip(rng):
+    t = _tree(rng)
+    flat = flatten_tree(t)
+    back = unflatten_like(flat, t)
+    for key in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(back[key]), np.asarray(t[key]))
+
+
+def test_sparse_encode_apply_roundtrip(rng):
+    base = _tree(rng)
+    new = jax.tree.map(lambda x: x + 0.01, base)
+    comm = SparseComm(threshold=0.0, use_kernel=False)  # keep everything
+    delta, stats = comm.encode(new, base)
+    rec = comm.apply(base, delta)
+    for key in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(rec[key]), np.asarray(new[key]),
+                                   rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(frac=st.floats(min_value=0.05, max_value=0.9),
+       seed=st.integers(min_value=0, max_value=50))
+def test_quantile_mode_keeps_requested_fraction(frac, seed):
+    rng = jax.random.PRNGKey(seed)
+    base = _tree(rng, scale=0.0)
+    new = _tree(jax.random.fold_in(rng, 1))
+    comm = SparseComm(threshold=f"p{frac}", use_kernel=False)
+    _, stats = comm.encode(new, base)
+    kept = stats["nnz"] / stats["total"]
+    assert abs(kept - frac) < 0.15
+    # ACO accounting: payload = 8 bytes/nnz vs 4 dense
+    assert abs(comm.aco - 2 * kept) < 1e-6
+
+
+def test_kmeans_separates_obvious_clusters():
+    pts = np.concatenate([np.zeros((5, 3)), np.ones((5, 3))])
+    assign = group_clients(pts, 2)
+    assert len(set(assign[:5])) == 1
+    assert len(set(assign[5:])) == 1
+    assert assign[0] != assign[5]

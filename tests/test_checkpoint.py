@@ -1,0 +1,22 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path, rng):
+    tree = {
+        "params": {"w": jax.random.normal(rng, (4, 5)),
+                   "b": jnp.zeros((5,), jnp.bfloat16)},
+        "step": 7,
+        "lr": 1e-4,
+    }
+    p = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(p, tree)
+    like = jax.tree.map(lambda x: x, tree)
+    out = load_checkpoint(p, like)
+    np.testing.assert_allclose(np.asarray(out["params"]["w"], np.float32),
+                               np.asarray(tree["params"]["w"], np.float32))
+    assert out["step"] == 7
+    assert out["params"]["b"].dtype == jnp.bfloat16

@@ -1,0 +1,86 @@
+"""Config registry: all 10 assigned architectures, published param counts,
+reduced-variant constraints, layer-pattern/scan-plan machinery."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_configs
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM
+from repro.models.lm import scan_plan
+
+ASSIGNED = [
+    "whisper-medium", "jamba-1.5-large-398b", "deepseek-67b",
+    "deepseek-v2-236b", "qwen2-1.5b", "internlm2-20b", "xlstm-125m",
+    "llama4-maverick-400b-a17b", "granite-8b", "pixtral-12b",
+]
+
+# published totals (billions), generous +-15% band
+PUBLISHED = {
+    "whisper-medium": 0.77, "jamba-1.5-large-398b": 398, "deepseek-67b": 67,
+    "deepseek-v2-236b": 236, "qwen2-1.5b": 1.5, "internlm2-20b": 20,
+    "xlstm-125m": 0.125, "llama4-maverick-400b-a17b": 400, "granite-8b": 8,
+    "pixtral-12b": 12,
+}
+ACTIVE = {"jamba-1.5-large-398b": 94, "deepseek-v2-236b": 21,
+          "llama4-maverick-400b-a17b": 17}
+
+
+def test_all_assigned_registered():
+    regs = list_configs()
+    for a in ASSIGNED:
+        assert a in regs
+
+
+def test_four_input_shapes():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count() / 1e9
+    assert abs(n - PUBLISHED[arch]) / PUBLISHED[arch] < 0.35, (arch, n)
+    if arch in ACTIVE:
+        na = cfg.active_param_count() / 1e9
+        assert abs(na - ACTIVE[arch]) / ACTIVE[arch] < 0.35, (arch, na)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 4
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.vocab_size <= 512
+
+
+def test_jamba_pattern():
+    cfg = get_config("jamba-1.5-large-398b")
+    pat = cfg.layer_pattern()
+    kinds = [k for k, _ in pat]
+    assert kinds.count(ATTN) == 9           # 1 attention per 8 layers
+    assert kinds.count(MAMBA) == 63
+    assert sum(m for _, m in pat) == 36     # MoE every other layer
+    prefix, period, reps = scan_plan(cfg)
+    assert (prefix, period, reps) == (0, 8, 9)
+
+
+def test_xlstm_pattern():
+    cfg = get_config("xlstm-125m")
+    kinds = [k for k, _ in cfg.layer_pattern()]
+    assert kinds.count(SLSTM) == 1
+    assert kinds.count(MLSTM) == 11
+
+
+def test_deepseek_v2_first_dense():
+    cfg = get_config("deepseek-v2-236b")
+    assert not cfg.is_moe_layer(0)
+    assert cfg.is_moe_layer(1)
+    prefix, period, reps = scan_plan(cfg)
+    assert prefix == 1 and period == 1 and reps == 59
+
+
+def test_dense_scan_plan():
+    cfg = get_config("deepseek-67b")
+    assert scan_plan(cfg) == (0, 1, 95)

@@ -1,0 +1,62 @@
+"""Synthetic CIC-IDS data: Table III fidelity, entropies, metrics."""
+import numpy as np
+import pytest
+
+from repro.core.metrics import weighted_metrics
+from repro.data import (BALANCED_SCENARIO, BASIC_SCENARIO, make_dataset,
+                        shannon_entropy)
+
+# Table III's printed entropy column (basic scenario)
+PAPER_ENTROPY_BASIC = [0.5981, 0.1794, 0.4880, 0.1423, 0.4729,
+                       0.5054, 0.4043, 0.0, 0.6062, 0.3681]
+
+
+def test_entropy_matches_paper_table():
+    for counts, expect in zip(BASIC_SCENARIO, PAPER_ENTROPY_BASIC):
+        assert abs(shannon_entropy(counts) - expect) < 0.02
+
+
+def test_balanced_entropies_equal():
+    es = [shannon_entropy(c) for c in BALANCED_SCENARIO]
+    assert np.ptp(es) < 0.001
+    assert abs(es[0] - 0.6553) < 0.01
+
+
+def test_dataset_counts_scale():
+    data = make_dataset("basic", scale=0.01)
+    assert len(data["clients"]) == 10
+    for i, c in enumerate(data["clients"]):
+        assert len(c["x"]) == data["counts"][i].sum()
+        expect = (BASIC_SCENARIO[i] * 0.01).astype(int).sum()
+        assert len(c["x"]) == expect
+    assert data["server"]["x"].shape[1] == 78
+
+
+def test_server_fraction():
+    data = make_dataset("basic", scale=0.02, server_frac=0.05)
+    total = sum(len(c["x"]) for c in data["clients"])
+    assert 0.03 < len(data["server"]["x"]) / total < 0.09
+
+
+def test_client_side_is_noniid_in_basic():
+    data = make_dataset("basic", scale=0.01)
+    assert data["entropy"][7] == 0.0          # client 7: benign only
+    assert data["entropy"][0] > 0.5
+
+
+def test_weighted_metrics_perfect():
+    y = np.array([0, 1, 2, 2, 1])
+    m = weighted_metrics(y, y, 3)
+    assert m["accuracy"] == 1.0
+    assert m["f1"] == 1.0
+    assert m["fpr"] == 0.0
+
+
+def test_weighted_metrics_known_case():
+    y_true = np.array([0, 0, 1, 1])
+    y_pred = np.array([0, 1, 1, 1])
+    m = weighted_metrics(y_true, y_pred, 2)
+    assert abs(m["accuracy"] - 0.75) < 1e-9
+    # class 0: P=1, R=.5; class 1: P=2/3, R=1 -> weighted P = 5/6
+    assert abs(m["precision"] - (0.5 * 1.0 + 0.5 * 2 / 3)) < 1e-9
+    assert abs(m["recall"] - 0.75) < 1e-9

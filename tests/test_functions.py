@@ -1,0 +1,70 @@
+"""Weighting functions (§IV-D/E): endpoint, monotonicity and normalization
+properties — hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.functions import (adaptive_learning_rates, round_weight_fn,
+                                  staleness_fn, supervised_weight)
+
+
+def test_supervised_weight_endpoints():
+    C, M = 0.6, 10
+    beta = 1.0 / (C * M + 1)
+    assert abs(supervised_weight(0, C=C, M=M) - 0.5) < 1e-6
+    assert abs(supervised_weight(10_000, C=C, M=M) - beta) < 1e-6
+    assert supervised_weight(5, C=C, M=M, mode="fixed_alpha") == 0.5
+    assert supervised_weight(5, C=C, M=M, mode="fixed_beta") == beta
+
+
+@given(r=st.integers(min_value=0, max_value=500))
+@settings(max_examples=50, deadline=None)
+def test_supervised_weight_bounds_and_monotone(r):
+    C, M = 0.6, 10
+    w1 = supervised_weight(r, C=C, M=M)
+    w2 = supervised_weight(r + 1, C=C, M=M)
+    assert 0 < w1 < 1
+    assert w2 <= w1 + 1e-12
+
+
+@pytest.mark.parametrize("name", ["constant", "polynomial", "hinge",
+                                  "exponential"])
+def test_staleness_fn_properties(name):
+    g = staleness_fn(name)
+    assert abs(g(0) - 1.0) < 1e-9
+    vals = [g(s) for s in range(8)]
+    for a, b in zip(vals, vals[1:]):
+        assert b <= a + 1e-12          # monotone non-increasing
+        assert b > 0
+
+
+@pytest.mark.parametrize("name", ["constant", "logarithmic", "polynomial",
+                                  "exponential_smoothing", "exponential"])
+def test_round_weight_nonneg_monotone(name):
+    h = round_weight_fn(name)
+    vals = [h(r) for r in range(10)]
+    assert all(v >= 0 for v in vals)
+    if name != "constant":
+        assert vals[-1] >= vals[0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    R=st.integers(min_value=1, max_value=20),
+    M=st.integers(min_value=2, max_value=10),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_adaptive_lr_properties(R, M, seed):
+    rng = np.random.default_rng(seed)
+    part = (rng.random((R, M)) < 0.5).astype(float)
+    lr = adaptive_learning_rates(part, base_lr=1e-4,
+                                 round_weight="exponential_smoothing")
+    assert lr.shape == (M,)
+    assert np.all(lr >= 0.2e-4 - 1e-12) and np.all(lr <= 5e-4 + 1e-12)
+    # a client that participates strictly more than another gets a lower lr
+    part = np.zeros((4, 2))
+    part[:, 0] = 1
+    part[0, 1] = 1
+    lr = adaptive_learning_rates(part, base_lr=1e-4, round_weight="constant")
+    assert lr[0] < lr[1]

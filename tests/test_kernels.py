@@ -1,0 +1,90 @@
+"""Pallas kernel sweeps: shapes/dtypes vs the ref.py pure-jnp oracles
+(interpret mode on CPU) — deliverable (c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+
+@pytest.mark.parametrize("S,Hq,Hkv,hd,dtype", [
+    (128, 4, 4, 32, jnp.float32),
+    (256, 8, 2, 64, jnp.float32),
+    (128, 4, 1, 64, jnp.bfloat16),
+    (384, 6, 2, 128, jnp.float32),
+])
+@pytest.mark.parametrize("window", [None, 96])
+def test_flash_attention_sweep(S, Hq, Hkv, hd, dtype, window, rng):
+    B = 2
+    q = jax.random.normal(rng, (B, S, Hq, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, Hkv, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, Hkv, hd), dtype)
+    out = ops.flash_attention(q, k, v, window=window)
+    G = Hq // Hkv
+    ref = R.flash_attention_ref(q, jnp.repeat(k, G, 2), jnp.repeat(v, G, 2),
+                                window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("N,C", [(64, 9), (300, 9), (256, 100), (77, 17)])
+@pytest.mark.parametrize("thr", [0.5, 0.95])
+def test_masked_pseudo_ce_sweep(N, C, thr, rng):
+    logits = jax.random.normal(rng, (N, C)) * 3
+    loss, mask = ops.masked_pseudo_ce(logits, thr)
+    rl, rm = R.masked_pseudo_ce_ref(logits, thr)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(rl), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(rm))
+
+
+def test_masked_pseudo_ce_grad(rng):
+    logits = jax.random.normal(rng, (64, 9)) * 4
+    g = jax.grad(lambda lg: ops.masked_pseudo_ce(lg, 0.8)[0].sum())(logits)
+    # finite differences on a masked (confident) sample
+    _, mask = R.masked_pseudo_ce_ref(logits, 0.8)
+    idx = int(np.argmax(np.asarray(mask)))
+    eps = 1e-3
+    for j in (0, 3):
+        lp = logits.at[idx, j].add(eps)
+        lmn = logits.at[idx, j].add(-eps)
+        fd = (R.masked_pseudo_ce_ref(lp, 0.8)[0].sum()
+              - R.masked_pseudo_ce_ref(lmn, 0.8)[0].sum()) / (2 * eps)
+        assert abs(float(fd) - float(g[idx, j])) < 1e-2
+
+
+@pytest.mark.parametrize("n", [512, 2048, 1000, 4096 + 17])
+@pytest.mark.parametrize("thr", [0.1, 1.0, 10.0])
+def test_sparse_delta_sweep(n, thr, rng):
+    x = jax.random.normal(rng, (n,))
+    masked, nnz = ops.sparse_delta(x, thr)
+    pad = (-n) % 512
+    xr = jnp.concatenate([x, jnp.zeros(pad)]) if pad else x
+    rmasked, rnnz = R.sparse_delta_ref(xr, thr)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(rmasked[:n]))
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
+
+
+@pytest.mark.parametrize("K,n", [(3, 512), (10, 2048), (6, 1000)])
+def test_staleness_agg_sweep(K, n, rng):
+    d = jax.random.normal(rng, (K, n))
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (K,))
+    out = ops.staleness_agg(d, w)
+    ref = R.staleness_agg_ref(d, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:n]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_matches_xla_flash(rng):
+    """Pallas kernel vs the XLA nested-scan flash (structural twin)."""
+    from repro.models.layers import flash_attention_xla
+    B, S, H, hd = 1, 256, 4, 64
+    q = jax.random.normal(rng, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, H, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    a = ops.flash_attention(q, k, v)
+    b = flash_attention_xla(q, k, v, pos, pos, qblk=64, kblk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

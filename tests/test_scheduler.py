@@ -1,0 +1,87 @@
+"""Semi-async scheduler: paper Fig. 3 / Table II behaviour + hypothesis
+properties of the FedS3A invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import SemiAsyncScheduler, paper_latency
+
+
+def test_paper_latency_fit():
+    """§V-D3: C0 (78357 samples) ~317 s, C9 (16904) ~166 s."""
+    assert abs(paper_latency(78357) - 317) < 2
+    assert abs(paper_latency(16904) - 166) < 2
+
+
+def test_fig3_pattern():
+    """C=0.4, tau=2, 5 clients: the paper's illustration — two fast clients
+    trigger each round; a very slow client eventually goes deprecated."""
+    lats = [10.0, 11.0, 20.0, 21.0, 55.0]
+    sch = SemiAsyncScheduler(lats, C=0.4, tau=2, jitter=0.0)
+    parts0, stale0, forced0, t0 = sch.next_round()
+    assert sorted(r.client for r in parts0) == [0, 1]
+    assert all(s == 0 for s in stale0.values())
+    # rounds tick fast; client 4 (55s) eventually exceeds tau=2 and is forced
+    forced_any = []
+    for _ in range(6):
+        _, _, forced, _ = sch.next_round()
+        forced_any += forced
+    assert 4 in forced_any
+
+
+def test_round_takes_exactly_k():
+    sch = SemiAsyncScheduler([10, 20, 30, 40, 50, 60, 70, 80, 90, 100],
+                             C=0.6, tau=2, jitter=0.0)
+    parts, _, _, _ = sch.next_round()
+    assert len(parts) == 6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lats=st.lists(st.floats(min_value=1, max_value=500), min_size=3,
+                  max_size=12),
+    C=st.floats(min_value=0.1, max_value=1.0),
+    tau=st.integers(min_value=0, max_value=4),
+)
+def test_scheduler_invariants(lats, C, tau):
+    sch = SemiAsyncScheduler(lats, C=C, tau=tau, jitter=0.0)
+    M = len(lats)
+    k = max(int(math.ceil(C * M)), 1)
+    prev_t = 0.0
+    for r in range(8):
+        parts, stale, forced, t = sch.next_round()
+        # exactly ceil(C*M) participants per aggregation
+        assert len(parts) == k
+        # time is monotone
+        assert t >= prev_t
+        prev_t = t
+        # after distribution nobody's in-flight run exceeds tau versions
+        new_version = sch.state.round
+        for (_, _, run) in sch.state.runs:
+            assert new_version - run.base_version <= tau
+        # forced clients restarted at the newest version
+        for c in forced:
+            assert sch.state.versions[c] == new_version
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=99))
+def test_all_clients_eventually_participate(seed):
+    """With a bounded latency spread (the paper's measured spread is 1.9x),
+    the staleness tolerance keeps every client in the training.
+
+    NOTE: with an UNBOUNDED spread this property is false — a client much
+    slower than tau rounds keeps being force-reset before finishing and never
+    participates. That is exactly the paper's own §IV-C2 caveat about
+    poorly-controlled staleness; hypothesis rediscovered it."""
+    rng = np.random.default_rng(seed)
+    lats = rng.uniform(150, 330, 8)       # ~paper's 166..317 s band
+    sch = SemiAsyncScheduler(list(lats), C=0.5, tau=2, jitter=0.0)
+    seen = set()
+    for _ in range(12):
+        parts, _, _, _ = sch.next_round()
+        seen |= {r.client for r in parts}
+    assert seen == set(range(8))

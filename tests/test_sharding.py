@@ -1,0 +1,72 @@
+"""Sharding rule properties: pjit argument specs must always divide dims."""
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.distributed.sharding import _fit, cache_specs, param_specs
+from repro.models import lm
+from tests.test_configs import ASSIGNED
+
+AXES = {"pod": 2, "data": 16, "model": 16}
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    dims=st.lists(st.integers(min_value=1, max_value=4096), min_size=1,
+                  max_size=4),
+    spec=st.lists(st.sampled_from([None, "data", "model", ("pod", "data"),
+                                   ("data", "model")]), min_size=1, max_size=4),
+)
+def test_fit_always_divides(dims, spec):
+    spec = spec[:len(dims)] + [None] * (len(dims) - len(spec))
+    fitted = _fit(tuple(spec), tuple(dims), AXES)
+    for d, s in zip(dims, fitted):
+        if s is None:
+            continue
+        axes = (s,) if isinstance(s, str) else s
+        prod = 1
+        for a in axes:
+            prod *= AXES[a]
+        assert d % prod == 0, (d, s)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_specs_divide(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, shapes, AXES, fsdp=True)
+
+    def check(path, leaf, spec):
+        for dim, s in zip(leaf.shape, spec):
+            if s is None:
+                continue
+            axes = (s,) if isinstance(s, str) else s
+            prod = 1
+            for a in axes:
+                prod *= AXES[a]
+            assert dim % prod == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+
+
+@pytest.mark.parametrize("arch", ["jamba-1.5-large-398b", "deepseek-v2-236b",
+                                  "whisper-medium", "xlstm-125m"])
+@pytest.mark.parametrize("batch_size,cache_len", [(128, 32768), (1, 8192)])
+def test_cache_specs_divide(arch, batch_size, cache_len):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda: lm.init_cache(cfg, batch_size, cache_len))
+    specs = cache_specs(cfg, shapes, AXES, batch_size=batch_size)
+
+    def check(path, leaf, spec):
+        for dim, s in zip(leaf.shape, spec):
+            if s is None:
+                continue
+            axes = (s,) if isinstance(s, str) else s
+            prod = 1
+            for a in axes:
+                prod *= AXES[a]
+            assert dim % prod == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)

@@ -1,0 +1,54 @@
+"""End-to-end behaviour of the paper's system: FedS3A trains to high accuracy
+on non-IID clients, halves the communication, and the semi-async scheduler's
+round efficiency beats synchronous FL."""
+import numpy as np
+import pytest
+
+from repro.core import FedAvgSSL, FedS3AConfig, FedS3ATrainer
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("basic", scale=0.006, seed=0)
+
+
+@pytest.fixture(scope="module")
+def feds3a_result(data):
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=6, seed=0))
+    res = tr.train()
+    res["trainer"] = tr
+    return res
+
+
+def test_feds3a_reaches_paper_accuracy_regime(feds3a_result):
+    """Headline claim: >98% accuracy even on non-IID data (we accept >95%
+    at this reduced scale/rounds)."""
+    assert feds3a_result["metrics"]["accuracy"] > 0.95
+
+
+def test_sparse_comm_halves_traffic(feds3a_result):
+    """Paper: communication cost reduced by >50% (ACO ~0.49)."""
+    assert feds3a_result["aco"] < 0.55
+
+
+def test_round_efficiency_beats_synchronous(data, feds3a_result):
+    """ART(FedS3A, C=0.6) < ART(synchronous FedAvg-All): the server never
+    waits for the slowest client."""
+    sync = FedAvgSSL(data, FedS3AConfig(rounds=2, seed=0), mode="all")
+    res = sync.train()
+    assert feds3a_result["art"] < res["art"]
+
+
+def test_participation_matrix_consistent(feds3a_result):
+    tr = feds3a_result["trainer"]
+    part = tr.participation
+    assert part.shape[0] == 6
+    assert np.all(part.sum(axis=1) == 6)      # ceil(0.6 * 10) per round
+
+
+def test_staleness_never_exceeds_tau_plus_one(feds3a_result):
+    tr = feds3a_result["trainer"]
+    for log in tr.logs:
+        for s in log.stalenesses.values():
+            assert s <= tr.cfg.tau + 1
