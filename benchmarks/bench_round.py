@@ -1,0 +1,145 @@
+"""Round-engine benchmark: batched vs sequential FedS3A round loop.
+
+Measures steady-state per-round wall time of the two round engines on the
+SAME schedule/seed, interleaving their rounds (A/B/A/B...) so machine noise
+hits both alike, and reports medians. Warm-up rounds absorb XLA compilation.
+
+Fast mode is an *engine* benchmark: M=10 clients, 5 timed rounds, a
+reduced-width CNN (same architecture as the paper's §V-B net) and small
+per-client datasets, so per-round wall time is dominated by the round
+machinery the batched engine eliminates — per-client dispatch, per-message
+encode chains and host syncs — rather than by GEMMs that are identical in
+both engines. --full times the paper-size CNN as well (the compute-bound
+regime, where the engines are expected to roughly tie on CPU).
+
+Also verifies parity (same accuracy / ACO / participation from the same
+seed) and writes machine-readable results to BENCH_round.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_round            # fast mode
+  PYTHONPATH=src python -m benchmarks.bench_round --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.feds3a_cnn import CNNConfig
+from repro.core import FedS3AConfig, FedS3ATrainer
+from repro.data import make_dataset
+
+# reduced-width instance of the paper's CNN for the engine-dominated regime
+BENCH_CNN = CNNConfig(name="feds3a-cnn-bench", conv_filters=(8, 8), hidden=16)
+
+FAST_CASE = dict(name="engine(bench-cnn)", scale=0.0015, cnn=BENCH_CNN,
+                 C=0.8, batch_size=50)
+FULL_CASE = dict(name="paper-cnn", scale=0.006, cnn=None, C=0.6,
+                 batch_size=100)
+
+
+def _sync(tr):
+    jax.block_until_ready(tr._global_flat if tr.batched
+                          else tr.global_params)
+
+
+def bench_case(*, name, scale, cnn, C, batch_size, rounds=5, warmup=3,
+               seed=0):
+    data = make_dataset("basic", scale=scale, seed=seed)
+
+    def mk(batched):
+        return FedS3ATrainer(data, FedS3AConfig(
+            rounds=rounds + warmup, seed=seed, batched=batched, cnn=cnn,
+            C=C, batch_size=batch_size))
+
+    seq, bat = mk(False), mk(True)
+    for _ in range(warmup):
+        seq.run_round()
+        bat.run_round()
+    _sync(seq), _sync(bat)
+
+    seq_t, bat_t = [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        seq.run_round()
+        _sync(seq)
+        seq_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bat.run_round()
+        _sync(bat)
+        bat_t.append(time.perf_counter() - t0)
+
+    m_seq, m_bat = seq.evaluate(), bat.evaluate()
+    res = {
+        "case": name,
+        "clients": seq.M,
+        "rounds_timed": rounds,
+        "sequential_s_per_round": float(np.median(seq_t)),
+        "batched_s_per_round": float(np.median(bat_t)),
+        "speedup": float(np.median(seq_t) / np.median(bat_t)),
+        "parity": {
+            "accuracy_sequential": m_seq["accuracy"],
+            "accuracy_batched": m_bat["accuracy"],
+            "aco_sequential": seq.comm.aco,
+            "aco_batched": bat.comm.aco,
+            "participation_identical": bool(
+                np.array_equal(seq.participation, bat.participation)),
+        },
+    }
+    return res
+
+
+def run(mode, out, json_path="BENCH_round.json"):
+    """Benchmark table hook (same shape as the tableXX modules)."""
+    cases = [FAST_CASE] if mode.get("scenarios") == ("basic",) \
+        else [FAST_CASE, FULL_CASE]
+    results = [bench_case(**c) for c in cases]
+    for r in results:
+        line = (f"round-engine {r['case']:20s} "
+                f"seq {r['sequential_s_per_round']*1e3:8.1f} ms/round  "
+                f"batched {r['batched_s_per_round']*1e3:8.1f} ms/round  "
+                f"speedup {r['speedup']:.2f}x  parity "
+                f"{'ok' if r['parity']['participation_identical'] else 'FAIL'}")
+        print(line)
+        out.append(f"round,{r['case']},batched_vs_sequential,"
+                   f"{r['parity']['accuracy_batched']:.4f},,,,,"
+                   f",{r['parity']['aco_batched']:.3f},"
+                   f"{r['batched_s_per_round']:.3f}")
+    with open(json_path, "w") as f:
+        json.dump({"results": results}, f, indent=2)
+    print(f"JSON -> {json_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also time the paper-size CNN (compute-bound)")
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--json", default="BENCH_round.json")
+    args = ap.parse_args()
+
+    cases = [FAST_CASE] + ([FULL_CASE] if args.full else [])
+    results = []
+    for c in cases:
+        c = dict(c)
+        r = bench_case(**c, rounds=args.rounds)
+        results.append(r)
+        print(f"{r['case']}: sequential "
+              f"{r['sequential_s_per_round']*1e3:.1f} ms/round, batched "
+              f"{r['batched_s_per_round']*1e3:.1f} ms/round -> "
+              f"{r['speedup']:.2f}x speedup "
+              f"(parity: acc {r['parity']['accuracy_batched']:.4f} vs "
+              f"{r['parity']['accuracy_sequential']:.4f}, aco "
+              f"{r['parity']['aco_batched']:.3f} vs "
+              f"{r['parity']['aco_sequential']:.3f}, participation "
+              f"{'identical' if r['parity']['participation_identical'] else 'DIFFERS'})")
+    with open(args.json, "w") as f:
+        json.dump({"results": results}, f, indent=2)
+    print(f"JSON -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

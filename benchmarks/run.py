@@ -1,19 +1,20 @@
 """Benchmark aggregator — one module per paper table (V-XII), plus kernel
-microbenchmarks and the roofline summary.
+microbenchmarks, the round-engine benchmark and the roofline summary.
 
   PYTHONPATH=src python -m benchmarks.run            # fast mode
   PYTHONPATH=src python -m benchmarks.run --full     # paper-resolution
   PYTHONPATH=src python -m benchmarks.run --only T5,T12
+  PYTHONPATH=src python -m benchmarks.run --json     # + machine-readable dump
 """
 import argparse
 import sys
 import time
 
-from benchmarks import (bench_kernels, bench_roofline, table05_staleness_fns,
-                        table06_round_weight_fns, table07_staleness_tolerance,
-                        table08_participation, table09_server_data,
-                        table10_group_agg, table11_dynamic_weight,
-                        table12_comparison)
+from benchmarks import (bench_kernels, bench_roofline, bench_round,
+                        table05_staleness_fns, table06_round_weight_fns,
+                        table07_staleness_tolerance, table08_participation,
+                        table09_server_data, table10_group_agg,
+                        table11_dynamic_weight, table12_comparison)
 from benchmarks.common import CSV_HEADER, FAST, FULL
 
 TABLES = {
@@ -26,6 +27,7 @@ TABLES = {
     "T11": table11_dynamic_weight,
     "T12": table12_comparison,
     "kernels": bench_kernels,
+    "round": bench_round,
     "roofline": bench_roofline,
 }
 
@@ -36,6 +38,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated table ids (e.g. T5,T12,kernels)")
     ap.add_argument("--csv", default="results/benchmarks.csv")
+    ap.add_argument("--json", action="store_true",
+                    help="also dump machine-readable results (CSV rows as "
+                         "JSON records next to --csv; bench_round always "
+                         "writes BENCH_round.json)")
     args = ap.parse_args()
 
     mode = FULL if args.full else FAST
@@ -58,6 +64,23 @@ def main() -> None:
         with open(args.csv, "w") as f:
             f.write("\n".join(out) + "\n")
         print(f"CSV -> {args.csv}")
+    if args.json:
+        import json
+        import os
+        header = out[0].split(",")
+        records = []
+        for row in out[1:]:
+            vals = row.split(",")
+            if len(vals) == len(header):
+                records.append(dict(zip(header, vals)))
+            else:   # kern/roofline rows use their own layouts
+                records.append({"table": vals[0], "raw": row})
+        json_path = (os.path.splitext(args.csv)[0] + ".json") if args.csv \
+            else "results/benchmarks.json"
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"JSON -> {json_path}")
     print(f"total {time.time()-t0:.0f}s")
 
 

@@ -145,8 +145,16 @@ def _parse_computations(text):
             out_elems = 1
             for d in out_dims:
                 out_elems *= d
-            lhs_name = rest.split(",")[0].strip().lstrip("(")
-            lhs_dims = _array_dims(symbols.get(lhs_name, "")) or []
+            # operands may carry inline types (newer XLA: "dot(f32[a,b]{1,0}
+            # %lhs, ...)") or be bare symbols (older: "dot(%lhs, %rhs)")
+            om = re.match(
+                r"\(?\s*(?:([a-z]+[0-9]*[a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)"
+                r"\s+)?(%[\w.\-]+)", rest)
+            if om and om.group(1):
+                lhs_dims = _array_dims(om.group(1)) or []
+            else:
+                lhs_name = om.group(2) if om else ""
+                lhs_dims = _array_dims(symbols.get(lhs_name, "")) or []
             cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", stripped)
             contract = 1
             if cm and lhs_dims:

@@ -30,6 +30,61 @@ def _weighted_sum_trees(trees, weights, *, use_kernel=False):
     return jax.tree.map(lambda a, b: a.astype(b.dtype), out, trees[0])
 
 
+def combine_weights(data_sizes, stalenesses, g_fn, groups=None):
+    """Fold Eq. 9/10 into ONE per-client weight vector.
+
+    Flat (Eq. 9): w_i ∝ |D_i| * g(s_i), normalized as in ``aggregate``.
+    Grouped (Eq. 10): w_i = (1/G) * |D_i| g(s_i) / sum_{j in group(i)} |D_j|
+    g(s_j) — the within-group weighted mean followed by the arithmetic mean
+    across groups collapses to a single weighted sum over clients, which is
+    what lets the batched engine aggregate the whole (K, N) delta stack in
+    one kernel pass.
+    """
+    data_sizes = np.asarray(data_sizes, dtype=np.float64)
+    g = np.array([g_fn(s) for s in stalenesses], dtype=np.float64)
+    if groups is None:
+        w = data_sizes * g
+        w = w / max(data_sizes.sum(), 1e-12)
+        return w / max(w.sum(), 1e-12)
+    groups = np.asarray(groups)
+    uniq = np.unique(groups)
+    w = np.zeros(len(data_sizes))
+    for gidx in uniq:
+        sel = groups == gidx
+        wg = data_sizes[sel] * g[sel]
+        w[sel] = wg / max(wg.sum(), 1e-12) / len(uniq)
+    return w
+
+
+@jax.jit
+def _blend_flat(server_flat, client_flat, w, f_weight):
+    unsup = jnp.einsum("k,kn->n", w, client_flat.astype(jnp.float32))
+    return f_weight * server_flat.astype(jnp.float32) + \
+        (1.0 - f_weight) * unsup
+
+
+@jax.jit
+def _blend_flat_kernel(server_flat, client_flat, w, f_weight):
+    unsup = kops.staleness_agg(client_flat, w)
+    return f_weight * server_flat.astype(jnp.float32) + \
+        (1.0 - f_weight) * unsup
+
+
+def aggregate_flat(server_flat, client_flat, *, data_sizes, stalenesses,
+                   g_fn, f_weight, groups=None, use_kernel=False):
+    """FedS3A global update on already-flattened stacks (the batched engine).
+
+    server_flat: (N,) supervised model; client_flat: (K, N) stacked uploaded
+    client models. Returns the new global model as an (N,) fp32 flat vector —
+    one jitted weighted-sum pass (Pallas staleness_agg when ``use_kernel``)
+    plus the f(r) blend, with no per-tree flatten/stack.
+    """
+    w = combine_weights(data_sizes, stalenesses, g_fn, groups)
+    blend = _blend_flat_kernel if use_kernel else _blend_flat
+    return blend(server_flat, client_flat, jnp.asarray(w, jnp.float32),
+                 jnp.float32(f_weight))
+
+
 def aggregate(server_params, client_params, *, data_sizes, stalenesses,
               g_fn, f_weight, groups=None, use_kernel=False):
     """FedS3A global update.

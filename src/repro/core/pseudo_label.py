@@ -85,6 +85,108 @@ def make_client_epoch(cfg, *, batch_size=100, threshold=0.95, l1=0.0,
     return run
 
 
+def _cnn_template(cfg):
+    """Leaf shapes/dtypes of one client's parameter tree (no allocation)."""
+    from repro.models.cnn import init_cnn
+    return jax.eval_shape(lambda k: init_cnn(cfg, k), jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=None)
+def make_batched_client_epoch(cfg, *, batch_size=100, threshold=0.95, l1=0.0,
+                              use_kernel=False, epochs=1):
+    """All participants' pseudo-label epochs in ONE jitted vmap-over-scan.
+
+    Client state arrives as a (K, N) flat stack (FedJAX ``for_each_client``
+    style, row i = client i's base params); unflatten to the stacked pytree,
+    the fresh zeroed Adam state, the vmapped per-client scan over batches,
+    and the final re-flatten all live inside the same jit, so one dispatch
+    trains every participant. Per-client learning rates (K,) and RNG keys
+    (K, 2) ride along as batched arrays.
+
+    Every client's data is padded to the same ``nb`` batches; a batch with
+    no valid sample is a true no-op (params, opt state and Adam ``t`` are
+    carried through unchanged), so a client padded from nb_i to nb batches
+    takes exactly the nb_i optimizer steps the sequential reference path
+    takes — bit-for-bit comparable modulo batched matmul reduction order.
+    """
+    from repro.core.sparse_comm import unflatten_like
+
+    template = _cnn_template(cfg)
+
+    @partial(jax.jit, static_argnames=("nb",))
+    def epoch(base_flat, x, valid, lrs, rngs, nb):
+        def one_client(flat, xc, vc, lr, rng):
+            xb = xc.reshape(nb, batch_size, -1)
+            vb = vc.reshape(nb, batch_size)
+            # Adam state stays flat too: elementwise updates are identical
+            # math leaf-by-leaf or on the concatenated vector, and the flat
+            # form is ~10 XLA ops per step instead of ~10 per leaf.
+            opt = {"m": jnp.zeros_like(flat), "v": jnp.zeros_like(flat),
+                   "t": jnp.zeros((), jnp.int32)}
+
+            def step(carry, inp):
+                flat, o, rng = carry
+                xi, vi = inp
+                rng, dr = jax.random.split(rng)
+
+                def live_step(_):
+                    def loss_fn(fp):
+                        pp = unflatten_like(fp, template)
+                        logits = cnn_forward(cfg, pp, xi, train=True, rng=dr)
+                        if use_kernel:
+                            loss, _ = kops.masked_pseudo_ce(logits, threshold)
+                        else:
+                            from repro.kernels.ref import masked_pseudo_ce_ref
+                            loss, _ = masked_pseudo_ce_ref(logits, threshold)
+                        return jnp.sum(loss * vi) / \
+                            jnp.maximum(jnp.sum(vi), 1.0)
+
+                    l, g = jax.value_and_grad(loss_fn)(flat)
+                    f2, o2 = adam_update(g, o, flat, lr=lr, l1=l1)
+                    return f2, o2, l
+
+                def dead_step(_):
+                    return flat, o, jnp.float32(0.0)
+
+                # all-padding batch -> true no-op. Under lax.map (CPU) the
+                # cond branches for real, so a client padded from nb_i to nb
+                # batches pays for exactly nb_i steps; under vmap it lowers
+                # to a select, which is still a correct no-op.
+                live = jnp.sum(vi) > 0
+                flat, o, l = jax.lax.cond(live, live_step, dead_step, None)
+                return (flat, o, rng), (l, live)
+
+            # Adam state persists across the client's E epochs, and the RNG
+            # restarts from the client key each epoch — both matching the
+            # sequential reference (_train_client re-invokes its epoch with
+            # the carried opt state and the same per-round key).
+            for _ in range(epochs):
+                (flat, opt, _), (losses, lives) = jax.lax.scan(
+                    step, (flat, opt, rng), (xb, vb))
+            return flat, jnp.sum(losses) / jnp.maximum(jnp.sum(lives), 1.0)
+
+        # Client-axis strategy: vmap on accelerators; on XLA:CPU batched
+        # GEMMs degrade superlinearly past K~4 (measured 2x at K=6), so we
+        # lower the client axis to lax.map (a scan over clients inside the
+        # same jitted call) there instead.
+        if jax.default_backend() == "cpu":
+            def all_clients(*args):
+                return jax.lax.map(lambda t: one_client(*t), args)
+        else:
+            def all_clients(*args):
+                return jax.vmap(one_client)(*args)
+
+        return all_clients(base_flat, x, valid, lrs, rngs)
+
+    def run(base_flat, x, valid, lrs, rngs):
+        """base_flat: (K, N); x: (K, nb*B, F); valid: (K, nb*B)."""
+        nb = x.shape[1] // batch_size
+        return epoch(base_flat, x, valid,
+                     jnp.asarray(lrs, jnp.float32), rngs, nb)
+
+    return run
+
+
 @functools.lru_cache(maxsize=None)
 def make_server_epoch(cfg, *, batch_size=100, l1=0.0):
     @partial(jax.jit, static_argnames=("nb",))
@@ -130,6 +232,65 @@ def make_server_epoch(cfg, *, batch_size=100, l1=0.0):
 
 
 @functools.lru_cache(maxsize=None)
+def make_server_epoch_flat(cfg, *, batch_size=100, l1=0.0):
+    """Flat-state twin of ``make_server_epoch`` for the batched engine.
+
+    Takes/returns the global model and the server's Adam state as flat
+    vectors (trees materialize only inside the loss), so the server step
+    composes with the flat round pipeline without per-round tree round
+    trips. Elementwise Adam math is identical leaf-by-leaf or flat, so this
+    matches the sequential server epoch to float reduction order.
+    """
+    from repro.core.sparse_comm import unflatten_like
+
+    template = _cnn_template(cfg)
+
+    @partial(jax.jit, static_argnames=("nb",))
+    def epoch(flat, opt, x, y, valid, lr, rng, nb):
+        xb = x.reshape(nb, batch_size, -1)
+        yb = y.reshape(nb, batch_size)
+        vb = valid.reshape(nb, batch_size)
+
+        def step(carry, inp):
+            flat, opt, rng = carry
+            xi, yi, vi = inp
+            rng, dr = jax.random.split(rng)
+
+            def loss_fn(fp):
+                p = unflatten_like(fp, template)
+                logits = cnn_forward(cfg, p, xi, train=True, rng=dr)
+                logp = jax.nn.log_softmax(logits, axis=-1)
+                ce = -jnp.take_along_axis(logp, yi[:, None], axis=-1)[:, 0]
+                return jnp.sum(ce * vi) / jnp.maximum(jnp.sum(vi), 1.0)
+
+            l, g = jax.value_and_grad(loss_fn)(flat)
+            flat, opt = adam_update(g, opt, flat, lr=lr, l1=l1)
+            return (flat, opt, rng), l
+
+        (flat, opt, _), losses = jax.lax.scan(step, (flat, opt, rng),
+                                              (xb, yb, vb))
+        return flat, opt, jnp.mean(losses)
+
+    def run(flat, opt, x_np, y_np, lr, rng):
+        import numpy as np
+        n = len(x_np)
+        nb = max((n + batch_size - 1) // batch_size, 1)
+        pad = nb * batch_size - n
+        if pad:
+            x = np.concatenate([x_np, np.zeros((pad, x_np.shape[1]),
+                                               x_np.dtype)])
+            y = np.concatenate([y_np, np.zeros(pad, y_np.dtype)])
+        else:
+            x, y = x_np, y_np
+        valid = np.concatenate([np.ones(n, np.float32),
+                                np.zeros(pad, np.float32)])
+        return epoch(flat, opt, jnp.asarray(x), jnp.asarray(y),
+                     jnp.asarray(valid), jnp.float32(lr), rng, nb)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
 def predict_fn(cfg):
     @jax.jit
     def predict(params, x):
@@ -146,3 +307,49 @@ def class_histogram(cfg):
         pred = jnp.argmax(cnn_forward(cfg, params, x), axis=-1)
         return jnp.bincount(pred, length=cfg.num_classes) / x.shape[0]
     return hist
+
+
+@functools.lru_cache(maxsize=None)
+def class_histogram_batch(cfg, *, batch_size=100):
+    """Batched ``class_histogram`` over padded per-client data.
+
+    flat: (K, N) stacked uploaded models; x: (K, nb*B, F); valid: (K, nb*B)
+    0/1 — padding rows are excluded from both the counts and the denominator,
+    so each row matches the sequential histogram on that client's unpadded
+    data. The forward runs chunk-by-chunk with all-padding chunks skipped
+    (a real branch under the CPU lax.map strategy).
+    """
+    from repro.core.sparse_comm import unflatten_stacked
+
+    template = _cnn_template(cfg)
+
+    def hist(p, x, valid):
+        xb = x.reshape(-1, batch_size, x.shape[-1])
+        vb = valid.reshape(-1, batch_size)
+
+        def step(acc, inp):
+            xi, vi = inp
+            counts = jax.lax.cond(
+                jnp.sum(vi) > 0,
+                lambda _: jnp.zeros(cfg.num_classes, jnp.float32)
+                .at[jnp.argmax(cnn_forward(cfg, p, xi), axis=-1)].add(vi),
+                lambda _: jnp.zeros(cfg.num_classes, jnp.float32), None)
+            return acc + counts, None
+
+        acc, _ = jax.lax.scan(step, jnp.zeros(cfg.num_classes, jnp.float32),
+                              (xb, vb))
+        return acc / jnp.maximum(jnp.sum(valid), 1.0)
+
+    if jax.default_backend() == "cpu":
+        def mapped(params, x, valid):
+            return jax.lax.map(lambda t: hist(*t), (params, x, valid))
+    else:
+        def mapped(params, x, valid):
+            return jax.vmap(hist)(params, x, valid)
+
+    @jax.jit
+    def run(flat, x, valid):
+        params = unflatten_stacked(flat, template)
+        return mapped(params, x, valid)
+
+    return run

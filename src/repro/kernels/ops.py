@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.masked_pseudo_ce import masked_pseudo_ce_pallas
-from repro.kernels.sparse_delta import sparse_delta_pallas
+from repro.kernels.sparse_delta import (sparse_delta2d_pallas,
+                                        sparse_delta_pallas)
 from repro.kernels.staleness_agg import staleness_agg_pallas
 
 
@@ -64,6 +65,17 @@ def sparse_delta(x, threshold):
         x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
     masked, nnz = sparse_delta_pallas(x, threshold, interpret=_interpret())
     return masked[:n], nnz
+
+
+def sparse_delta_batch(x, thresholds):
+    """(K, N) stacked flat deltas x (K,) thresholds -> (masked (K, N),
+    per-512-block nnz (K, nblk)) in ONE kernel launch over a 2D grid."""
+    k, n = x.shape
+    pad = (-n) % 512
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((k, pad), x.dtype)], axis=1)
+    masked, nnz = sparse_delta2d_pallas(x, thresholds, interpret=_interpret())
+    return masked[:, :n], nnz
 
 
 def staleness_agg(deltas, weights):

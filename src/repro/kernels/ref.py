@@ -50,6 +50,21 @@ def sparse_delta_ref(x, threshold):
     return masked, nnz
 
 
+def sparse_delta2d_ref(x, thresholds):
+    """Batched §IV-F sparsification: one threshold per stacked client delta.
+
+    x: (K, N) stacked flat deltas; thresholds: (K,). Returns
+    (masked (K, N), nnz_per_block (K, N//512) int32), block size 512.
+    """
+    blk = 512
+    K, n = x.shape
+    assert n % blk == 0
+    keep = jnp.abs(x) >= thresholds.reshape(K, 1)
+    masked = jnp.where(keep, x, 0).astype(x.dtype)
+    nnz = keep.reshape(K, n // blk, blk).sum(axis=2).astype(jnp.int32)
+    return masked, nnz
+
+
 def staleness_agg_ref(deltas, weights):
     """Paper Eq. 10 inner sum: staleness/size-weighted client aggregation.
 

@@ -5,13 +5,22 @@ pass over the flattened parameter delta. The count feeds the ACO metric
 (payload bytes / dense bytes) and the comm layer's compaction bookkeeping;
 unfused, XLA reads the delta twice (mask, then reduce).
 
-Grid: (N // 512,); block (1, 512) — 512 = 4 * 128 lanes.
+Two entry points share one kernel body:
 
-Oracle: kernels/ref.py::sparse_delta_ref.
+* ``sparse_delta2d_pallas`` — the batched-round form: a (K, N) stack of K
+  client deltas with a per-client threshold vector, masked and nnz-counted in
+  a single call on a 2D grid ``(K, N // 512)``. Thresholds are runtime
+  inputs (a (K, 1) block), so differing per-message quantile thresholds do
+  NOT retrigger compilation and never touch the host.
+* ``sparse_delta_pallas`` — the original single-delta form, now the K=1
+  special case.
+
+Grid: (K, N // 512); blocks (1, 512) — 512 = 4 * 128 lanes — with the
+threshold in a (1, 1) block per grid row.
+
+Oracle: kernels/ref.py::sparse_delta_ref / sparse_delta2d_ref.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -20,27 +29,47 @@ from jax.experimental import pallas as pl
 BLK = 512
 
 
-def _sparse_delta_kernel(x_ref, out_ref, nnz_ref, *, threshold):
+def _sparse_delta_kernel(x_ref, thr_ref, out_ref, nnz_ref):
     x = x_ref[...]                                   # (1, BLK)
-    keep = jnp.abs(x.astype(jnp.float32)) >= threshold
+    thr = thr_ref[0, 0]
+    keep = jnp.abs(x.astype(jnp.float32)) >= thr
     out_ref[...] = jnp.where(keep, x, 0).astype(out_ref.dtype)
-    nnz_ref[...] = jnp.sum(keep.astype(jnp.int32), axis=1)
+    nnz_ref[...] = jnp.sum(keep.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def sparse_delta2d_pallas(x, thresholds, *, interpret=True):
+    """x: (K, N) with N % 512 == 0; thresholds: (K,) runtime scalars.
+
+    Returns (masked (K, N), nnz (K, N//512) int32) — every client's delta is
+    masked against its own threshold in one kernel launch.
+    """
+    K, N = x.shape
+    assert N % BLK == 0, N
+    nblk = N // BLK
+    thresholds = jnp.asarray(thresholds, jnp.float32).reshape(K, 1)
+    masked, nnz = pl.pallas_call(
+        _sparse_delta_kernel,
+        grid=(K, nblk),
+        in_specs=[pl.BlockSpec((1, BLK), lambda k, j: (k, j)),
+                  pl.BlockSpec((1, 1), lambda k, j: (k, 0))],
+        out_specs=[pl.BlockSpec((1, BLK), lambda k, j: (k, j)),
+                   pl.BlockSpec((1, 1), lambda k, j: (k, j))],
+        out_shape=[jax.ShapeDtypeStruct((K, N), x.dtype),
+                   jax.ShapeDtypeStruct((K, nblk), jnp.int32)],
+        interpret=interpret,
+    )(x, thresholds)
+    return masked, nnz
 
 
 def sparse_delta_pallas(x, threshold, *, interpret=True):
-    """x: (N,) with N % 512 == 0. Returns (masked (N,), nnz (N//512,) int32)."""
+    """x: (N,) with N % 512 == 0. Returns (masked (N,), nnz (N//512,) int32).
+
+    ``threshold`` may be a python float or a device scalar — it is a runtime
+    input either way (no recompile per distinct threshold).
+    """
     N = x.shape[0]
     assert N % BLK == 0, N
-    nblk = N // BLK
-    kernel = functools.partial(_sparse_delta_kernel, threshold=threshold)
-    masked, nnz = pl.pallas_call(
-        kernel,
-        grid=(nblk,),
-        in_specs=[pl.BlockSpec((1, BLK), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((1, BLK), lambda i: (i, 0)),
-                   pl.BlockSpec((1,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((nblk, BLK), x.dtype),
-                   jax.ShapeDtypeStruct((nblk,), jnp.int32)],
-        interpret=interpret,
-    )(x.reshape(nblk, BLK))
-    return masked.reshape(N), nnz
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1)
+    masked, nnz = sparse_delta2d_pallas(x.reshape(1, N), thr,
+                                        interpret=interpret)
+    return masked.reshape(N), nnz.reshape(-1)

@@ -22,6 +22,7 @@ from repro.analysis import roofline as RL                     # noqa: E402
 from repro.configs import INPUT_SHAPES, get_config, list_configs  # noqa: E402
 from repro.launch.mesh import make_production_mesh            # noqa: E402
 from repro.launch.specs import build_case                     # noqa: E402
+from repro.distributed.sharding import jit_shardings, use_mesh  # noqa: E402
 
 
 def run_one(arch, shape_name, *, multi_pod=False, fsdp=True, moe_impl="einsum",
@@ -35,8 +36,9 @@ def run_one(arch, shape_name, *, multi_pod=False, fsdp=True, moe_impl="einsum",
                       seq_parallel=seq_parallel, capacity_factor=capacity_factor,
                       serve_profile=serve_profile)
     t0 = time.time()
-    with jax.set_mesh(mesh):
-        jitted = jax.jit(case.step_fn, in_shardings=case.in_shardings)
+    with use_mesh(mesh):
+        jitted = jax.jit(case.step_fn,
+                         in_shardings=jit_shardings(mesh, case.in_shardings))
         lowered = jitted.lower(*case.args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -113,9 +115,9 @@ def run_fl(arch, *, multi_pod=False, num_clients=16, local_steps=4,
     step = make_fl_train_step(cfg, num_clients=num_clients, local_steps=local_steps,
                               keep_frac=keep_frac)
     t0 = time.time()
-    with jax.set_mesh(mesh):
-        lowered = jax.jit(step, in_shardings=(
-            pspecs, bspec, P("data"), P("data"), P("data"))).lower(
+    with use_mesh(mesh):
+        lowered = jax.jit(step, in_shardings=jit_shardings(mesh, (
+            pspecs, bspec, P("data"), P("data"), P("data")))).lower(
             params_shape, batch, mask, stal, sizes)
         compiled = lowered.compile()
     rl = RL.analyze(f"{arch}:fl_round", compiled, chips=mesh.devices.size,

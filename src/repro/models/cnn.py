@@ -38,6 +38,14 @@ def init_cnn(cfg: CNNConfig, rng):
     }
 
 
+def cnn_param_count(cfg: CNNConfig) -> int:
+    """Total parameter count of the CNN (shape math only, no allocation)."""
+    f1, f2 = cfg.conv_filters
+    K, n, h, c = cfg.conv_kernel, cfg.num_features, cfg.hidden, cfg.num_classes
+    return (K * 1 * f1 + f1) + (K * f1 * f2 + f2) + \
+        (n * f2 * h + h) + (h * c + c)
+
+
 def _conv1d(x, w, b):
     """x: (B, L, Cin); w: (K, Cin, Cout). SAME padding.
 

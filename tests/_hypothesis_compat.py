@@ -1,0 +1,75 @@
+"""Use real hypothesis when installed; otherwise a tiny deterministic shim.
+
+The shim covers exactly the subset this suite uses — ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)`` and the
+``integers`` / ``floats`` / ``lists`` / ``sampled_from`` / ``booleans``
+strategies — by drawing ``max_examples`` pseudo-random examples from a fixed
+seed. No shrinking, no database; it keeps the property tests running in
+environments without the dependency.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    import functools
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 16):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda r: r.choice(options))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda r: [elements.draw(r) for _ in
+                                        range(r.randint(min_size, max_size))])
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    import inspect
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # @settings may sit above or below @given
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                rnd = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rnd) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+
+__all__ = ["given", "settings", "st"]

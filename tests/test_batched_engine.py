@@ -1,0 +1,136 @@
+"""Batched round engine: parity with the sequential reference path, the
+2D-grid sparse-delta kernel, and the sync-free deferred ACO accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.feds3a_cnn import CNNConfig
+from repro.core import FedS3AConfig, FedS3ATrainer
+from repro.core.sparse_comm import (SparseComm, flatten_tree,
+                                    unflatten_stacked)
+from repro.data import make_dataset
+
+# reduced-width instance of the paper's CNN so the parity run is fast
+TEST_CNN = CNNConfig(name="feds3a-cnn-test", conv_filters=(8, 8), hidden=16)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("basic", scale=0.0015, seed=0)
+
+
+@pytest.fixture(scope="module")
+def both_engines(data):
+    out = {}
+    for batched in (False, True):
+        tr = FedS3ATrainer(data, FedS3AConfig(
+            rounds=4, seed=0, batched=batched, cnn=TEST_CNN))
+        res = tr.train()
+        out[batched] = (tr, res)
+    return out
+
+
+def test_parity_metrics(both_engines):
+    """Same seed -> identical final metrics from either engine."""
+    (_, seq), (_, bat) = both_engines[False], both_engines[True]
+    for k in seq["metrics"]:
+        assert abs(seq["metrics"][k] - bat["metrics"][k]) < 1e-5, k
+
+
+def test_parity_aco(both_engines):
+    """ACO agrees between engines. The engines run identical math but not
+    identical float reduction orders, so a few delta elements sitting
+    exactly at the sampled quantile threshold can flip — that bounds the
+    drift at ~1e-3 relative, far inside the paper-level signal (~0.49)."""
+    (_, seq), (_, bat) = both_engines[False], both_engines[True]
+    assert abs(seq["aco"] - bat["aco"]) < 2e-3
+    # NOTE: after only 1-2 Adam steps the delta magnitudes are nearly
+    # uniform (sign-like first updates), so the kept fraction runs high at
+    # this toy scale; the paper-regime ~0.49 assertion lives in test_system.
+    assert 0.2 < bat["aco"] < 0.75
+
+
+def test_parity_participation_and_logs(both_engines):
+    (trs, _), (trb, _) = both_engines[False], both_engines[True]
+    assert np.array_equal(trs.participation, trb.participation)
+    for ls, lb in zip(trs.logs, trb.logs):
+        assert ls.participants == lb.participants
+        assert ls.stalenesses == lb.stalenesses
+        assert ls.forced == lb.forced
+        assert ls.time == lb.time
+
+
+def test_auto_engine_selection(data):
+    """batched=None: sequential for the paper CNN on CPU, batched for small
+    models; explicit flags always win."""
+    on_cpu = jax.default_backend() == "cpu"
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1))
+    assert tr.batched == (not on_cpu)
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, cnn=TEST_CNN))
+    assert tr.batched is True
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=False,
+                                          cnn=TEST_CNN))
+    assert tr.batched is False
+
+
+# --- sync-free batched comm ------------------------------------------------
+def test_encode_batch_no_host_sync(rng):
+    """encode_batch returns device values only and defers ACO accounting —
+    no int()/float() materialization per message."""
+    comm = SparseComm("p0.2", use_kernel=False)
+    flat = jax.random.normal(rng, (4, 4096))
+    masked, stats = comm.encode_batch(flat, jnp.zeros_like(flat))
+    assert isinstance(stats["nnz"], jax.Array)
+    assert comm._pending_payload and comm._payload_host == 0.0
+    # materializes only on read, then drains the pending list
+    aco = comm.aco
+    assert comm._pending_payload == []
+    kept = float(jnp.sum(stats["nnz"])) / flat.size
+    assert abs(aco - 2 * kept) < 1e-6
+    assert abs(kept - 0.2) < 0.1
+
+
+def test_encode_batch_matches_sequential_encode(rng):
+    """Row i of the batched encode == the sequential encode of tree i."""
+    tree = {"a": jax.random.normal(rng, (64, 9)),
+            "b": jax.random.normal(jax.random.fold_in(rng, 1), (33,))}
+    base = jax.tree.map(jnp.zeros_like, tree)
+    seq = SparseComm("p0.3", use_kernel=False)
+    delta_tree, stats = seq.encode(tree, base)
+    bat = SparseComm("p0.3", use_kernel=False)
+    flat = flatten_tree(tree)
+    masked, bstats = bat.encode_batch(flat[None], jnp.zeros_like(flat)[None])
+    np.testing.assert_allclose(np.asarray(masked[0]),
+                               np.asarray(flatten_tree(delta_tree)))
+    assert int(bstats["nnz"][0]) == int(stats["nnz"])
+    assert abs(seq.aco - bat.aco) < 1e-9
+
+
+def test_error_feedback_batch_roundtrip(rng):
+    """Batched EF: repeated transmission of the same target converges."""
+    comm = SparseComm("p0.3", use_kernel=False)
+    target = jax.random.normal(rng, (2, 2048))
+    recon = jnp.zeros_like(target)
+    residual = jnp.zeros_like(target)
+    for _ in range(12):
+        masked, _, residual = comm.encode_batch(target, recon,
+                                                residual_flat=residual)
+        recon = recon + masked
+    assert float(jnp.abs(recon - target).max()) < 1e-4
+
+
+# --- stacked flatten/unflatten helpers -------------------------------------
+def test_unflatten_stacked_roundtrip(rng):
+    tree = {"a": jax.random.normal(rng, (5, 3)),
+            "b": jax.random.normal(jax.random.fold_in(rng, 1), (7,))}
+    from repro.core.sparse_comm import flatten_stacked, stack_trees
+    stacked = stack_trees([tree, jax.tree.map(lambda x: 2 * x, tree)])
+    flat = flatten_stacked(stacked)
+    assert flat.shape == (2, 22)
+    np.testing.assert_allclose(np.asarray(flat[0]),
+                               np.asarray(flatten_tree(tree)))
+    back = unflatten_stacked(flat, tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(back[k][0]),
+                                   np.asarray(tree[k]))

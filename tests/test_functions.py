@@ -2,8 +2,7 @@
 properties — hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.functions import (adaptive_learning_rates, round_weight_fn,
                                   staleness_fn, supervised_weight)

@@ -67,6 +67,30 @@ def test_sparse_delta_sweep(n, thr, rng):
     np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
 
 
+@pytest.mark.parametrize("K,n", [(1, 512), (4, 2048), (7, 1000)])
+def test_sparse_delta_2d_sweep(K, n, rng):
+    """2D grid (clients, N//512): per-client thresholds, one kernel call."""
+    x = jax.random.normal(rng, (K, n))
+    thr = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 1), (K,))) * 0.5
+    masked, nnz = ops.sparse_delta_batch(x, thr)
+    pad = (-n) % 512
+    xr = jnp.concatenate([x, jnp.zeros((K, pad))], axis=1) if pad else x
+    rmasked, rnnz = R.sparse_delta2d_ref(xr, thr)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(rmasked[:, :n]))
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
+
+
+def test_sparse_delta_2d_matches_per_row_1d(rng):
+    """Each row of the 2D kernel equals the 1D kernel on that row."""
+    x = jax.random.normal(rng, (3, 1024))
+    thr = jnp.asarray([0.2, 0.8, 1.5])
+    masked2, nnz2 = ops.sparse_delta_batch(x, thr)
+    for i in range(3):
+        m1, n1 = ops.sparse_delta(x[i], float(thr[i]))
+        np.testing.assert_allclose(np.asarray(masked2[i]), np.asarray(m1))
+        np.testing.assert_array_equal(np.asarray(nnz2[i]), np.asarray(n1))
+
+
 @pytest.mark.parametrize("K,n", [(3, 512), (10, 2048), (6, 1000)])
 def test_staleness_agg_sweep(K, n, rng):
     d = jax.random.normal(rng, (K, n))

@@ -1,8 +1,7 @@
 """Sharding rule properties: pjit argument specs must always divide dims."""
 import jax
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.distributed.sharding import _fit, cache_specs, param_specs
