@@ -1,0 +1,157 @@
+"""Fleet-scale benchmark: the sharded round engine vs fleet size and devices.
+
+Measures steady-state rounds/sec and bytes-on-wire of the sharded fleet
+engine over K ∈ {8, 64, 512, 2048} clients and a sweep of device counts.
+The device count is baked into the XLA client at process start
+(``--xla_force_host_platform_device_count``), so the driver re-launches
+itself as one worker subprocess per device count and aggregates their
+reports into BENCH_fleet.json.
+
+Per (K, D) cell: a ``make_fleet_dataset`` federation (Table III rows tiled
+cyclically with per-client size jitter), the reduced-width bench CNN, one
+warm-up round absorbing XLA compilation, then ``--rounds`` timed rounds.
+Bytes-on-wire comes from the SparseComm deferred ACO counters (payload and
+dense bytes per round, both directions).
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: 2 rounds,
+                                                             # K<=64, D in {1,4}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+FULL_CLIENTS = (8, 64, 512, 2048)
+SMOKE_CLIENTS = (8, 64)
+FULL_DEVICES = (1, 2, 4)
+SMOKE_DEVICES = (1, 4)
+
+
+def bench_cell(num_clients, *, rounds, seed=0):
+    """One (K, current-device-count) measurement. Import jax lazily so the
+    driver process never initializes an XLA client."""
+    import jax
+    import numpy as np
+
+    from repro.configs.feds3a_cnn import CNNConfig
+    from repro.core import FedS3AConfig, FedS3ATrainer
+    from repro.data import make_fleet_dataset
+
+    warmup = 3                             # distinct distribution-target
+    cnn = CNNConfig(name="feds3a-cnn-fleet", conv_filters=(8, 8), hidden=16)
+    data = make_fleet_dataset(num_clients, scale=0.0008, seed=seed)
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=rounds + warmup, seed=seed, engine="sharded", cnn=cnn,
+        C=0.5, batch_size=50))
+
+    for _ in range(warmup):                # shapes retrace the first rounds
+        tr.run_round()
+    jax.block_until_ready(tr._global_flat)
+    payload0, dense0 = tr.comm.payload_bytes, tr.comm.dense_bytes
+
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        tr.run_round()
+    jax.block_until_ready(tr._global_flat)
+    elapsed = time.perf_counter() - t0
+
+    return {
+        "clients": num_clients,
+        "devices": len(jax.devices()),
+        "participants_per_round": tr.scheduler.k,
+        "rounds_timed": rounds,
+        "s_per_round": elapsed / rounds,
+        "rounds_per_sec": rounds / elapsed,
+        "payload_bytes_per_round": (tr.comm.payload_bytes - payload0) / rounds,
+        "dense_bytes_per_round": (tr.comm.dense_bytes - dense0) / rounds,
+        "aco": tr.comm.aco,
+        "final_accuracy": float(tr.evaluate()["accuracy"]),
+    }
+
+
+def worker(args):
+    results = [bench_cell(k, rounds=args.rounds, seed=args.seed)
+               for k in args.clients]
+    with open(args.out, "w") as f:
+        json.dump(results, f)
+
+
+def driver(args):
+    # one subprocess per (K, D) cell: the device count is frozen at XLA
+    # client init, and sharing a process between cells contaminates the
+    # timings (measured 4-5x on the later cell — lingering executables and
+    # allocator state), so every cell gets a pristine runtime
+    results = []
+    for d in args.devices:
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if "--xla_force_host_platform_device_count" not in f]
+        env["XLA_FLAGS"] = " ".join(
+            flags + [f"--xla_force_host_platform_device_count={d}"])
+        for k in args.clients:
+            out = f".bench_fleet_worker_{d}_{k}.json"
+            cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
+                   "--worker", "--out", out, "--rounds", str(args.rounds),
+                   "--seed", str(args.seed), "--clients", str(k)]
+            print(f"[bench_fleet] K={k} devices={d}", flush=True)
+            subprocess.run(cmd, env=env, check=True)
+            with open(out) as f:
+                results.extend(json.load(f))
+            os.remove(out)
+
+    for r in results:
+        print(f"  K={r['clients']:5d} D={r['devices']} "
+              f"{r['rounds_per_sec']:7.3f} rounds/s "
+              f"({r['s_per_round']*1e3:8.1f} ms/round)  "
+              f"wire {r['payload_bytes_per_round']/1e6:8.2f} MB/round "
+              f"(aco {r['aco']:.3f})")
+    # scaling summary: rounds/sec at each K, normalized to the 1-device run
+    summary = {}
+    for r in results:
+        summary.setdefault(r["clients"], {})[r["devices"]] = \
+            r["rounds_per_sec"]
+    scaling = {
+        str(k): {str(d): v / by_d[min(by_d)] for d, v in sorted(by_d.items())}
+        for k, by_d in summary.items()}
+    with open(args.json, "w") as f:
+        json.dump({"results": results, "speedup_vs_min_devices": scaling},
+                  f, indent=2)
+    print(f"JSON -> {args.json}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 2 rounds, K<=64, devices {1,4}")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--clients", type=lambda s: tuple(
+        int(x) for x in s.split(",")), default=None)
+    ap.add_argument("--devices", type=lambda s: tuple(
+        int(x) for x in s.split(",")), default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_fleet.json")
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    if args.clients is None:
+        args.clients = SMOKE_CLIENTS if args.smoke else FULL_CLIENTS
+    if args.devices is None:
+        args.devices = SMOKE_DEVICES if args.smoke else FULL_DEVICES
+    if args.rounds is None:
+        args.rounds = 2 if args.smoke else 5
+
+    if args.worker:
+        worker(args)
+    else:
+        driver(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,32 @@
 basic (non-IID) scenario and print per-round metrics.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Choosing an engine
+------------------
+``FedS3AConfig(engine=...)`` selects how a round is executed; all three
+engines run the same algorithm (the parity suite pins them together):
+
+* ``engine="sequential"`` — one client at a time; the reference
+  implementation. Best for debugging and for compute-bound CPU training of
+  large models, where batching buys nothing.
+* ``engine="batched"`` — all participants as a stacked (K, N) flat matrix,
+  one jitted call per round stage. Best on a single accelerator, or on CPU
+  when the model is small enough that round overhead dominates
+  (~3.5x per round measured).
+* ``engine="sharded"`` — the fleet engine: the (K, N) stacks are sharded
+  row-wise across all visible devices with shard_map over a ``clients``
+  mesh, the aggregation is one psum, and grouping runs a jitted on-device
+  k-means, so a round is device-resident end to end. Use it to simulate
+  thousands of clients; on a CPU-only host, launch with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get 8
+  simulated devices (see benchmarks/bench_fleet.py).
+* ``engine=None`` (default) — auto: on multi-device hosts the sharded
+  engine, on a single accelerator (or a single-device CPU host with a
+  small model) the batched engine, and for compute-bound CPU training of
+  larger models (>~300k params, e.g. the paper CNN) the sequential
+  reference regardless of device count — pass ``engine="sharded"``
+  explicitly to fleet-shard a large model on CPU.
 """
 from repro.core import FedS3AConfig, FedS3ATrainer
 from repro.data import make_dataset
@@ -17,7 +43,8 @@ def main():
     cfg = FedS3AConfig(rounds=8, C=0.6, tau=2)
     trainer = FedS3ATrainer(data, cfg)
     print(f"\nFedS3A: C={cfg.C} tau={cfg.tau} "
-          f"staleness={cfg.staleness_function} groups={cfg.num_groups}")
+          f"staleness={cfg.staleness_function} groups={cfg.num_groups} "
+          f"engine={trainer.engine} (auto)")
     for _ in range(cfg.rounds):
         log = trainer.run_round()
         m = trainer.evaluate()

@@ -39,11 +39,22 @@ def combine_weights(data_sizes, stalenesses, g_fn, groups=None):
     across groups collapses to a single weighted sum over clients, which is
     what lets the batched engine aggregate the whole (K, N) delta stack in
     one kernel pass.
+
+    Cold start: a participant set (or a whole group) whose combined
+    |D|*g(s) mass is zero — empty shards after dataset scaling, or g(s)
+    driven to 0 by extreme staleness — used to normalize to an all-zero
+    weight vector, which silently dropped those clients from the aggregate
+    and re-broadcast the supervised model scaled by f(r) alone (the global
+    model shrank toward the server model with no signal that anything was
+    wrong). Zero-mass sets now fall back to an explicit uniform weight so
+    every participant the scheduler admitted contributes.
     """
     data_sizes = np.asarray(data_sizes, dtype=np.float64)
     g = np.array([g_fn(s) for s in stalenesses], dtype=np.float64)
     if groups is None:
         w = data_sizes * g
+        if w.sum() <= 0.0:
+            return np.full(len(w), 1.0 / max(len(w), 1))
         w = w / max(data_sizes.sum(), 1e-12)
         return w / max(w.sum(), 1e-12)
     groups = np.asarray(groups)
@@ -52,8 +63,44 @@ def combine_weights(data_sizes, stalenesses, g_fn, groups=None):
     for gidx in uniq:
         sel = groups == gidx
         wg = data_sizes[sel] * g[sel]
-        w[sel] = wg / max(wg.sum(), 1e-12) / len(uniq)
+        if wg.sum() <= 0.0:
+            w[sel] = 1.0 / (sel.sum() * len(uniq))
+        else:
+            w[sel] = wg / wg.sum() / len(uniq)
     return w
+
+
+def combine_weights_device(size_g, groups, num_groups):
+    """On-device twin of ``combine_weights`` for the sharded fleet engine.
+
+    size_g: (K,) jnp — |D_i| * g(s_i) per participant (host-computable from
+    the scheduler, so it arrives as data); groups: (K,) int32 device array
+    (from ``grouping.kmeans_device``); num_groups: static int >= the number
+    of distinct labels. Returns the (K,) fp32 weight vector with the same
+    grouped normalization and uniform cold-start fallback as the host path,
+    computed entirely under jit — group count G counts non-empty groups only,
+    matching np.unique on the host.
+    """
+    size_g = jnp.asarray(size_g, jnp.float32)
+    K = size_g.shape[0]
+    onehot = jax.nn.one_hot(groups, num_groups, dtype=jnp.float32)  # (K, G)
+    cnt = onehot.sum(0)                                             # (G,)
+    mass = onehot.T @ size_g                                        # (G,)
+    G = jnp.maximum(jnp.sum(cnt > 0), 1).astype(jnp.float32)
+    per_group = jnp.where(
+        mass > 0,
+        size_g[:, None] * onehot / jnp.maximum(mass, 1e-30),
+        onehot / jnp.maximum(cnt, 1.0))                             # (K, G)
+    return per_group.sum(1) / G
+
+
+def combine_weights_flat_device(size_g):
+    """Flat (Eq. 9) device weights: normalize with uniform cold-start."""
+    size_g = jnp.asarray(size_g, jnp.float32)
+    total = jnp.sum(size_g)
+    K = size_g.shape[0]
+    return jnp.where(total > 0, size_g / jnp.maximum(total, 1e-30),
+                     jnp.full((K,), 1.0 / K, jnp.float32))
 
 
 @jax.jit
@@ -66,6 +113,28 @@ def _blend_flat(server_flat, client_flat, w, f_weight):
 @jax.jit
 def _blend_flat_kernel(server_flat, client_flat, w, f_weight):
     unsup = kops.staleness_agg(client_flat, w)
+    return f_weight * server_flat.astype(jnp.float32) + \
+        (1.0 - f_weight) * unsup
+
+
+def blend_flat_sharded(server_flat, client_flat_local, w_local, f_weight,
+                       *, axis_name, use_kernel=False):
+    """FedS3A global update inside a ``shard_map`` over the client axis.
+
+    Each shard holds a (K_local, N) slice of the uploaded client stack and
+    the matching (K_local,) slice of the combined Eq. 9/10 weights (pad rows
+    carry weight 0, so they vanish from the sum). The weighted reduction
+    runs locally — one ``staleness_agg`` kernel pass per shard when
+    ``use_kernel`` — and a single psum over ``axis_name`` produces the
+    replicated global weighted sum; every device then applies the f(r)
+    blend to its own copy. One collective per round, O(N) bytes.
+    """
+    if use_kernel:
+        partial_sum = kops.staleness_agg(client_flat_local, w_local)
+    else:
+        partial_sum = jnp.einsum("k,kn->n", w_local.astype(jnp.float32),
+                                 client_flat_local.astype(jnp.float32))
+    unsup = jax.lax.psum(partial_sum, axis_name)
     return f_weight * server_flat.astype(jnp.float32) + \
         (1.0 - f_weight) * unsup
 

@@ -2,20 +2,36 @@
 group-based staleness-weighted aggregation, adaptive learning rates and
 sparse-difference communication. Reproduces the paper's Tables V-XII.
 
-Two round engines share the scheduler/aggregation math:
+Three round engines share the scheduler/aggregation math, selected by
+``engine=`` (``"sequential" | "batched" | "sharded" | None``):
 
-* ``batched=True`` — client state lives as a stacked flat (client, param)
+* ``"sequential"`` — the original one-client-at-a-time loop, kept as the
+  reference implementation (the parity suite pins the others to it).
+* ``"batched"`` — client state lives as a stacked flat (client, param)
   matrix; every participant's pseudo-label epoch runs in ONE jitted call
   (client axis via vmap on accelerators, lax.map on CPU where XLA's batched
   GEMMs degrade), all upload deltas are thresholded/counted in one 2D-grid
   kernel launch with deferred on-device ACO accounting, and the stacked
   flat deltas feed the aggregation kernel directly. A handful of dispatches
   per round instead of dozens per client, zero per-message host syncs.
-* ``batched=False`` — the original one-client-at-a-time loop, kept as the
-  reference implementation (the parity test pins the two together).
-* ``batched=None`` (default) — auto: batched on accelerators and for small
-  models on CPU (round overhead dominates there, measured ~3.5x per round);
-  sequential for compute-bound CPU training where the engines tie.
+* ``"sharded"`` — the fleet engine: the batched engine's (K, N) client
+  stacks are sharded row-wise across devices with ``shard_map`` over a
+  ``clients`` mesh axis, so a multi-device host (or
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` on CPU) trains
+  D client shards concurrently. Per-client base/residual state lives in
+  (M, N) matrices gathered/scattered by participant index; aggregation is
+  one psum over the client axis; grouping runs the on-device jitted
+  k-means. The whole round is device-resident — zero host syncs (the
+  deferred ACO read excepted). K that does not divide the device count is
+  padded with zero-weight rows, sliced off before any accounting.
+* ``None`` (default) — auto: sharded whenever more than one device is
+  visible (and the model is small enough on CPU); batched on a single
+  accelerator or for small CPU models (round overhead dominates there,
+  measured ~3.5x per round); sequential for compute-bound single-device
+  CPU training where the engines tie.
+
+The legacy ``batched=True/False`` config flag maps onto
+``engine="batched"/"sequential"`` when ``engine`` is unset.
 """
 from __future__ import annotations
 
@@ -25,12 +41,14 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.feds3a_cnn import CONFIG as CNN_CONFIG
 from repro.core import aggregation as agg
 from repro.core.functions import (adaptive_learning_rates, round_weight_fn,
                                   staleness_fn, supervised_weight)
-from repro.core.grouping import group_clients
+from repro.core.grouping import group_clients, init_index, kmeans_device
 from repro.core.metrics import weighted_metrics
 from repro.core.pseudo_label import (class_histogram, class_histogram_batch,
                                      make_batched_client_epoch,
@@ -38,8 +56,45 @@ from repro.core.pseudo_label import (class_histogram, class_histogram_batch,
                                      make_server_epoch_flat, predict_fn)
 from repro.core.scheduler import SemiAsyncScheduler, paper_latency
 from repro.core.sparse_comm import SparseComm, flatten_tree, unflatten_like
+from repro.distributed.sharding import (CLIENT_AXIS, CLIENT_STACK_SPEC,
+                                        CLIENT_VEC_SPEC, REPLICATED_SPEC,
+                                        client_mesh, padded_rows)
 from repro.models.cnn import cnn_param_count, init_cnn
 from repro.optimizer import adam_init
+
+ENGINES = ("sequential", "batched", "sharded")
+
+# client-axis partition specs for the sharded round stages (short aliases
+# of the canonical specs in distributed.sharding)
+_ROW = CLIENT_VEC_SPEC                  # (K,) per-client scalars
+_ROW2 = CLIENT_STACK_SPEC               # (K, N) stacks / (K, 2) keys
+_ROW3 = P(CLIENT_AXIS, None, None)      # (K, nb*B, F) padded data
+_REP = REPLICATED_SPEC                  # replicated
+
+
+@jax.jit
+def _gather_rows(mat, idx):
+    """(M, N) state matrix -> (Kp, N) stacked rows for this round."""
+    return mat[idx]
+
+
+_scatter_jit = None
+
+
+def _scatter_rows(mat, idx, rows):
+    """Write updated per-client rows back into the (M, N) state matrix.
+
+    The caller always overwrites its reference with the result, so the
+    input buffer is donated where the backend supports it (not XLA:CPU,
+    which warns and ignores donation) — at fleet scale an undonated
+    scatter copies the whole (M, N) matrix per round. Built lazily so
+    importing this module never initializes the XLA client."""
+    global _scatter_jit
+    if _scatter_jit is None:
+        _scatter_jit = jax.jit(
+            lambda m, i, r: m.at[i].set(r),
+            donate_argnums=(0,) if jax.default_backend() != "cpu" else ())
+    return _scatter_jit(mat, idx, rows)
 
 
 @dataclass
@@ -64,10 +119,15 @@ class FedS3AConfig:
     error_feedback: bool = False         # beyond-paper: EF-sparsification
     l1: float = 1e-5                    # §IV-F L1 regularisation
     use_kernels: bool = False           # Pallas kernels (interpret on CPU)
-    batched: object = None              # batched round engine: True | False |
-                                        # None = auto (accelerators always;
-                                        # CPU when the model is small enough
-                                        # that round overhead dominates)
+    engine: object = None               # "sequential" | "batched" | "sharded"
+                                        # | None = auto (sharded on multi-
+                                        # device hosts, batched on a single
+                                        # accelerator / small CPU model,
+                                        # sequential for compute-bound
+                                        # single-device CPU training)
+    batched: object = None              # legacy alias: True/False map to
+                                        # engine="batched"/"sequential" when
+                                        # ``engine`` is unset
     cnn: object = None                  # CNNConfig override (None: paper §V-B)
     seed: int = 0
     latency_jitter: float = 0.05
@@ -90,17 +150,15 @@ class FedS3ATrainer:
         self.data = data
         self.M = len(data["clients"])
         self.cnn = self.cfg.cnn if self.cfg.cnn is not None else CNN_CONFIG
-        # auto engine selection: the batched engine wins where round
-        # overhead (dispatch, per-message passes, host syncs) dominates —
-        # always on accelerators, and on CPU for small models; compute-bound
-        # CPU training is a wash, so large CPU models keep the sequential
-        # reference unless asked for explicitly
-        if self.cfg.batched is None:
-            self.batched = (jax.default_backend() != "cpu"
-                            or cnn_param_count(self.cnn) <= 300_000)
-        else:
-            self.batched = bool(self.cfg.batched)
+        self.engine = self._select_engine()
+        # legacy attribute: any stacked-flat-state engine counts as batched
+        self.batched = self.engine != "sequential"
+        self.mesh = client_mesh() if self.engine == "sharded" else None
         self.rng = jax.random.PRNGKey(self.cfg.seed)
+
+        self._stage1_jits = {}      # sharded train+upload(+hist) stages
+        self._stage2_jits = {}      # sharded aggregate+distribute stages
+        self._groupw_jits = {}      # sharded on-device kmeans+weights
 
         self.client_epoch = make_client_epoch(
             self.cnn, batch_size=self.cfg.batch_size,
@@ -142,6 +200,33 @@ class FedS3ATrainer:
 
         self._init_models()
 
+    def _select_engine(self):
+        """Resolve cfg.engine / legacy cfg.batched to a concrete engine.
+
+        Auto (engine=None, batched=None): the stacked-flat engines win
+        wherever round overhead (dispatch, per-message passes, host syncs)
+        dominates — always on accelerators, and on CPU for small models;
+        compute-bound single-device CPU training keeps the sequential
+        reference. With more than one visible device the sharded fleet
+        engine takes over from batched (same math, client rows spread
+        across the mesh).
+        """
+        cfg = self.cfg
+        engine = cfg.engine
+        if engine is None and cfg.batched is not None:
+            engine = "batched" if cfg.batched else "sequential"
+        if engine is None:
+            stacked = (jax.default_backend() != "cpu"
+                       or cnn_param_count(self.cnn) <= 300_000)
+            if not stacked:
+                engine = "sequential"
+            else:
+                engine = "sharded" if len(jax.devices()) > 1 else "batched"
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES} or None, "
+                             f"got {engine!r}")
+        return engine
+
     def _build_padded_data(self):
         """Pad every client's data to a common batch count once, so the
         batched epoch indexes a fixed (M, nb*B, F) device stack per round."""
@@ -180,20 +265,31 @@ class FedS3ATrainer:
             # server Adam state carries over from the warmup, flattened once
             self.server_opt = {"m": flatten_tree(opt["m"]),
                                "v": flatten_tree(opt["v"]), "t": opt["t"]}
-            # per-client base params as flat (N,) device rows (initially all
-            # aliasing the warmed-up global model — JAX arrays are immutable);
-            # clients always start a round at their base model, so no
-            # per-client trees are kept at all. Rows rather than one (M, N)
-            # array so distribution replaces references instead of copying
-            # the whole fleet's parameters every round.
-            self._base_rows = [self._global_flat] * self.M
             self._base_version = np.zeros(self.M, dtype=int)
             self._key_jits = {}
             self._upload_jits = {}
             self._finalize_jit = None
-            if cfg.error_feedback:
-                zero = jnp.zeros_like(self._global_flat)
-                self._residual_rows = [zero] * self.M
+            if self.engine == "sharded":
+                # fleet layout: ONE (M, N) base matrix (and residual matrix
+                # under error feedback) so each round is a single gather of
+                # participant rows and a single scatter back — no per-row
+                # python traffic at thousand-client scale
+                self._base_mat = jnp.broadcast_to(
+                    self._global_flat, (self.M, self._global_flat.shape[0]))
+                if cfg.error_feedback:
+                    self._residual_mat = jnp.zeros_like(self._base_mat)
+            else:
+                # per-client base params as flat (N,) device rows (initially
+                # all aliasing the warmed-up global model — JAX arrays are
+                # immutable); clients always start a round at their base
+                # model, so no per-client trees are kept at all. Rows rather
+                # than one (M, N) array so distribution replaces references
+                # instead of copying the whole fleet's parameters every
+                # round.
+                self._base_rows = [self._global_flat] * self.M
+                if cfg.error_feedback:
+                    zero = jnp.zeros_like(self._global_flat)
+                    self._residual_rows = [zero] * self.M
         else:
             # per-client state: (params, opt, base_version, base_params)
             self.clients = []
@@ -248,7 +344,9 @@ class FedS3ATrainer:
 
     # ------------------------------------------------------------------
     def run_round(self):
-        if self.batched:
+        if self.engine == "sharded":
+            return self._run_round_sharded()
+        if self.engine == "batched":
             return self._run_round_batched()
         return self._run_round_sequential()
 
@@ -348,18 +446,17 @@ class FedS3ATrainer:
         self.rng, keys = fn(self.rng)
         return keys
 
-    def _upload_fn(self, with_residual, with_hist):
-        """encode (threshold/mask/count) + upload + histograms, one jit."""
-        key = (with_residual, with_hist)
-        fn = self._upload_jits.get(key)
-        if fn is not None:
-            return fn
+    def _encode_upload_body(self, with_residual, with_hist):
+        """Traced body shared by the batched jit and the sharded shard_map:
+        encode (threshold/mask/count) + upload + histograms on a (K, N)
+        stack (global for batched, the local shard for sharded — the encode
+        is per-row, so the same body serves both). Returns
+        (uploaded, nnz, hists|None, new_res|None)."""
         core = self.comm.batch_core(with_residual) if self.comm.enabled \
             else None
         hist = self.histogram_batch
 
-        @jax.jit
-        def fn(trained, base, xs, vs, residual=None):
+        def body(trained, base, xs, vs, residual=None):
             if core is None:
                 delta = trained - base
                 if with_residual:
@@ -376,7 +473,33 @@ class FedS3ATrainer:
             hists = hist(uploaded, xs, vs) if with_hist else None
             return uploaded, nnz, hists, new_res
 
-        self._upload_jits[key] = fn
+        return body
+
+    def _distribute_encode_body(self):
+        """Traced body shared by the batched jit and the sharded shard_map:
+        sparse-encode the new global model against the (T, N) distribution
+        target stack (per-row, so global and shard-local calls agree).
+        Returns (new_base, nnz)."""
+        core = self.comm.batch_core(False) if self.comm.enabled else None
+
+        def body(new_flat, dist_base):
+            g = jnp.broadcast_to(new_flat, dist_base.shape)
+            if core is None:
+                masked = g - dist_base
+                nnz = jnp.full((dist_base.shape[0],), new_flat.shape[0])
+            else:
+                masked, nnz = core(g, dist_base)
+            return dist_base + masked, nnz
+
+        return body
+
+    def _upload_fn(self, with_residual, with_hist):
+        """encode (threshold/mask/count) + upload + histograms, one jit."""
+        key = (with_residual, with_hist)
+        fn = self._upload_jits.get(key)
+        if fn is None:
+            fn = jax.jit(self._encode_upload_body(with_residual, with_hist))
+            self._upload_jits[key] = fn
         return fn
 
     def _finalize_fn(self):
@@ -384,8 +507,8 @@ class FedS3ATrainer:
         jit (retraces per (participants, targets) shape pair)."""
         if self._finalize_jit is not None:
             return self._finalize_jit
-        core = self.comm.batch_core(False) if self.comm.enabled else None
         use_kernel = self.cfg.use_kernels
+        distribute = self._distribute_encode_body()
 
         @jax.jit
         def fn(server_flat, uploaded, w, fw, dist_base):
@@ -395,13 +518,8 @@ class FedS3ATrainer:
             else:
                 unsup = jnp.einsum("k,kn->n", w, uploaded)
             new_flat = fw * server_flat + (1.0 - fw) * unsup
-            g = jnp.broadcast_to(new_flat, dist_base.shape)
-            if core is None:
-                masked = g - dist_base
-                nnz = jnp.full((dist_base.shape[0],), new_flat.shape[0])
-            else:
-                masked, nnz = core(g, dist_base)
-            return new_flat, dist_base + masked, nnz
+            new_base, nnz = distribute(new_flat, dist_base)
+            return new_flat, new_base, nnz
 
         self._finalize_jit = fn
         return fn
@@ -477,6 +595,177 @@ class FedS3ATrainer:
         self.comm.account_batch(nnz_d, n, len(targets))
         for row, i in enumerate(targets):
             self._base_rows[i] = new_base[row]
+        self._base_version[targets] = self.global_version
+        self._global_flat = new_flat
+        self._gp_tree = None      # materialized lazily on demand
+
+        return self._round_epilogue(prev_time, participants, stale, forced, t)
+
+    # ------------------------------------------------------------------
+    # sharded fleet engine: shard_map over the ``clients`` mesh axis
+    def _stage1_sharded(self, with_residual, with_hist):
+        """Train + upload-encode (+ pseudo-label histograms), one jitted
+        shard_map per participant-shape: each device trains its row shard
+        of the (Kp, N) stack and sparsifies the deltas against local
+        per-client quantile thresholds. Entirely client-local — the stage
+        has no collectives."""
+        key = (with_residual, with_hist)
+        fn = self._stage1_jits.get(key)
+        if fn is not None:
+            return fn
+        mesh = self.mesh
+        epoch = self.batched_epoch
+        encode_upload = self._encode_upload_body(with_residual, with_hist)
+        placeholder = jnp.zeros((), jnp.float32)       # shard_map needs
+                                                       # arrays, not Nones
+
+        def shard_fn(base, xs, vs, lrs, keys, residual):
+            trained, _ = epoch(base, xs, vs, lrs, keys)
+            uploaded, nnz, hists, new_res = encode_upload(
+                trained, base, xs, vs, residual if with_residual else None)
+            return (uploaded, nnz,
+                    hists if with_hist else placeholder,
+                    new_res if with_residual else placeholder)
+
+        out_specs = (_ROW2, _ROW,
+                     _ROW2 if with_hist else _REP,
+                     _ROW2 if with_residual else _REP)
+        fn = jax.jit(shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(_ROW2, _ROW3, _ROW2, _ROW, _ROW2,
+                      _ROW2 if with_residual else _REP),
+            out_specs=out_specs, check_rep=False))
+        self._stage1_jits[key] = fn
+        return fn
+
+    def _group_weights_sharded(self, K, num_groups, Kp):
+        """On-device grouping + Eq. 10 weights: jitted k-means over the
+        participants' pseudo-label histograms feeding the grouped weight
+        fold, padded to the sharded row count — the host sync the batched
+        engine pays for numpy k-means disappears."""
+        key = (K, num_groups, Kp)
+        fn = self._groupw_jits.get(key)
+        if fn is not None:
+            return fn
+        init_idx = init_index(K, self.cfg.seed)
+
+        @jax.jit
+        def fn(hists, size_g):
+            assign, _ = kmeans_device(hists[:K], num_groups,
+                                      init_idx=init_idx)
+            w = agg.combine_weights_device(size_g, assign, num_groups)
+            return jnp.zeros((Kp,), jnp.float32).at[:K].set(w)
+
+        self._groupw_jits[key] = fn
+        return fn
+
+    def _stage2_sharded(self):
+        """Aggregate + distribute under shard_map: the weighted client sum
+        is one psum over the client axis (pad rows carry weight zero), the
+        f(r) blend replicates, and each device sparsifies the distribution
+        deltas for its shard of the target rows."""
+        fn = self._stage2_jits.get("finalize")
+        if fn is not None:
+            return fn
+        mesh = self.mesh
+        use_kernel = self.cfg.use_kernels
+        distribute = self._distribute_encode_body()
+
+        def shard_fn(server_flat, uploaded, w, fw, dist_base):
+            new_flat = agg.blend_flat_sharded(
+                server_flat, uploaded, w, fw,
+                axis_name=CLIENT_AXIS, use_kernel=use_kernel)
+            new_base, nnz = distribute(new_flat, dist_base)
+            return new_flat, new_base, nnz
+
+        fn = jax.jit(shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(_REP, _ROW2, _ROW, _REP, _ROW2),
+            out_specs=(_REP, _ROW2, _ROW), check_rep=False))
+        self._stage2_jits["finalize"] = fn
+        return fn
+
+    def _run_round_sharded(self):
+        """One fleet round: gather participant rows, one sharded
+        train+upload stage, the replicated server epoch, on-device
+        grouping/weights, one sharded aggregate+distribute stage, scatter
+        the new base rows back. Zero per-round host syncs (the deferred
+        ACO read excepted); K is padded to the device count with
+        zero-weight rows that are sliced off before accounting."""
+        cfg = self.cfg
+        prev_time, participants, stale, forced, t, lrs = self._round_prologue()
+        r = self.global_version
+        part_ids = [run.client for run in participants]
+        K = len(part_ids)
+        D = self.mesh.devices.size
+        Kp = padded_rows(K, D)
+        pad = Kp - K
+
+        # same RNG stream as the sequential path: one split per REAL
+        # participant in arrival order, then the server's split
+        keys = self._split_keys(K)
+        idx = jnp.asarray(part_ids + part_ids[:1] * pad)
+        xs = self._x_pad[idx]
+        vs = self._valid_pad[idx]
+        if pad:
+            keys = jnp.concatenate([keys, jnp.zeros((pad,) + keys.shape[1:],
+                                                    keys.dtype)])
+            # pad rows see no valid samples -> their epoch is a pure no-op
+            vs = vs * jnp.asarray(
+                np.concatenate([np.ones(K, np.float32),
+                                np.zeros(pad, np.float32)]))[:, None]
+        lrs_p = jnp.asarray(np.concatenate([lrs[part_ids], np.zeros(pad)]),
+                            jnp.float32)
+        base = _gather_rows(self._base_mat, idx)
+        n = self._global_flat.shape[0]
+
+        with_hist = cfg.group_based and K > 1
+        stage1 = self._stage1_sharded(cfg.error_feedback, with_hist)
+        if cfg.error_feedback:
+            residual = _gather_rows(self._residual_mat, idx)
+            uploaded, nnz, hists_dev, new_res = stage1(
+                base, xs, vs, lrs_p, keys, residual)
+            self._residual_mat = _scatter_rows(
+                self._residual_mat, idx[:K], new_res[:K])
+        else:
+            uploaded, nnz, hists_dev, _ = stage1(
+                base, xs, vs, lrs_p, keys, jnp.zeros((), jnp.float32))
+        self.comm.account_batch(nnz[:K], n, K)
+
+        # server supervised epoch on the current global model (Eq. 6), in
+        # flat space; the RNG split order matches the sequential path
+        self.rng, k = jax.random.split(self.rng)
+        sp_flat, self.server_opt, _ = self.server_epoch_flat(
+            self._global_flat, self.server_opt,
+            self.data["server"]["x"], self.data["server"]["y"], cfg.lr, k)
+
+        sizes = [len(self.data["clients"][i]["x"]) for i in part_ids]
+        stales = [stale[i] for i in part_ids]
+        if with_hist:
+            size_g = np.asarray(sizes, np.float64) * \
+                np.array([self.g_fn(s) for s in stales])
+            w_pad = self._group_weights_sharded(
+                K, min(cfg.num_groups, K), Kp)(
+                    hists_dev, jnp.asarray(size_g, jnp.float32))
+        else:
+            w = agg.combine_weights(sizes, stales, self.g_fn, None)
+            w_pad = jnp.asarray(np.concatenate([w, np.zeros(pad)]),
+                                jnp.float32)
+
+        fw = supervised_weight(r, C=cfg.C, M=self.M,
+                               mode=cfg.supervised_weight_mode)
+        self.global_version += 1
+        # distribution: latest + deprecated clients get the new model
+        targets = sorted(set(part_ids) | set(forced))
+        T = len(targets)
+        Tp = padded_rows(T, D)
+        tidx = jnp.asarray(targets + targets[:1] * (Tp - T))
+        dist_base = _gather_rows(self._base_mat, tidx)
+        new_flat, new_base, nnz_d = self._stage2_sharded()(
+            sp_flat, uploaded, w_pad, jnp.float32(fw), dist_base)
+        self.comm.account_batch(nnz_d[:T], n, T)
+        self._base_mat = _scatter_rows(self._base_mat, tidx[:T],
+                                       new_base[:T])
         self._base_version[targets] = self.global_version
         self._global_flat = new_flat
         self._gp_tree = None      # materialized lazily on demand

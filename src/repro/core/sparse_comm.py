@@ -206,6 +206,12 @@ class SparseComm:
         use_kernel = self.use_kernel
 
         def encode(delta):
+            if use_kernel and frac is not None:
+                # fused per-shard form: local per-row quantile thresholds
+                # feed the 2D-grid kernel directly (one dispatch; safe
+                # under shard_map because thresholds are per-row)
+                masked, nnz_blocks, _ = kops.sparse_delta_topfrac(delta, frac)
+                return masked, jnp.sum(nnz_blocks, axis=1)
             if frac is not None:
                 thr = _sampled_quantile_batch(delta, 1.0 - frac)
             else:
@@ -268,7 +274,13 @@ class SparseComm:
         """The pure jitted encode pipeline (delta -> thresholds -> mask ->
         per-client nnz), for callers that fuse it into a larger jitted round
         stage. The caller owns accounting: pass the returned nnz to
-        ``account_batch``."""
+        ``account_batch``.
+
+        Shard-safe: thresholds are per-row statistics, so calling this
+        inside a ``shard_map`` over the client axis (each shard encoding
+        its local (K/D, N) rows) produces exactly the unsharded result —
+        the sharded fleet engine relies on this.
+        """
         return self._batch_core(with_residual)
 
     def account_batch(self, nnz, params_per_message, n_messages):

@@ -3,5 +3,6 @@ from repro.data.synthetic_cicids import (  # noqa: F401
     BASIC_SCENARIO,
     BALANCED_SCENARIO,
     make_dataset,
+    make_fleet_dataset,
     shannon_entropy,
 )

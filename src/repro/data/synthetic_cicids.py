@@ -102,8 +102,36 @@ def make_dataset(scenario="basic", *, scale=0.02, server_frac=0.05,
     model = _ClassModel(rng, separation=separation)
 
     counts = np.maximum((table * scale).astype(int), 0)
+    return _build_federation(counts, model, rng, server_frac, test_frac)
+
+
+def make_fleet_dataset(num_clients, *, scenario="basic", scale=0.001,
+                       jitter=0.3, server_frac=0.05, test_frac=0.1, seed=0,
+                       separation=8.0):
+    """Fleet-scale federation: ``num_clients`` clients whose class counts
+    tile the Table III rows cyclically, each scaled by ``scale`` and a
+    per-client uniform size jitter of ±``jitter`` — a heterogeneous IoT
+    fleet of arbitrary size with the paper's non-IID (or balanced) label
+    structure. Same return shape as ``make_dataset``. Keep ``scale`` small:
+    the fleet engine pads every client to the fleet-wide max batch count.
+    """
+    table = BASIC_SCENARIO if scenario == "basic" else BALANCED_SCENARIO
+    rng = np.random.default_rng(seed)
+    model = _ClassModel(rng, separation=separation)
+
+    rows = table[np.arange(num_clients) % len(table)]
+    factors = rng.uniform(1.0 - jitter, 1.0 + jitter, (num_clients, 1))
+    counts = np.maximum((rows * scale * factors).astype(int), 0)
+    # every client holds at least one sample of its majority class so no
+    # round sees an empty shard
+    empty = counts.sum(axis=1) == 0
+    counts[empty, np.argmax(rows[empty], axis=1)] = 1
+    return _build_federation(counts, model, rng, server_frac, test_frac)
+
+
+def _build_federation(counts, model, rng, server_frac, test_frac):
     clients = []
-    for i in range(table.shape[0]):
+    for i in range(counts.shape[0]):
         xs, ys = [], []
         for c in range(NUM_CLASSES):
             n = int(counts[i, c])

@@ -16,7 +16,8 @@ fall back to sequence sharding on a 16-way model axis.
 from __future__ import annotations
 
 import jax
-from jax.sharding import PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 
@@ -128,6 +129,45 @@ def _fit(spec_dims, shape, axis_sizes):
         else:
             out.append(tuple(kept))
     return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# client-axis mesh (the FedS3A fleet engine)
+# ---------------------------------------------------------------------------
+CLIENT_AXIS = "clients"
+
+# (K, N) flat client stacks: rows over devices, params replicated per row
+CLIENT_STACK_SPEC = P(CLIENT_AXIS, None)
+# (K,) per-client scalars (weights, thresholds, nnz)
+CLIENT_VEC_SPEC = P(CLIENT_AXIS)
+# replicated values (the global model, the supervised weight)
+REPLICATED_SPEC = P()
+
+
+def client_mesh(num_devices=None) -> Mesh:
+    """1D device mesh over the ``clients`` axis.
+
+    The fleet engine shards stacked per-client state (rows of the (K, N)
+    flat matrices) across devices; on a CPU host
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` provides D
+    simulated devices. A mesh of one device degenerates to the batched
+    engine's layout and is always valid.
+    """
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else min(num_devices, len(devs))
+    return Mesh(np.asarray(devs[:n]), (CLIENT_AXIS,))
+
+
+def padded_rows(k: int, num_shards: int) -> int:
+    """Smallest multiple of ``num_shards`` >= k (>= 1 shard row each).
+
+    shard_map input dims must divide the mesh axis exactly, so a round with
+    K participants on D devices runs on ceil(K/D)*D rows; the pad rows carry
+    zero validity masks / zero aggregation weight and are sliced off before
+    any accounting.
+    """
+    k = max(int(k), 1)
+    return ((k + num_shards - 1) // num_shards) * num_shards
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.masked_pseudo_ce import masked_pseudo_ce_pallas
 from repro.kernels.sparse_delta import (sparse_delta2d_pallas,
+                                        sparse_delta2d_quantile_pallas,
                                         sparse_delta_pallas)
 from repro.kernels.staleness_agg import staleness_agg_pallas
 
@@ -58,24 +59,26 @@ masked_pseudo_ce.defvjp(_mpce_fwd, _mpce_bwd)
 
 
 def sparse_delta(x, threshold):
-    """Flattened delta -> (masked delta, per-512-block nnz)."""
-    n = x.shape[0]
-    pad = (-n) % 512
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-    masked, nnz = sparse_delta_pallas(x, threshold, interpret=_interpret())
-    return masked[:n], nnz
+    """Flattened delta -> (masked delta, per-512-block nnz). Tail padding
+    (and its exclusion from the count) is handled inside the kernel wrapper."""
+    return sparse_delta_pallas(x, threshold, interpret=_interpret())
 
 
 def sparse_delta_batch(x, thresholds):
     """(K, N) stacked flat deltas x (K,) thresholds -> (masked (K, N),
-    per-512-block nnz (K, nblk)) in ONE kernel launch over a 2D grid."""
-    k, n = x.shape
-    pad = (-n) % 512
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((k, pad), x.dtype)], axis=1)
-    masked, nnz = sparse_delta2d_pallas(x, thresholds, interpret=_interpret())
-    return masked[:, :n], nnz
+    per-512-block nnz (K, nblk)) in ONE kernel launch over a 2D grid.
+
+    Shard-safe: under the fleet engine's ``shard_map`` the (K, N) stack is
+    the local client shard and the grid covers exactly its rows."""
+    return sparse_delta2d_pallas(x, thresholds, interpret=_interpret())
+
+
+def sparse_delta_topfrac(x, keep_frac):
+    """Fused per-shard top-|.| sparsification: per-row sampled-quantile
+    thresholds + 2D-grid mask/count, one dispatch. Returns
+    (masked (K, N), nnz (K, nblk), thresholds (K,))."""
+    return sparse_delta2d_quantile_pallas(x, keep_frac,
+                                          interpret=_interpret())
 
 
 def staleness_agg(deltas, weights):

@@ -38,30 +38,32 @@ def masked_pseudo_ce_ref(logits, threshold):
 def sparse_delta_ref(x, threshold):
     """Paper §IV-F: magnitude-threshold sparsification of a parameter delta.
 
-    x: (N,) flattened delta. Returns (masked (N,), nnz_per_block (nblk,))
-    with block size 512 (matches the kernel tiling).
+    x: (N,) flattened delta, any N. Returns (masked (N,),
+    nnz_per_block (ceil(N/512),)) with block size 512 (kernel tiling);
+    pad columns never count, even for all-pass thresholds <= 0.
     """
-    blk = 512
-    n = x.shape[0]
-    assert n % blk == 0
-    keep = jnp.abs(x) >= threshold
-    masked = jnp.where(keep, x, 0).astype(x.dtype)
-    nnz = keep.reshape(n // blk, blk).sum(axis=1).astype(jnp.int32)
-    return masked, nnz
+    masked, nnz = sparse_delta2d_ref(x.reshape(1, -1),
+                                     jnp.asarray(threshold).reshape(1))
+    return masked.reshape(-1), nnz.reshape(-1)
 
 
 def sparse_delta2d_ref(x, thresholds):
     """Batched §IV-F sparsification: one threshold per stacked client delta.
 
-    x: (K, N) stacked flat deltas; thresholds: (K,). Returns
-    (masked (K, N), nnz_per_block (K, N//512) int32), block size 512.
+    x: (K, N) stacked flat deltas, any N; thresholds: (K,). Returns
+    (masked (K, N), nnz_per_block (K, ceil(N/512)) int32), block size 512.
+    The tail block's pad columns are excluded from the count (matching the
+    kernel's in-kernel column guard).
     """
     blk = 512
     K, n = x.shape
-    assert n % blk == 0
+    pad = (-n) % blk
     keep = jnp.abs(x) >= thresholds.reshape(K, 1)
     masked = jnp.where(keep, x, 0).astype(x.dtype)
-    nnz = keep.reshape(K, n // blk, blk).sum(axis=2).astype(jnp.int32)
+    if pad:
+        keep = jnp.concatenate(
+            [keep, jnp.zeros((K, pad), keep.dtype)], axis=1)
+    nnz = keep.reshape(K, (n + pad) // blk, blk).sum(axis=2).astype(jnp.int32)
     return masked, nnz
 
 

@@ -5,70 +5,114 @@ pass over the flattened parameter delta. The count feeds the ACO metric
 (payload bytes / dense bytes) and the comm layer's compaction bookkeeping;
 unfused, XLA reads the delta twice (mask, then reduce).
 
-Two entry points share one kernel body:
+Three entry points share one kernel body:
 
-* ``sparse_delta2d_pallas`` — the batched-round form: a (K, N) stack of K
-  client deltas with a per-client threshold vector, masked and nnz-counted in
-  a single call on a 2D grid ``(K, N // 512)``. Thresholds are runtime
-  inputs (a (K, 1) block), so differing per-message quantile thresholds do
-  NOT retrigger compilation and never touch the host.
-* ``sparse_delta_pallas`` — the original single-delta form, now the K=1
-  special case.
+* ``sparse_delta2d_pallas`` — the batched/sharded-round form: a (K, N) stack
+  of K client deltas with a per-client threshold vector, masked and
+  nnz-counted in a single call on a 2D grid ``(K, ceil(N / 512))``.
+  Thresholds are runtime inputs (a (K, 1) block), so differing per-message
+  quantile thresholds do NOT retrigger compilation and never touch the host.
+  Under the fleet engine's ``shard_map`` the call sees only the local
+  (K/D, N) client shard, so the grid is sized per shard and no cross-device
+  traffic is generated — every row is masked against its own threshold.
+* ``sparse_delta2d_quantile_pallas`` — fused per-shard top-|.| form: the
+  strided-sample magnitude quantile per LOCAL row feeds the kernel as its
+  threshold vector. Thresholds are a pure per-row statistic, so the result
+  is invariant to how rows are sharded across devices.
+* ``sparse_delta_pallas`` — the original single-delta form, the K=1 case.
 
-Grid: (K, N // 512); blocks (1, 512) — 512 = 4 * 128 lanes — with the
-threshold in a (1, 1) block per grid row.
+Grid: (K, ceil(N / 512)); blocks (1, 512) — 512 = 4 * 128 lanes — with the
+threshold in a (1, 1) block per grid row. N that is not a multiple of 512 is
+zero-padded here, and the kernel masks the pad columns out of the nnz count
+(an in-kernel column-index guard), so degenerate all-pass thresholds
+(thr <= 0) do not overcount the pad.
 
 Oracle: kernels/ref.py::sparse_delta_ref / sparse_delta2d_ref.
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLK = 512
+QUANTILE_SAMPLE = 2048
 
 
-def _sparse_delta_kernel(x_ref, thr_ref, out_ref, nnz_ref):
+def _sparse_delta_kernel(n_valid, x_ref, thr_ref, out_ref, nnz_ref):
+    j = pl.program_id(1)
     x = x_ref[...]                                   # (1, BLK)
     thr = thr_ref[0, 0]
-    keep = jnp.abs(x.astype(jnp.float32)) >= thr
+    col = j * BLK + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    keep = (jnp.abs(x.astype(jnp.float32)) >= thr) & (col < n_valid)
     out_ref[...] = jnp.where(keep, x, 0).astype(out_ref.dtype)
     nnz_ref[...] = jnp.sum(keep.astype(jnp.int32), axis=1, keepdims=True)
 
 
 def sparse_delta2d_pallas(x, thresholds, *, interpret=True):
-    """x: (K, N) with N % 512 == 0; thresholds: (K,) runtime scalars.
+    """x: (K, N), any N; thresholds: (K,) runtime scalars.
 
-    Returns (masked (K, N), nnz (K, N//512) int32) — every client's delta is
-    masked against its own threshold in one kernel launch.
+    Returns (masked (K, N), nnz (K, ceil(N/512)) int32) — every client's
+    delta is masked against its own threshold in one kernel launch. Pad
+    columns (to the 512 block) are excluded from the count in-kernel.
     """
     K, N = x.shape
-    assert N % BLK == 0, N
-    nblk = N // BLK
+    pad = (-N) % BLK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
+    nblk = (N + pad) // BLK
     thresholds = jnp.asarray(thresholds, jnp.float32).reshape(K, 1)
     masked, nnz = pl.pallas_call(
-        _sparse_delta_kernel,
+        partial(_sparse_delta_kernel, N),
         grid=(K, nblk),
         in_specs=[pl.BlockSpec((1, BLK), lambda k, j: (k, j)),
                   pl.BlockSpec((1, 1), lambda k, j: (k, 0))],
         out_specs=[pl.BlockSpec((1, BLK), lambda k, j: (k, j)),
                    pl.BlockSpec((1, 1), lambda k, j: (k, j))],
-        out_shape=[jax.ShapeDtypeStruct((K, N), x.dtype),
+        out_shape=[jax.ShapeDtypeStruct((K, N + pad), x.dtype),
                    jax.ShapeDtypeStruct((K, nblk), jnp.int32)],
         interpret=interpret,
     )(x, thresholds)
-    return masked, nnz
+    return masked[:, :N], nnz
+
+
+def local_quantile_thresholds(x, keep_frac, *, sample=QUANTILE_SAMPLE):
+    """(K,) per-row |.|-quantile thresholds from a strided ``sample``-point
+    subsample (matches sparse_comm's sampled-quantile semantics: an exact
+    sort over millions of params per message dominates wall time; a 2k
+    sample keeps the kept-fraction standard error under ~1%).
+
+    Per-row statistic only — under ``shard_map`` each shard computes the
+    thresholds of its local rows and the result matches the unsharded run.
+    """
+    K, N = x.shape
+    stride = max(N // sample, 1)
+    return jnp.quantile(jnp.abs(x[:, ::stride].astype(jnp.float32)),
+                        1.0 - keep_frac, axis=1)
+
+
+def sparse_delta2d_quantile_pallas(x, keep_frac, *, interpret=True):
+    """Fused top-``keep_frac``-by-magnitude sparsification of a client shard.
+
+    x: (K, N) local client deltas. Computes the per-row sampled-quantile
+    threshold and feeds it straight into the 2D-grid kernel — one fused
+    dispatch per shard, thresholds never leave the device. Returns
+    (masked (K, N), nnz (K, ceil(N/512)), thresholds (K,)).
+    """
+    thr = local_quantile_thresholds(x, keep_frac)
+    masked, nnz = sparse_delta2d_pallas(x, thr, interpret=interpret)
+    return masked, nnz, thr
 
 
 def sparse_delta_pallas(x, threshold, *, interpret=True):
-    """x: (N,) with N % 512 == 0. Returns (masked (N,), nnz (N//512,) int32).
+    """x: (N,), any N. Returns (masked (N,), nnz (ceil(N/512),) int32).
 
     ``threshold`` may be a python float or a device scalar — it is a runtime
     input either way (no recompile per distinct threshold).
     """
     N = x.shape[0]
-    assert N % BLK == 0, N
     thr = jnp.asarray(threshold, jnp.float32).reshape(1)
     masked, nnz = sparse_delta2d_pallas(x.reshape(1, N), thr,
                                         interpret=interpret)

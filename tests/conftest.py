@@ -1,5 +1,17 @@
-import jax
-import pytest
+import os
+
+# Force a multi-device CPU host BEFORE jax initializes its client, so the
+# sharded fleet engine (shard_map over the ``clients`` mesh axis) is
+# exercised by the suite everywhere — locally and in CI. A pre-set device
+# count (e.g. from the CI workflow or a real multi-device host) wins.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
 
 
 @pytest.fixture

@@ -100,6 +100,54 @@ def test_quantile_mode_keeps_requested_fraction(frac, seed):
     assert abs(comm.aco - 2 * kept) < 1e-6
 
 
+def test_combine_weights_cold_start_explicit():
+    """Regression: a participant set whose |D|*g(s) mass is zero (empty
+    shards after scaling, or g(s) underflowing for extreme staleness) used
+    to normalize to an ALL-ZERO weight vector — the round then silently
+    re-broadcast the supervised model scaled by f(r) alone, shrinking the
+    global model with no signal. Cold starts must now fall back to an
+    explicit uniform weight."""
+    g = staleness_fn("exponential")
+    # flat: all-zero data sizes -> uniform, not zeros
+    w = agg.combine_weights([0, 0, 0], [0, 1, 2], g, None)
+    np.testing.assert_allclose(w, [1 / 3] * 3)
+    assert abs(w.sum() - 1.0) < 1e-12
+    # grouped: one group with zero mass gets uniform within the group and
+    # keeps its 1/G share; the live group is unaffected
+    groups = np.array([0, 0, 1, 1])
+    w = agg.combine_weights([0, 0, 10, 30], [0, 0, 0, 0], g, groups)
+    np.testing.assert_allclose(w, [0.25, 0.25, 0.125, 0.375])
+    # a normal (warm) case is unchanged by the fix
+    w = agg.combine_weights([10, 30], [0, 0], g, None)
+    np.testing.assert_allclose(w, [0.25, 0.75])
+
+
+def test_combine_weights_device_matches_host():
+    """The sharded engine's on-device grouped weights == the host path,
+    including the cold-start fallback."""
+    g = staleness_fn("exponential")
+    sizes = [5, 20, 0, 0, 7]
+    stal = [0, 1, 0, 2, 3]
+    for groups in (np.array([0, 0, 1, 1, 2]), np.array([1, 1, 1, 1, 1]),
+                   np.array([0, 1, 0, 1, 0])):
+        host = agg.combine_weights(sizes, stal, g, groups)
+        size_g = np.asarray(sizes, float) * np.array([g(s) for s in stal])
+        dev = agg.combine_weights_device(
+            jnp.asarray(size_g, jnp.float32), jnp.asarray(groups),
+            int(groups.max()) + 1)
+        np.testing.assert_allclose(np.asarray(dev), host, rtol=1e-6,
+                                   atol=1e-7)
+    # flat twin
+    host = agg.combine_weights(sizes, stal, g, None)
+    dev = agg.combine_weights_flat_device(
+        jnp.asarray(np.asarray(sizes, float)
+                    * np.array([g(s) for s in stal]), jnp.float32))
+    np.testing.assert_allclose(np.asarray(dev), host, rtol=1e-6, atol=1e-7)
+    # device cold start
+    dev = agg.combine_weights_flat_device(jnp.zeros(4))
+    np.testing.assert_allclose(np.asarray(dev), [0.25] * 4)
+
+
 def test_kmeans_separates_obvious_clusters():
     pts = np.concatenate([np.zeros((5, 3)), np.ones((5, 3))])
     assign = group_clients(pts, 2)

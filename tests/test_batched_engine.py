@@ -62,16 +62,32 @@ def test_parity_participation_and_logs(both_engines):
 
 
 def test_auto_engine_selection(data):
-    """batched=None: sequential for the paper CNN on CPU, batched for small
-    models; explicit flags always win."""
+    """engine=None: sequential for the paper CNN on CPU; for small models
+    the stacked engines win — sharded when the host has multiple devices,
+    batched otherwise. Explicit flags (and the legacy batched= alias)
+    always win."""
     on_cpu = jax.default_backend() == "cpu"
+    multi = len(jax.devices()) > 1
     tr = FedS3ATrainer(data, FedS3AConfig(rounds=1))
     assert tr.batched == (not on_cpu)
     tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, cnn=TEST_CNN))
+    assert tr.engine == ("sharded" if multi else "batched")
     assert tr.batched is True
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, engine="batched",
+                                          cnn=TEST_CNN))
+    assert tr.engine == "batched"
+    # legacy alias maps onto engine= when engine is unset
     tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=False,
                                           cnn=TEST_CNN))
+    assert tr.engine == "sequential"
     assert tr.batched is False
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=True,
+                                          cnn=TEST_CNN))
+    assert tr.engine == "batched"
+    # engine= beats the legacy flag
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, engine="sharded",
+                                          batched=False, cnn=TEST_CNN))
+    assert tr.engine == "sharded"
 
 
 # --- sync-free batched comm ------------------------------------------------

@@ -1,0 +1,181 @@
+"""Property-based kernel tests: hypothesis strategies (or the deterministic
+shim in environments without hypothesis) driving the Pallas sparse-delta and
+staleness-agg kernels against the pure-jnp oracles in kernels/ref.py.
+
+Covers what the hand-picked sweeps in test_kernels.py do not: random shapes,
+block-boundary sizes (N % 512 != 0, including N < 512 and N = multiple ± 1),
+degenerate thresholds (0.0 all-pass — where pad columns must NOT count —
+and +inf all-drop), per-client quantile thresholds, and shard-invariance of
+the per-row quantile encode under a client mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+BLK = 512
+
+
+def _delta(seed, k, n, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    return x
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=7),
+    nblk=st.integers(min_value=0, max_value=3),
+    off=st.sampled_from([-1, 0, 1, 17, 255, 511]),
+    thr=st.sampled_from([0.0, 0.3, 1.5, np.inf]),
+    scale=st.floats(min_value=0.1, max_value=10.0),
+)
+def test_sparse_delta2d_matches_ref(seed, k, nblk, off, thr, scale):
+    n = max(nblk * BLK + off, 1)
+    x = _delta(seed, k, n, scale)
+    thrs = jnp.full((k,), thr, jnp.float32)
+    masked, nnz = ops.sparse_delta_batch(x, thrs)
+    rmasked, rnnz = R.sparse_delta2d_ref(x, thrs)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(rmasked))
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
+    # degenerate ends: all-pass counts exactly N (pad never counts),
+    # all-drop counts zero
+    if thr == 0.0:
+        assert int(np.asarray(nnz).sum()) == k * n
+    if np.isinf(thr):
+        assert int(np.asarray(nnz).sum()) == 0
+        assert float(jnp.abs(masked).max()) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    nblk=st.integers(min_value=0, max_value=4),
+    off=st.sampled_from([-1, 0, 1, 123]),
+    thr=st.sampled_from([0.0, 0.7, np.inf]),
+)
+def test_sparse_delta_1d_matches_ref(seed, nblk, off, thr):
+    n = max(nblk * BLK + off, 1)
+    x = _delta(seed, 1, n, 1.0)[0]
+    masked, nnz = ops.sparse_delta(x, thr)
+    rmasked, rnnz = R.sparse_delta_ref(x, thr)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(rmasked))
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=6),
+    n=st.sampled_from([512, 700, 1024, 2048 + 13]),
+    frac=st.floats(min_value=0.05, max_value=0.95),
+)
+def test_quantile_fused_matches_two_step(seed, k, n, frac):
+    """The fused per-shard top-frac encode == per-row sampled quantile fed
+    to the plain kernel == the comm layer's vmapped quantile path."""
+    from repro.core.sparse_comm import _sampled_quantile_batch
+    x = _delta(seed, k, n, 1.0)
+    masked, nnz, thr = ops.sparse_delta_topfrac(x, frac)
+    thr_comm = _sampled_quantile_batch(x, 1.0 - frac)
+    np.testing.assert_allclose(np.asarray(thr), np.asarray(thr_comm),
+                               rtol=1e-6)
+    rmasked, rnnz = R.sparse_delta2d_ref(x, thr_comm)
+    np.testing.assert_allclose(np.asarray(masked), np.asarray(rmasked))
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
+    kept = np.asarray(nnz).sum() / (k * n)
+    assert abs(kept - frac) < 0.2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=9),
+    nblk=st.integers(min_value=0, max_value=3),
+    off=st.sampled_from([-1, 0, 1, 300]),
+    wmode=st.sampled_from(["uniform", "zeros", "mixed", "negative"]),
+)
+def test_staleness_agg_matches_ref(seed, k, nblk, off, wmode):
+    n = max(nblk * BLK + off, 1)
+    d = _delta(seed, k, n, 2.0)
+    if wmode == "uniform":
+        w = jnp.full((k,), 1.0 / k)
+    elif wmode == "zeros":
+        w = jnp.zeros((k,))
+    elif wmode == "negative":
+        w = -jax.random.uniform(jax.random.PRNGKey(seed + 1), (k,))
+    else:
+        w = jax.random.uniform(jax.random.PRNGKey(seed + 1), (k,)) * \
+            jnp.asarray([i % 2 for i in range(k)], jnp.float32)
+    out = ops.staleness_agg(d, w)
+    ref = R.staleness_agg_ref(d, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:n]),
+                               rtol=1e-5, atol=1e-5)
+    if wmode == "zeros":
+        assert float(jnp.abs(out).max()) == 0.0
+
+
+# --- shard invariance ------------------------------------------------------
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a client mesh")
+def test_sparse_encode_shard_invariant():
+    """Per-row quantile thresholds + masking give the SAME result whether
+    the (K, N) stack is encoded whole or row-sharded across the client
+    mesh — thresholds are per-row statistics, so shard_map adds no
+    cross-device coupling."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.sparse_comm import SparseComm
+    from repro.distributed.sharding import CLIENT_AXIS, client_mesh
+
+    mesh = client_mesh()
+    D = mesh.devices.size
+    core = SparseComm("p0.3", use_kernel=True).batch_core(False)
+    K, N = 2 * D, 1000
+    new = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    base = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+
+    whole_masked, whole_nnz = core(new, base)
+    sharded = jax.jit(shard_map(
+        core, mesh=mesh,
+        in_specs=(P(CLIENT_AXIS, None), P(CLIENT_AXIS, None)),
+        out_specs=(P(CLIENT_AXIS, None), P(CLIENT_AXIS)),
+        check_rep=False))
+    sh_masked, sh_nnz = sharded(new, base)
+    np.testing.assert_allclose(np.asarray(sh_masked),
+                               np.asarray(whole_masked), atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(sh_nnz), np.asarray(whole_nnz))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a client mesh")
+def test_staleness_agg_psum_matches_whole():
+    """blend_flat_sharded's psum-of-local-weighted-sums == the unsharded
+    weighted sum, to reduction-order tolerance."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import aggregation as agg
+    from repro.distributed.sharding import CLIENT_AXIS, client_mesh
+
+    mesh = client_mesh()
+    D = mesh.devices.size
+    K, N = 3 * D, 777
+    deltas = jax.random.normal(jax.random.PRNGKey(2), (K, N))
+    w = jax.random.uniform(jax.random.PRNGKey(3), (K,))
+    server = jax.random.normal(jax.random.PRNGKey(4), (N,))
+    fw = jnp.float32(0.35)
+
+    def stage(sp, d, wl, f):
+        return agg.blend_flat_sharded(sp, d, wl, f, axis_name=CLIENT_AXIS)
+
+    out = jax.jit(shard_map(
+        stage, mesh=mesh,
+        in_specs=(P(), P(CLIENT_AXIS, None), P(CLIENT_AXIS), P()),
+        out_specs=P(), check_rep=False))(server, deltas, w, fw)
+    expect = 0.35 * np.asarray(server) + 0.65 * np.einsum(
+        "k,kn->n", np.asarray(w), np.asarray(deltas))
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=2e-5, atol=2e-5)
