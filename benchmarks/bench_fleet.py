@@ -1,21 +1,33 @@
 """Fleet-scale benchmark: the sharded round engine vs fleet size and devices.
 
-Measures steady-state rounds/sec and bytes-on-wire of the sharded fleet
+Measures steady-state rounds/sec and TRUE bytes-on-wire of the sharded fleet
 engine over K ∈ {8, 64, 512, 2048} clients and a sweep of device counts.
 The device count is baked into the XLA client at process start
 (``--xla_force_host_platform_device_count``), so the driver re-launches
-itself as one worker subprocess per device count and aggregates their
-reports into BENCH_fleet.json.
+itself as one worker subprocess per cell and aggregates their reports into
+BENCH_fleet.json.
 
 Per (K, D) cell: a ``make_fleet_dataset`` federation (Table III rows tiled
 cyclically with per-client size jitter), the reduced-width bench CNN, one
 warm-up round absorbing XLA compilation, then ``--rounds`` timed rounds.
-Bytes-on-wire comes from the SparseComm deferred ACO counters (payload and
-dense bytes per round, both directions).
+Bytes-on-wire comes from the SparseComm deferred counters; under the
+(default) CSR wire format this is the actual compacted payload size —
+values + indices + row_ptr of arrays that really exist — broken down per
+component in the report. For each K an extra error-feedback cell at the
+highest device count reports the sparse residual store footprint against
+the dense (M, N) equivalent it replaced.
 
   PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
-  PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: 2 rounds,
-                                                             # K<=64, D in {1,4}
+  PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: K<=64,
+                                                             # D in {1,4}
+
+Smoke mode times the SAME number of rounds as the full sweep (only the
+K/D grid shrinks) so its cells are directly comparable to the committed
+baseline — a shorter timed window would misattribute one-off retraces to
+throughput and sample a different per-round byte average.
+
+``benchmarks/check_regression.py`` diffs a smoke run against the committed
+BENCH_fleet.json and fails CI on throughput/bytes regressions.
 """
 from __future__ import annotations
 
@@ -32,11 +44,10 @@ FULL_DEVICES = (1, 2, 4)
 SMOKE_DEVICES = (1, 4)
 
 
-def bench_cell(num_clients, *, rounds, seed=0):
+def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False):
     """One (K, current-device-count) measurement. Import jax lazily so the
     driver process never initializes an XLA client."""
     import jax
-    import numpy as np
 
     from repro.configs.feds3a_cnn import CNNConfig
     from repro.core import FedS3AConfig, FedS3ATrainer
@@ -47,74 +58,106 @@ def bench_cell(num_clients, *, rounds, seed=0):
     data = make_fleet_dataset(num_clients, scale=0.0008, seed=seed)
     tr = FedS3ATrainer(data, FedS3AConfig(
         rounds=rounds + warmup, seed=seed, engine="sharded", cnn=cnn,
-        C=0.5, batch_size=50))
+        C=0.5, batch_size=50, error_feedback=error_feedback))
 
     for _ in range(warmup):                # shapes retrace the first rounds
         tr.run_round()
     jax.block_until_ready(tr._global_flat)
     payload0, dense0 = tr.comm.payload_bytes, tr.comm.dense_bytes
+    wire0 = tr.comm.wire_breakdown()
 
     t0 = time.perf_counter()
     for _ in range(rounds):
         tr.run_round()
     jax.block_until_ready(tr._global_flat)
     elapsed = time.perf_counter() - t0
+    wire1 = tr.comm.wire_breakdown()
 
+    n_params = int(tr._global_flat.shape[0])
     return {
         "clients": num_clients,
         "devices": len(jax.devices()),
+        "error_feedback": error_feedback,
         "participants_per_round": tr.scheduler.k,
         "rounds_timed": rounds,
         "s_per_round": elapsed / rounds,
         "rounds_per_sec": rounds / elapsed,
         "payload_bytes_per_round": (tr.comm.payload_bytes - payload0) / rounds,
         "dense_bytes_per_round": (tr.comm.dense_bytes - dense0) / rounds,
+        # CSR component breakdown of the bytes actually put on the wire
+        "wire_values_bytes_per_round":
+            (wire1["values_bytes"] - wire0["values_bytes"]) / rounds,
+        "wire_indices_bytes_per_round":
+            (wire1["indices_bytes"] - wire0["indices_bytes"]) / rounds,
+        "wire_row_ptr_bytes_per_round":
+            (wire1["row_ptr_bytes"] - wire0["row_ptr_bytes"]) / rounds,
         "aco": tr.comm.aco,
+        # per-client EF residual state: sparse CSR store vs the dense (M, N)
+        # matrix it replaced (0 when EF is off)
+        "residual_store_bytes": tr.residual_store_bytes(),
+        "residual_dense_equiv_bytes":
+            len(data["clients"]) * n_params * 4 if error_feedback else 0,
         "final_accuracy": float(tr.evaluate()["accuracy"]),
     }
 
 
 def worker(args):
-    results = [bench_cell(k, rounds=args.rounds, seed=args.seed)
+    results = [bench_cell(k, rounds=args.rounds, seed=args.seed,
+                          error_feedback=args.ef)
                for k in args.clients]
     with open(args.out, "w") as f:
         json.dump(results, f)
 
 
+def _cells(args):
+    """(devices, clients, error_feedback) cells: the plain sweep plus one
+    EF cell per K at the highest device count (the residual-store story)."""
+    dmax = max(args.devices)
+    cells = [(d, k, False) for d in args.devices for k in args.clients]
+    cells += [(dmax, k, True) for k in args.clients]
+    return cells
+
+
 def driver(args):
-    # one subprocess per (K, D) cell: the device count is frozen at XLA
-    # client init, and sharing a process between cells contaminates the
-    # timings (measured 4-5x on the later cell — lingering executables and
+    # one subprocess per cell: the device count is frozen at XLA client
+    # init, and sharing a process between cells contaminates the timings
+    # (measured 4-5x on the later cell — lingering executables and
     # allocator state), so every cell gets a pristine runtime
     results = []
-    for d in args.devices:
+    for d, k, ef in _cells(args):
         env = dict(os.environ)
         flags = [f for f in env.get("XLA_FLAGS", "").split()
                  if "--xla_force_host_platform_device_count" not in f]
         env["XLA_FLAGS"] = " ".join(
             flags + [f"--xla_force_host_platform_device_count={d}"])
-        for k in args.clients:
-            out = f".bench_fleet_worker_{d}_{k}.json"
-            cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
-                   "--worker", "--out", out, "--rounds", str(args.rounds),
-                   "--seed", str(args.seed), "--clients", str(k)]
-            print(f"[bench_fleet] K={k} devices={d}", flush=True)
-            subprocess.run(cmd, env=env, check=True)
-            with open(out) as f:
-                results.extend(json.load(f))
-            os.remove(out)
+        out = f".bench_fleet_worker_{d}_{k}_{int(ef)}.json"
+        cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
+               "--worker", "--out", out, "--rounds", str(args.rounds),
+               "--seed", str(args.seed), "--clients", str(k)]
+        if ef:
+            cmd.append("--ef")
+        print(f"[bench_fleet] K={k} devices={d} ef={ef}", flush=True)
+        subprocess.run(cmd, env=env, check=True)
+        with open(out) as f:
+            results.extend(json.load(f))
+        os.remove(out)
 
     for r in results:
-        print(f"  K={r['clients']:5d} D={r['devices']} "
+        ef = " ef" if r["error_feedback"] else ""
+        print(f"  K={r['clients']:5d} D={r['devices']}{ef:3s} "
               f"{r['rounds_per_sec']:7.3f} rounds/s "
               f"({r['s_per_round']*1e3:8.1f} ms/round)  "
               f"wire {r['payload_bytes_per_round']/1e6:8.2f} MB/round "
               f"(aco {r['aco']:.3f})")
+        if r["error_feedback"]:
+            print(f"        residual store {r['residual_store_bytes']/1e6:.2f}"
+                  f" MB vs {r['residual_dense_equiv_bytes']/1e6:.2f} MB dense")
     # scaling summary: rounds/sec at each K, normalized to the 1-device run
     summary = {}
     for r in results:
-        summary.setdefault(r["clients"], {})[r["devices"]] = \
-            r["rounds_per_sec"]
+        if not r["error_feedback"]:
+            summary.setdefault(r["clients"], {})[r["devices"]] = \
+                r["rounds_per_sec"]
     scaling = {
         str(k): {str(d): v / by_d[min(by_d)] for d, v in sorted(by_d.items())}
         for k, by_d in summary.items()}
@@ -128,7 +171,7 @@ def driver(args):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: 2 rounds, K<=64, devices {1,4}")
+                    help="CI mode: K<=64, devices {1,4}")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--clients", type=lambda s: tuple(
         int(x) for x in s.split(",")), default=None)
@@ -136,6 +179,7 @@ def main():
         int(x) for x in s.split(",")), default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="BENCH_fleet.json")
+    ap.add_argument("--ef", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -145,7 +189,7 @@ def main():
     if args.devices is None:
         args.devices = SMOKE_DEVICES if args.smoke else FULL_DEVICES
     if args.rounds is None:
-        args.rounds = 2 if args.smoke else 5
+        args.rounds = 5
 
     if args.worker:
         worker(args)

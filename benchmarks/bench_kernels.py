@@ -5,7 +5,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
 from repro.kernels import ref as R
 
 

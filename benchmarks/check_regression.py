@@ -1,0 +1,144 @@
+"""CI perf-regression gate for the fleet benchmark.
+
+Diffs a fresh smoke run of ``benchmarks.bench_fleet`` against the committed
+baseline (BENCH_fleet.json) cell by cell — cells are keyed by
+(clients, devices, error_feedback) — and fails the job when:
+
+* throughput regresses by more than ``--max-slowdown`` (default 30%) on
+  the GEOMETRIC MEAN across cells, or by more than twice that on any
+  single cell. Single-cell rounds/sec on shared CI runners is noisy
+  (measured +/-30% cell-to-cell on a loaded 2-core host while bytes stayed
+  bit-identical), so the aggregate catches structural regressions — an
+  accidental host sync, a lost jit cache — without flaking on scheduler
+  jitter; the per-cell floor still catches a regression confined to one
+  configuration, or
+* bytes-on-wire per round grow beyond ``--bytes-tol`` (default 2%; smoke
+  and baseline time the same rounds from the same seed, so the comparison
+  is deterministic up to quantile-threshold float flips — measured x1.000 —
+  and any real increase means the compaction got worse and trips the
+  gate), or
+* the residual store stopped being smaller than its dense equivalent on
+  the error-feedback cells.
+
+The throughput comparison is absolute rounds/sec against a baseline
+measured on whatever machine last ran the full sweep — a systematically
+slower runner fleet reads as a regression. That is deliberate (the gate
+guards the committed numbers, and GitHub-hosted runners are homogeneous
+enough for the 30% aggregate band), but if runner hardware shifts, rerun
+``python -m benchmarks.bench_fleet`` on the new hardware and commit the
+refreshed BENCH_fleet.json rather than loosening ``--max-slowdown``.
+
+Exit code 0 = green, 1 = regression, 2 = unusable inputs.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline BENCH_fleet.json --candidate BENCH_fleet_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def _cells(path):
+    with open(path) as f:
+        payload = json.load(f)
+    results = payload["results"] if isinstance(payload, dict) else payload
+    out = {}
+    for r in results:
+        key = (r["clients"], r["devices"], bool(r.get("error_feedback")))
+        out[key] = r
+    return out
+
+
+def compare(baseline, candidate, *, max_slowdown, bytes_tol):
+    failures, skipped, rows, speeds = [], [], [], []
+    for key, cand in sorted(candidate.items()):
+        base = baseline.get(key)
+        k, d, ef = key
+        name = f"K={k} D={d}{' ef' if ef else ''}"
+        if base is None:
+            skipped.append(name)
+            continue
+        speed = cand["rounds_per_sec"] / base["rounds_per_sec"]
+        speeds.append(speed)
+        wire = cand["payload_bytes_per_round"] / \
+            max(base["payload_bytes_per_round"], 1e-9)
+        rows.append(f"  {name:16s} rounds/s x{speed:5.2f}  "
+                    f"bytes-on-wire x{wire:5.3f}")
+        if speed < 1.0 - 2 * max_slowdown:
+            failures.append(
+                f"{name}: throughput {cand['rounds_per_sec']:.3f} rounds/s "
+                f"is {(1 - speed) * 100:.0f}% below baseline "
+                f"{base['rounds_per_sec']:.3f} "
+                f"(per-cell floor: {2 * max_slowdown:.0%})")
+        if wire > 1.0 + bytes_tol:
+            failures.append(
+                f"{name}: bytes-on-wire {cand['payload_bytes_per_round']:.0f}"
+                f"/round exceed baseline "
+                f"{base['payload_bytes_per_round']:.0f} by "
+                f"{(wire - 1) * 100:.1f}% (gate: {bytes_tol:.0%})")
+        if ef and cand.get("residual_store_bytes", 0) >= \
+                cand.get("residual_dense_equiv_bytes", float("inf")):
+            failures.append(
+                f"{name}: residual store "
+                f"{cand['residual_store_bytes']} B is not smaller than the "
+                f"dense equivalent {cand['residual_dense_equiv_bytes']} B")
+    if speeds:
+        geomean = math.exp(sum(math.log(s) for s in speeds) / len(speeds))
+        rows.append(f"  {'geomean':16s} rounds/s x{geomean:5.2f}")
+        if geomean < 1.0 - max_slowdown:
+            failures.append(
+                f"aggregate: geomean throughput x{geomean:.2f} is more than "
+                f"{max_slowdown:.0%} below baseline")
+    return failures, skipped, rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_fleet.json")
+    ap.add_argument("--candidate", default="BENCH_fleet_smoke.json")
+    ap.add_argument("--max-slowdown", type=float, default=0.30,
+                    help="fail when geomean rounds/sec drops by more than "
+                         "this fraction, or any cell by twice it "
+                         "(default 0.30)")
+    ap.add_argument("--bytes-tol", type=float, default=0.02,
+                    help="fail when bytes-on-wire/round grow by more than "
+                         "this fraction (default 0.02)")
+    args = ap.parse_args()
+
+    try:
+        baseline = _cells(args.baseline)
+        candidate = _cells(args.candidate)
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"[check_regression] cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    if not candidate:
+        print("[check_regression] candidate run has no cells",
+              file=sys.stderr)
+        return 2
+
+    failures, skipped, rows = compare(
+        baseline, candidate, max_slowdown=args.max_slowdown,
+        bytes_tol=args.bytes_tol)
+    print(f"[check_regression] {args.candidate} vs {args.baseline}")
+    for row in rows:
+        print(row)
+    for name in skipped:
+        print(f"  {name:16s} (no baseline cell — skipped)")
+    if not rows:
+        print("[check_regression] no overlapping cells to compare",
+              file=sys.stderr)
+        return 2
+    if failures:
+        print("\nPERF REGRESSION:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("perf gate green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

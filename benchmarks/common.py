@@ -8,7 +8,6 @@ target (synthetic data; see DESIGN.md §8).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import time
 

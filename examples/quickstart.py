@@ -23,11 +23,48 @@ engines run the same algorithm (the parity suite pins them together):
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get 8
   simulated devices (see benchmarks/bench_fleet.py).
 * ``engine=None`` (default) — auto: on multi-device hosts the sharded
-  engine, on a single accelerator (or a single-device CPU host with a
-  small model) the batched engine, and for compute-bound CPU training of
-  larger models (>~300k params, e.g. the paper CNN) the sequential
-  reference regardless of device count — pass ``engine="sharded"``
-  explicitly to fleet-shard a large model on CPU.
+  engine — provided the round carries at least 4 participants per device
+  (``feds3a.MIN_SHARD_ROWS``): tinier rounds lose more to the psum/
+  collective overhead than the extra devices return, so they fall back to
+  batched (measured at K=8, D=4 on CPU). A single accelerator (or a
+  single-device CPU host with a small model) gets the batched engine, and
+  compute-bound CPU training of larger models (>~300k params, e.g. the
+  paper CNN) keeps the sequential reference regardless of device count —
+  pass ``engine="sharded"`` explicitly to fleet-shard a large model on CPU.
+
+Wire format
+-----------
+``FedS3AConfig(wire_format=...)`` selects how sparse diffs travel:
+
+* ``"csr"`` (default) — the compacted wire format: every upload and
+  distribution message is a real (values, indices, row_ptr) CSR payload
+  produced by the compaction kernel, so the reported bytes-on-wire /ACO is
+  the byte size of arrays that actually exist, and exact zeros never
+  travel. In the paper regime (this quickstart: the full CNN, real
+  training) that measures ACO ≈ 0.46 — a >50% cut vs dense at the default
+  p0.2 sparsity. At toy scale the kept fraction runs high (ACO 0.58-0.64
+  in the small-CNN fleet benchmark cells): after only 1-2 Adam steps the
+  delta magnitudes are nearly uniform, so the p0.2 quantile threshold
+  ties across much of the row — same effect the batched-engine tests
+  document for the counted format. Each row is bounded by
+  a static capacity (~2.5x the target keep fraction of N); mass past the
+  capacity spills into the error-feedback residual when
+  ``error_feedback=True`` and is dropped (the paper's lossy scheme)
+  otherwise. Under EF the per-client residual itself lives in a
+  capacity-bounded CSR store — ``residual_frac`` of N entries kept by
+  magnitude (default 0.25, i.e. 2N bytes/client instead of 4N dense;
+  ``residual_frac=1.0`` recovers lossless EF) — which is what lets the
+  sharded engine carry fleet-scale per-client state without a dense
+  (M, N) residual matrix.
+* ``"dense_masked"`` — the pre-compaction reference: masked dense deltas
+  move between engines and ACO counts 8 bytes per threshold survivor
+  without materializing a payload. Kept for debugging and as the parity
+  baseline.
+
+CI runs ``benchmarks/check_regression.py`` against the committed
+BENCH_fleet.json on every PR, failing on >30% rounds/sec regression or any
+bytes-on-wire increase — if you touch the comm path, refresh the baseline
+with ``python -m benchmarks.bench_fleet``.
 """
 from repro.core import FedS3AConfig, FedS3ATrainer
 from repro.data import make_dataset

@@ -6,7 +6,7 @@ registers a full-size :class:`ModelConfig` plus a reduced smoke variant.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

@@ -117,6 +117,72 @@ def _blend_flat_kernel(server_flat, client_flat, w, f_weight):
         (1.0 - f_weight) * unsup
 
 
+def csr_weighted_scatter(values, indices, w, n):
+    """Fused server-side decode + weighted sum of K CSR payload rows.
+
+    values/indices: (K, cap) compacted payloads (padding slots carry value 0
+    at index 0, so they scatter nothing); w: (K,) combined Eq. 9/10 weights.
+    Returns sum_k w_k * decode(payload_k) as an (n,) fp32 vector via ONE
+    flat scatter-add of K*cap contributions — the dense (K, n) decode is
+    never materialized, which is what makes the compacted upload cheaper to
+    aggregate than the masked-dense stack it replaces.
+    """
+    contrib = w[:, None].astype(jnp.float32) * values.astype(jnp.float32)
+    return jnp.zeros((n,), jnp.float32).at[indices.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+def blend_flat_csr(server_flat, base_flat, values, indices, w, f_weight,
+                   *, use_kernel=False):
+    """FedS3A global update from CSR upload payloads (the compacted wire
+    format): uploaded_k = base_k + decode(payload_k), so the weighted client
+    sum splits into the dense base sum (Pallas ``staleness_agg`` when
+    ``use_kernel``) plus one fused weighted scatter-add of the payloads.
+    """
+    w = w.astype(jnp.float32)
+    if use_kernel:
+        base_sum = kops.staleness_agg(base_flat, w)
+    else:
+        base_sum = jnp.einsum("k,kn->n", w, base_flat.astype(jnp.float32))
+    unsup = base_sum + csr_weighted_scatter(values, indices, w,
+                                            server_flat.shape[0])
+    return f_weight * server_flat.astype(jnp.float32) + \
+        (1.0 - f_weight) * unsup
+
+
+def blend_flat_sharded_csr(server_flat, base_local, values_local,
+                           indices_local, w_local, f_weight, *, axis_name,
+                           use_kernel=False):
+    """``blend_flat_csr`` inside a ``shard_map`` over the client axis: each
+    shard folds its local base rows and payload rows (pad rows carry weight
+    0 and value-0/index-0 payload slots, so they vanish), and one psum
+    produces the replicated weighted client sum before the f(r) blend."""
+    w_local = w_local.astype(jnp.float32)
+    if use_kernel:
+        base_sum = kops.staleness_agg(base_local, w_local)
+    else:
+        base_sum = jnp.einsum("k,kn->n", w_local,
+                              base_local.astype(jnp.float32))
+    partial = base_sum + csr_weighted_scatter(values_local, indices_local,
+                                              w_local, server_flat.shape[0])
+    unsup = jax.lax.psum(partial, axis_name)
+    return f_weight * server_flat.astype(jnp.float32) + \
+        (1.0 - f_weight) * unsup
+
+
+def aggregate_flat_csr(server_flat, base_flat, values, indices, *,
+                       data_sizes, stalenesses, g_fn, f_weight, groups=None,
+                       use_kernel=False):
+    """FedS3A global update on compacted uploads: ``combine_weights`` folds
+    Eq. 9/10 into one weight vector, then ``blend_flat_csr`` consumes the
+    CSR payloads directly (scatter-add decode fused into the aggregation).
+    """
+    w = combine_weights(data_sizes, stalenesses, g_fn, groups)
+    return blend_flat_csr(server_flat, base_flat, values, indices,
+                          jnp.asarray(w, jnp.float32), jnp.float32(f_weight),
+                          use_kernel=use_kernel)
+
+
 def blend_flat_sharded(server_flat, client_flat_local, w_local, f_weight,
                        *, axis_name, use_kernel=False):
     """FedS3A global update inside a ``shard_map`` over the client axis.

@@ -32,10 +32,17 @@ Three round engines share the scheduler/aggregation math, selected by
 
 The legacy ``batched=True/False`` config flag maps onto
 ``engine="batched"/"sequential"`` when ``engine`` is unset.
+
+Communication uses the compacted CSR wire format by default
+(``wire_format="csr"``): uploads and distributions move real
+(values, indices, row_ptr) payload arrays, the aggregation consumes them
+via a fused scatter-add decode, and — under error feedback — per-client
+residuals live in a capacity-bounded sparse store instead of dense (M, N)
+state. ``wire_format="dense_masked"`` keeps the pre-compaction reference
+behaviour (masked dense deltas, counted-not-materialized payloads).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -46,8 +53,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.feds3a_cnn import CONFIG as CNN_CONFIG
 from repro.core import aggregation as agg
-from repro.core.functions import (adaptive_learning_rates, round_weight_fn,
-                                  staleness_fn, supervised_weight)
+from repro.core.functions import (adaptive_learning_rates, staleness_fn,
+                                  supervised_weight)
 from repro.core.grouping import group_clients, init_index, kmeans_device
 from repro.core.metrics import weighted_metrics
 from repro.core.pseudo_label import (class_histogram, class_histogram_batch,
@@ -56,13 +63,21 @@ from repro.core.pseudo_label import (class_histogram, class_histogram_batch,
                                      make_server_epoch_flat, predict_fn)
 from repro.core.scheduler import SemiAsyncScheduler, paper_latency
 from repro.core.sparse_comm import SparseComm, flatten_tree, unflatten_like
-from repro.distributed.sharding import (CLIENT_AXIS, CLIENT_STACK_SPEC,
-                                        CLIENT_VEC_SPEC, REPLICATED_SPEC,
-                                        client_mesh, padded_rows)
+from repro.distributed.sharding import (CLIENT_AXIS, CLIENT_PAYLOAD_SPECS,
+                                        CLIENT_STACK_SPEC, CLIENT_VEC_SPEC,
+                                        REPLICATED_SPEC, client_mesh,
+                                        padded_rows)
+from repro.kernels.ops import csr_decode
 from repro.models.cnn import cnn_param_count, init_cnn
 from repro.optimizer import adam_init
 
 ENGINES = ("sequential", "batched", "sharded")
+
+# auto engine selection: minimum participants per device before the sharded
+# engine beats batched — below this the psum/collective overhead dominates
+# the per-shard work (measured: K=8 on D=4 CPU devices, 2 rows/device, loses
+# to the batched engine; 4+ rows/device wins)
+MIN_SHARD_ROWS = 4
 
 # client-axis partition specs for the sharded round stages (short aliases
 # of the canonical specs in distributed.sharding)
@@ -116,6 +131,18 @@ class FedS3AConfig:
     group_based: bool = True
     sparse_comm: bool = True
     sparse_threshold: object = "p0.2"    # top-20% magnitude (ACO ~ 0.49)
+    wire_format: str = "csr"             # "csr": compacted payloads (values
+                                         # + indices + row_ptr actually
+                                         # materialized; bytes-on-wire is
+                                         # the real payload size) |
+                                         # "dense_masked": legacy reference
+                                         # (masked dense deltas, counted nnz)
+    wire_capacity: object = None         # per-row payload capacity override
+                                         # (None: auto from the keep frac)
+    residual_frac: float = 0.25          # EF residual store: top fraction of
+                                         # N kept by magnitude (1.0 =
+                                         # lossless); the sharded store is
+                                         # O(M * residual_frac * N)
     error_feedback: bool = False         # beyond-paper: EF-sparsification
     l1: float = 1e-5                    # §IV-F L1 regularisation
     use_kernels: bool = False           # Pallas kernels (interpret on CPU)
@@ -192,7 +219,15 @@ class FedS3ATrainer:
 
         self.comm = SparseComm(self.cfg.sparse_threshold,
                                use_kernel=self.cfg.use_kernels,
-                               enabled=self.cfg.sparse_comm)
+                               enabled=self.cfg.sparse_comm,
+                               wire_format=self.cfg.wire_format,
+                               capacity=self.cfg.wire_capacity,
+                               residual_frac=self.cfg.residual_frac)
+        # the engines branch on the *effective* wire format: disabled
+        # sparsification always moves dense payloads
+        self.wire_fmt = "csr" if (self.comm.enabled
+                                  and self.comm.wire_format == "csr") \
+            else "dense"
 
         self.g_fn = staleness_fn(self.cfg.staleness_function)
         self.participation = np.zeros((0, self.M))
@@ -208,8 +243,10 @@ class FedS3ATrainer:
         dominates — always on accelerators, and on CPU for small models;
         compute-bound single-device CPU training keeps the sequential
         reference. With more than one visible device the sharded fleet
-        engine takes over from batched (same math, client rows spread
-        across the mesh).
+        engine takes over from batched — but only when the expected round
+        carries at least ``MIN_SHARD_ROWS`` participants per device: tiny
+        rounds lose more to the psum/collective overhead than they gain
+        from the extra devices (measured at K=8, D=4 on CPU).
         """
         cfg = self.cfg
         engine = cfg.engine
@@ -221,7 +258,11 @@ class FedS3ATrainer:
             if not stacked:
                 engine = "sequential"
             else:
-                engine = "sharded" if len(jax.devices()) > 1 else "batched"
+                D = len(jax.devices())
+                # the scheduler admits ceil(C * M) uploads per round
+                k = max(int(np.ceil(cfg.C * self.M)), 1)
+                engine = "sharded" if (D > 1 and k >= MIN_SHARD_ROWS * D) \
+                    else "batched"
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES} or None, "
                              f"got {engine!r}")
@@ -277,7 +318,20 @@ class FedS3ATrainer:
                 self._base_mat = jnp.broadcast_to(
                     self._global_flat, (self.M, self._global_flat.shape[0]))
                 if cfg.error_feedback:
-                    self._residual_mat = jnp.zeros_like(self._base_mat)
+                    if self.wire_fmt == "csr":
+                        # sparse residual store: per-client residuals live in
+                        # capacity-bounded CSR rows — O(M * rcap) instead of
+                        # the dense (M, N) matrix that blocked >100k-client
+                        # fleets (rcap*(4+4) bytes/client vs 4N dense). No
+                        # per-row count is kept: padding slots hold value 0
+                        # at index 0, so the decode needs none.
+                        rcap = self.comm.residual_capacity(
+                            self._global_flat.shape[0])
+                        self._res_vals = jnp.zeros((self.M, rcap),
+                                                   jnp.float32)
+                        self._res_idx = jnp.zeros((self.M, rcap), jnp.int32)
+                    else:
+                        self._residual_mat = jnp.zeros_like(self._base_mat)
             else:
                 # per-client base params as flat (N,) device rows (initially
                 # all aliasing the warmed-up global model — JAX arrays are
@@ -448,13 +502,36 @@ class FedS3ATrainer:
 
     def _encode_upload_body(self, with_residual, with_hist):
         """Traced body shared by the batched jit and the sharded shard_map:
-        encode (threshold/mask/count) + upload + histograms on a (K, N)
-        stack (global for batched, the local shard for sharded — the encode
-        is per-row, so the same body serves both). Returns
-        (uploaded, nnz, hists|None, new_res|None)."""
+        encode + upload + histograms on a (K, N) stack (global for batched,
+        the local shard for sharded — the encode is per-row, so the same
+        body serves both).
+
+        CSR wire format: compacts the deltas into real (values, indices)
+        payload rows, reconstructs the uploaded models from the payload (so
+        what feeds histograms/aggregation is exactly what crossed the wire),
+        and — under EF — spills sub-threshold mass plus capacity overflow
+        into the truncated residual. Returns (values, indices, stored,
+        hists|None, res_payload|None, res_dense|None).
+
+        Legacy dense-masked format returns (uploaded, nnz, hists|None,
+        new_res|None) as before."""
+        hist = self.histogram_batch
+        if self.wire_fmt == "csr":
+            core = self.comm.csr_core(with_residual)
+
+            def body(trained, base, xs, vs, residual=None):
+                if with_residual:
+                    vals, idx, stored, decoded, res_payload, res_dense = \
+                        core(trained, base, residual)
+                else:
+                    vals, idx, stored, decoded = core(trained, base)
+                    res_payload = res_dense = None
+                hists = hist(base + decoded, xs, vs) if with_hist else None
+                return vals, idx, stored, hists, res_payload, res_dense
+
+            return body
         core = self.comm.batch_core(with_residual) if self.comm.enabled \
             else None
-        hist = self.histogram_batch
 
         def body(trained, base, xs, vs, residual=None):
             if core is None:
@@ -479,7 +556,18 @@ class FedS3ATrainer:
         """Traced body shared by the batched jit and the sharded shard_map:
         sparse-encode the new global model against the (T, N) distribution
         target stack (per-row, so global and shard-local calls agree).
-        Returns (new_base, nnz)."""
+        Returns (new_base, nnz) — under the CSR format the new base is the
+        decode of the actual compacted payload and ``nnz`` is the stored
+        (on-wire) count."""
+        if self.wire_fmt == "csr":
+            core = self.comm.csr_core(False)
+
+            def body(new_flat, dist_base):
+                g = jnp.broadcast_to(new_flat, dist_base.shape)
+                _vals, _idx, stored, decoded = core(g, dist_base)
+                return dist_base + decoded, stored
+
+            return body
         core = self.comm.batch_core(False) if self.comm.enabled else None
 
         def body(new_flat, dist_base):
@@ -504,22 +592,35 @@ class FedS3ATrainer:
 
     def _finalize_fn(self):
         """server-flatten + weighted aggregation + distribute encode, one
-        jit (retraces per (participants, targets) shape pair)."""
+        jit (retraces per (participants, targets) shape pair). Under the
+        CSR format the aggregation consumes the upload payloads directly:
+        the scatter-add decode is fused into the weighted client sum
+        (``agg.blend_flat_csr``), so the dense uploaded stack never crosses
+        the stage boundary."""
         if self._finalize_jit is not None:
             return self._finalize_jit
         use_kernel = self.cfg.use_kernels
         distribute = self._distribute_encode_body()
 
-        @jax.jit
-        def fn(server_flat, uploaded, w, fw, dist_base):
-            if use_kernel:
-                from repro.kernels import ops as kops
-                unsup = kops.staleness_agg(uploaded, w)
-            else:
-                unsup = jnp.einsum("k,kn->n", w, uploaded)
-            new_flat = fw * server_flat + (1.0 - fw) * unsup
-            new_base, nnz = distribute(new_flat, dist_base)
-            return new_flat, new_base, nnz
+        if self.wire_fmt == "csr":
+            @jax.jit
+            def fn(server_flat, base_flat, vals, idx, w, fw, dist_base):
+                new_flat = agg.blend_flat_csr(
+                    server_flat, base_flat, vals, idx, w, fw,
+                    use_kernel=use_kernel)
+                new_base, nnz = distribute(new_flat, dist_base)
+                return new_flat, new_base, nnz
+        else:
+            @jax.jit
+            def fn(server_flat, uploaded, w, fw, dist_base):
+                if use_kernel:
+                    from repro.kernels import ops as kops
+                    unsup = kops.staleness_agg(uploaded, w)
+                else:
+                    unsup = jnp.einsum("k,kn->n", w, uploaded)
+                new_flat = fw * server_flat + (1.0 - fw) * unsup
+                new_base, nnz = distribute(new_flat, dist_base)
+                return new_flat, new_base, nnz
 
         self._finalize_jit = fn
         return fn
@@ -553,16 +654,33 @@ class FedS3ATrainer:
 
         with_hist = cfg.group_based and K > 1
         n = trained_flat.shape[1]
-        if cfg.error_feedback:
+        if self.wire_fmt == "csr":
+            # the upload stage emits the compacted payload; the dense
+            # uploaded stack never leaves the jit (histograms consume it
+            # in-graph, aggregation takes base + payload)
+            if cfg.error_feedback:
+                residual = jnp.stack(
+                    [self._residual_rows[i] for i in part_ids])
+                vals, pidx, nnz, hists_dev, _, res_dense = self._upload_fn(
+                    True, with_hist)(trained_flat, base_flat, xs, vs,
+                                     residual)
+                for row, i in enumerate(part_ids):
+                    self._residual_rows[i] = res_dense[row]
+            else:
+                vals, pidx, nnz, hists_dev, _, _ = self._upload_fn(
+                    False, with_hist)(trained_flat, base_flat, xs, vs)
+            self.comm.account_batch_csr(nnz, n, K)
+        elif cfg.error_feedback:
             residual = jnp.stack([self._residual_rows[i] for i in part_ids])
             uploaded_flat, nnz, hists_dev, residual = self._upload_fn(
                 True, with_hist)(trained_flat, base_flat, xs, vs, residual)
             for row, i in enumerate(part_ids):
                 self._residual_rows[i] = residual[row]
+            self.comm.account_batch(nnz, n, K)
         else:
             uploaded_flat, nnz, hists_dev, _ = self._upload_fn(
                 False, with_hist)(trained_flat, base_flat, xs, vs)
-        self.comm.account_batch(nnz, n, K)
+            self.comm.account_batch(nnz, n, K)
 
         # server supervised epoch on the current global model (Eq. 6), in
         # flat space; the RNG split order matches the sequential path
@@ -589,10 +707,16 @@ class FedS3ATrainer:
         # version bump), so the target set is never empty.
         targets = sorted(set(part_ids) | set(forced))
         dist_base = jnp.stack([self._base_rows[i] for i in targets])
-        new_flat, new_base, nnz_d = self._finalize_fn()(
-            sp_flat, uploaded_flat, jnp.asarray(w, jnp.float32),
-            jnp.float32(fw), dist_base)
-        self.comm.account_batch(nnz_d, n, len(targets))
+        if self.wire_fmt == "csr":
+            new_flat, new_base, nnz_d = self._finalize_fn()(
+                sp_flat, base_flat, vals, pidx, jnp.asarray(w, jnp.float32),
+                jnp.float32(fw), dist_base)
+            self.comm.account_batch_csr(nnz_d, n, len(targets))
+        else:
+            new_flat, new_base, nnz_d = self._finalize_fn()(
+                sp_flat, uploaded_flat, jnp.asarray(w, jnp.float32),
+                jnp.float32(fw), dist_base)
+            self.comm.account_batch(nnz_d, n, len(targets))
         for row, i in enumerate(targets):
             self._base_rows[i] = new_base[row]
         self._base_version[targets] = self.global_version
@@ -618,6 +742,36 @@ class FedS3ATrainer:
         encode_upload = self._encode_upload_body(with_residual, with_hist)
         placeholder = jnp.zeros((), jnp.float32)       # shard_map needs
                                                        # arrays, not Nones
+        _PV, _PI, _PC = CLIENT_PAYLOAD_SPECS
+
+        if self.wire_fmt == "csr":
+            n = self._global_flat.shape[0]
+
+            def shard_fn(base, xs, vs, lrs, keys, rvals, ridx):
+                trained, _ = epoch(base, xs, vs, lrs, keys)
+                # the residual store arrives as CSR rows; expand the local
+                # shard to dense only inside the stage (per-row scatter)
+                residual = csr_decode(rvals, ridx, n) if with_residual \
+                    else None
+                vals, idx, stored, hists, res_payload, _ = encode_upload(
+                    trained, base, xs, vs, residual)
+                rp = res_payload if with_residual else (placeholder,) * 2
+                return (vals, idx, stored,
+                        hists if with_hist else placeholder,
+                        rp[0], rp[1])
+
+            in_specs = (_ROW2, _ROW3, _ROW2, _ROW, _ROW2,
+                        _PV if with_residual else _REP,
+                        _PI if with_residual else _REP)
+            out_specs = (_PV, _PI, _PC,
+                         _ROW2 if with_hist else _REP,
+                         _PV if with_residual else _REP,
+                         _PI if with_residual else _REP)
+            fn = jax.jit(shard_map(
+                shard_fn, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False))
+            self._stage1_jits[key] = fn
+            return fn
 
         def shard_fn(base, xs, vs, lrs, keys, residual):
             trained, _ = epoch(base, xs, vs, lrs, keys)
@@ -671,6 +825,23 @@ class FedS3ATrainer:
         use_kernel = self.cfg.use_kernels
         distribute = self._distribute_encode_body()
 
+        if self.wire_fmt == "csr":
+            _PV, _PI, _ = CLIENT_PAYLOAD_SPECS
+
+            def shard_fn(server_flat, base, vals, idx, w, fw, dist_base):
+                new_flat = agg.blend_flat_sharded_csr(
+                    server_flat, base, vals, idx, w, fw,
+                    axis_name=CLIENT_AXIS, use_kernel=use_kernel)
+                new_base, nnz = distribute(new_flat, dist_base)
+                return new_flat, new_base, nnz
+
+            fn = jax.jit(shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(_REP, _ROW2, _PV, _PI, _ROW, _REP, _ROW2),
+                out_specs=(_REP, _ROW2, _ROW), check_rep=False))
+            self._stage2_jits["finalize"] = fn
+            return fn
+
         def shard_fn(server_flat, uploaded, w, fw, dist_base):
             new_flat = agg.blend_flat_sharded(
                 server_flat, uploaded, w, fw,
@@ -721,16 +892,34 @@ class FedS3ATrainer:
 
         with_hist = cfg.group_based and K > 1
         stage1 = self._stage1_sharded(cfg.error_feedback, with_hist)
-        if cfg.error_feedback:
+        if self.wire_fmt == "csr":
+            if cfg.error_feedback:
+                # residual rows travel as CSR (values, indices) — the dense
+                # (M, N) residual matrix no longer exists
+                rvals = _gather_rows(self._res_vals, idx)
+                ridx = _gather_rows(self._res_idx, idx)
+                vals, pidx, nnz, hists_dev, nrv, nri = stage1(
+                    base, xs, vs, lrs_p, keys, rvals, ridx)
+                self._res_vals = _scatter_rows(self._res_vals, idx[:K],
+                                               nrv[:K])
+                self._res_idx = _scatter_rows(self._res_idx, idx[:K],
+                                              nri[:K])
+            else:
+                z = jnp.zeros((), jnp.float32)
+                vals, pidx, nnz, hists_dev, _, _ = stage1(
+                    base, xs, vs, lrs_p, keys, z, z)
+            self.comm.account_batch_csr(nnz[:K], n, K)
+        elif cfg.error_feedback:
             residual = _gather_rows(self._residual_mat, idx)
             uploaded, nnz, hists_dev, new_res = stage1(
                 base, xs, vs, lrs_p, keys, residual)
             self._residual_mat = _scatter_rows(
                 self._residual_mat, idx[:K], new_res[:K])
+            self.comm.account_batch(nnz[:K], n, K)
         else:
             uploaded, nnz, hists_dev, _ = stage1(
                 base, xs, vs, lrs_p, keys, jnp.zeros((), jnp.float32))
-        self.comm.account_batch(nnz[:K], n, K)
+            self.comm.account_batch(nnz[:K], n, K)
 
         # server supervised epoch on the current global model (Eq. 6), in
         # flat space; the RNG split order matches the sequential path
@@ -761,9 +950,14 @@ class FedS3ATrainer:
         Tp = padded_rows(T, D)
         tidx = jnp.asarray(targets + targets[:1] * (Tp - T))
         dist_base = _gather_rows(self._base_mat, tidx)
-        new_flat, new_base, nnz_d = self._stage2_sharded()(
-            sp_flat, uploaded, w_pad, jnp.float32(fw), dist_base)
-        self.comm.account_batch(nnz_d[:T], n, T)
+        if self.wire_fmt == "csr":
+            new_flat, new_base, nnz_d = self._stage2_sharded()(
+                sp_flat, base, vals, pidx, w_pad, jnp.float32(fw), dist_base)
+            self.comm.account_batch_csr(nnz_d[:T], n, T)
+        else:
+            new_flat, new_base, nnz_d = self._stage2_sharded()(
+                sp_flat, uploaded, w_pad, jnp.float32(fw), dist_base)
+            self.comm.account_batch(nnz_d[:T], n, T)
         self._base_mat = _scatter_rows(self._base_mat, tidx[:T],
                                        new_base[:T])
         self._base_version[targets] = self.global_version
@@ -773,6 +967,23 @@ class FedS3ATrainer:
         return self._round_epilogue(prev_time, participants, stale, forced, t)
 
     # ------------------------------------------------------------------
+    def residual_store_bytes(self):
+        """Bytes held by the per-client error-feedback residual state (0
+        when EF is off). The sharded CSR store is O(M * rcap); the legacy
+        dense layouts are O(M * N) — the fleet-scale memory the compacted
+        format removes."""
+        if not self.cfg.error_feedback:
+            return 0
+        if self.engine == "sharded":
+            if self.wire_fmt == "csr":
+                return int((self._res_vals.size + self._res_idx.size) * 4)
+            return int(self._residual_mat.size * 4)
+        if self.engine == "batched":
+            return int(sum(r.size * 4 for r in self._residual_rows))
+        return int(sum(
+            sum(leaf.size * 4 for leaf in jax.tree.leaves(c["residual"]))
+            for c in self.clients if "residual" in c))
+
     def evaluate(self, params=None):
         params = params if params is not None else self.global_params
         test = self.data["test"]

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 from repro.models.cnn import cnn_forward
-from repro.optimizer import adam_init, adam_update
+from repro.optimizer import adam_update
 
 
 def pseudo_label_loss(cfg, params, x, *, threshold=0.95, rng=None,

@@ -4,25 +4,48 @@ Clients upload delta = omega_new - omega_base as a magnitude-thresholded
 sparse payload; the server reconstructs omega_base + delta. The same path is
 used server->client after aggregation. ACO (average communication overhead)
 = payload bytes / dense bytes, matching the paper's "ratio of data
-communicated to total model parameters"; sparse payload counts value+index
-per nonzero (8 bytes vs 4 dense).
+communicated to total model parameters".
+
+Wire formats (``wire_format=``):
+
+* ``"csr"`` (default) — the compacted wire format: each message is the CSR
+  triple (values f32, column indices int32, row_ptr) actually materialized
+  by the compaction kernel/oracle, so reported bytes-on-wire IS the size of
+  the arrays that would cross the network: ``stored_nnz * 8 + 4 * (K + 1)``
+  for a K-row batch. Exact zeros never go on the wire (they carry no
+  information), and each row is bounded by a static capacity
+  ``cap = min(N, ceil(cap_factor * keep_frac * N))`` (absolute-threshold
+  mode: ``cap = N``); overflow past the capacity spills into the
+  error-feedback residual when EF is on, and is dropped (the paper's lossy
+  scheme) otherwise. Under EF the residual itself is kept as a
+  capacity-bounded CSR row (top ``residual_frac`` of N by magnitude via a
+  per-row sampled quantile, then the same column-order capacity rule) — the
+  store is O(cap), not O(N), and ``residual_frac=1.0`` recovers lossless EF.
+* ``"dense_masked"`` — the pre-compaction reference format: the masked dense
+  delta moves between engines and ACO counts value+index per threshold
+  survivor (8 bytes vs 4 dense) without materializing a payload.
 
 ACO accounting is *deferred*: payload byte counts depend on the on-device
 nnz reduction, so ``encode`` / ``encode_batch`` only append the device
 scalar to a pending list — no ``int()`` / ``float()`` host sync per message.
-The ``aco`` / ``payload_bytes`` properties materialize the pending scalars
-in one device->host transfer when read (typically once per ``train()``).
-Quantile thresholds likewise stay on device (vmapped ``_sampled_quantile``
-feeding the kernel as a runtime input), so the batched path dispatches each
-round's entire upload set with zero host round trips.
+(row_ptr bytes are host-computable — 4 * (rows + 1) per batch — and tracked
+as a plain int.) The ``aco`` / ``payload_bytes`` properties materialize the
+pending scalars in one device->host transfer when read (typically once per
+``train()``). Quantile thresholds likewise stay on device (vmapped
+``_sampled_quantile`` feeding the kernel as a runtime input), so the batched
+path dispatches each round's entire upload set with zero host round trips.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.sparse_delta import local_quantile_thresholds
 
 
 @jax.jit
@@ -109,6 +132,17 @@ def unflatten_stacked(flat, template_tree):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+WIRE_FORMATS = ("csr", "dense_masked")
+CAP_FACTOR = 2.5          # payload capacity slack over the target keep_frac:
+                          # near-tied delta magnitudes (e.g. sign-like early
+                          # Adam steps) push the kept fraction past the
+                          # quantile target, and capping real mass costs
+                          # accuracy — 2.5x covers the measured worst case
+                          # while keeping the buffer well under dense
+RESIDUAL_FRAC = 0.25      # EF residual store: top fraction of N kept by
+                          # magnitude -> 2N bytes/client vs 4N dense
+
+
 class SparseComm:
     """Stateful comm channel with deferred ACO bookkeeping.
 
@@ -118,21 +152,38 @@ class SparseComm:
                   default p0.2 reproduces the paper's ~0.49 ACO exactly
                   (payload = nnz * 8 bytes vs dense 4 bytes/param).
 
+    ``wire_format`` / ``capacity`` / ``cap_factor`` / ``residual_frac``:
+    see the module docstring. ``capacity=None`` derives the per-row payload
+    capacity from the keep fraction; an explicit int pins it.
+
     Byte counters: ``dense_bytes`` is host-computable (4 bytes/param/message)
     and kept as a plain int; payload bytes need the on-device nnz count, so
     each message appends one device scalar to ``_pending_payload`` and the
     ``aco`` / ``payload_bytes`` properties fold the list into
-    ``_payload_host`` with a single stacked transfer on read.
+    ``_payload_host`` with a single stacked transfer on read. Under the CSR
+    format the host-computable row_ptr framing accumulates separately in
+    ``row_ptr_bytes``.
     """
 
-    def __init__(self, threshold="p0.2", *, use_kernel=True, enabled=True):
+    def __init__(self, threshold="p0.2", *, use_kernel=True, enabled=True,
+                 wire_format="csr", capacity=None, cap_factor=CAP_FACTOR,
+                 residual_frac=RESIDUAL_FRAC):
+        if wire_format not in WIRE_FORMATS:
+            raise ValueError(f"wire_format must be one of {WIRE_FORMATS}, "
+                             f"got {wire_format!r}")
         self.threshold = threshold
         self.use_kernel = use_kernel
         self.enabled = enabled
+        self.wire_format = wire_format
+        self.capacity = capacity
+        self.cap_factor = cap_factor
+        self.residual_frac = residual_frac
         self._payload_host = 0.0        # materialized payload bytes
         self._pending_payload = []      # device scalars, bytes per message/batch
         self._batch_cores = {}          # residual? -> jitted encode pipeline
+        self._csr_cores = {}            # residual? -> jitted CSR pipeline
         self.dense_bytes = 0
+        self.row_ptr_bytes = 0
         self.messages = 0
 
     # -- threshold ---------------------------------------------------------
@@ -156,6 +207,117 @@ class SparseComm:
         K = flat_stack.shape[0]
         return jnp.full((K,), self.threshold, jnp.float32)
 
+    # -- CSR wire format ---------------------------------------------------
+    def payload_capacity(self, n):
+        """Static per-row payload capacity for an n-param message."""
+        if self.capacity is not None:
+            return max(1, min(int(self.capacity), n))
+        frac = self._quantile_frac()
+        if frac is None:                 # absolute threshold: nnz unbounded
+            return n
+        return max(1, min(n, int(math.ceil(self.cap_factor * frac * n))))
+
+    def residual_capacity(self, n):
+        """Static per-row capacity of the EF residual store."""
+        return max(1, min(n, int(math.ceil(self.residual_frac * n))))
+
+    def _row_thresholds(self, delta):
+        """(K,) per-row thresholds for this channel's mode."""
+        frac = self._quantile_frac()
+        if frac is not None:
+            return local_quantile_thresholds(delta, frac)
+        return jnp.full((delta.shape[0],), float(self.threshold),
+                        jnp.float32)
+
+    def _compact(self, delta, thr, cap):
+        """delta (K, n) x (K,) thresholds -> the (values, indices, nnz)
+        wire payload at capacity ``cap``."""
+        if self.use_kernel:
+            return kops.csr_compact(delta, thr, cap)
+        return kref.csr_compact2d_ref(delta, thr, cap)
+
+    def csr_core(self, with_residual=False):
+        """Jitted CSR encode pipeline on (K, n) flat stacks, built once per
+        (instance, residual?). Per-row ops only, so calling it inside a
+        ``shard_map`` over the client axis matches the unsharded result.
+
+        Without residual: (new, base) -> (values, indices, stored, decoded)
+        where ``stored = min(nnz, cap)`` is the on-wire count and
+        ``decoded`` is the server-side scatter-add reconstruction (equal to
+        the masked-dense delta whenever nothing overflowed the capacity).
+
+        With residual: (new, base, residual) ->
+        (values, indices, stored, decoded, (rvalues, rindices, rstored),
+        residual_dense) — the new residual is ``delta + residual - decoded``
+        (sub-threshold mass AND capacity overflow spill back), truncated to
+        the residual store's capacity; ``residual_dense`` is its dense
+        expansion for engines that keep dense per-client rows. The caller
+        owns accounting (``account_batch_csr`` with the stored counts).
+        """
+        key = bool(with_residual)
+        core = self._csr_cores.get(key)
+        if core is not None:
+            return core
+        compact, row_thr = self._compact, self._row_thresholds
+        pay_cap, res_cap = self.payload_capacity, self.residual_capacity
+        residual_frac = self.residual_frac
+        # dense reconstructions use the scatter-free capped-mask twin of the
+        # compact->decode round-trip (identical output; XLA:CPU scatters are
+        # serial, and on paths that only read the stored counts the
+        # compaction sort dead-code-eliminates entirely)
+        capped = kref.csr_capped_mask_ref
+
+        if with_residual:
+            @jax.jit
+            def core(new_flat, base_flat, residual_flat):
+                n = new_flat.shape[1]
+                delta = new_flat - base_flat + residual_flat
+                thr = row_thr(delta)
+                vals, idx, _ = compact(delta, thr, pay_cap(n))
+                decoded, stored = capped(delta, thr, pay_cap(n))
+                res = delta - decoded            # sub-threshold + overflow
+                r_thr = local_quantile_thresholds(res, residual_frac)
+                rvals, ridx, _ = compact(res, r_thr, res_cap(n))
+                res_dense, rstored = capped(res, r_thr, res_cap(n))
+                return (vals, idx, stored, decoded,
+                        (rvals, ridx, rstored), res_dense)
+        else:
+            @jax.jit
+            def core(new_flat, base_flat):
+                n = new_flat.shape[1]
+                delta = new_flat - base_flat
+                thr = row_thr(delta)
+                vals, idx, _ = compact(delta, thr, pay_cap(n))
+                decoded, stored = capped(delta, thr, pay_cap(n))
+                return vals, idx, stored, decoded
+
+        self._csr_cores[key] = core
+        return core
+
+    def account_batch_csr(self, stored_nnz, params_per_message, n_messages):
+        """Record an n_messages-row CSR batch whose on-device stored counts
+        are ``stored_nnz``: value + index per stored element, one shared
+        row_ptr per batch. No host sync."""
+        if not self.enabled:
+            self.account_batch(stored_nnz, params_per_message, n_messages)
+            return
+        self._pending_payload.append(jnp.sum(stored_nnz) * 8)
+        self.row_ptr_bytes += 4 * (n_messages + 1)
+        self.dense_bytes += params_per_message * n_messages * 4
+        self.messages += n_messages
+
+    def wire_breakdown(self):
+        """Cumulative bytes-on-wire by CSR component (values / indices /
+        row_ptr). Materializes pending device scalars (one transfer).
+        Meaningful under the CSR format (stored elements are exactly one
+        fp32 value + one int32 index each); with sparsification disabled
+        the whole dense payload is reported under values/indices."""
+        self._materialize()
+        return {"values_bytes": self._payload_host / 2,
+                "indices_bytes": self._payload_host / 2,
+                "row_ptr_bytes": float(self.row_ptr_bytes),
+                "payload_bytes": self._payload_host + self.row_ptr_bytes}
+
     # -- single-message path (reference implementation) --------------------
     def encode(self, new_params, base_params, residual=None):
         """Returns (sparse_delta_tree, stats[, residual']). ACO accounted.
@@ -166,7 +328,11 @@ class SparseComm:
         (Karimireddy et al.-style EF). Pass a zero tree to enable; the new
         residual is returned alongside.
 
-        ``stats["nnz"]`` is a device scalar (reads sync on demand).
+        ``stats["nnz"]`` is a device scalar (reads sync on demand). Under
+        the CSR wire format it is the on-wire (stored) count, the returned
+        sparse tree is the server-side decode of the actual payload, and —
+        with EF — the returned residual is the capacity-truncated store
+        (sub-threshold mass plus any capacity overflow).
         """
         delta = tree_sub(new_params, base_params)
         if residual is not None:
@@ -180,6 +346,23 @@ class SparseComm:
             out = (delta, {"nnz": n, "total": n})
             return out + (jax.tree.map(jnp.zeros_like, delta),) \
                 if residual is not None else out
+        if self.wire_format == "csr":
+            # the flat delta (incl. residual) goes through the shared CSR
+            # core as a 1-row stack — identical math to the batched path
+            zero = jnp.zeros_like(flat)[None]
+            if residual is not None:
+                vals, idx, stored, decoded, _, res_dense = self.csr_core(
+                    True)(flat[None], zero, zero)
+            else:
+                vals, idx, stored, decoded = self.csr_core(False)(
+                    flat[None], zero)
+            self.account_batch_csr(stored, n, 1)
+            sparse_tree = unflatten_like(decoded[0], delta)
+            stats = {"nnz": stored[0], "total": n,
+                     "values": vals[0], "indices": idx[0]}
+            if residual is not None:
+                return sparse_tree, stats, unflatten_like(res_dense[0], delta)
+            return sparse_tree, stats
         thr = self._abs_threshold(flat)
         if self.use_kernel:
             masked, nnz_blocks = kops.sparse_delta(flat, thr)
@@ -245,6 +428,11 @@ class SparseComm:
         quantile thresholds, masking and nnz counting all stay on device —
         zero host syncs — in one jitted call wrapping the 2D-grid kernel
         (``use_kernel``) or the vmapped jnp oracle.
+
+        Under the CSR wire format the first return value is the decoded
+        payload (== the masked stack unless a row overflowed its capacity),
+        ``stats["nnz"]`` is the stored count, and ``stats`` also carries the
+        actual (values, indices) payload arrays.
         """
         K, n = new_flat.shape
         if not self.enabled:
@@ -257,6 +445,19 @@ class SparseComm:
             out = (delta, {"nnz": jnp.full((K,), n), "total": n})
             return out + (jnp.zeros_like(delta),) \
                 if residual_flat is not None else out
+        if self.wire_format == "csr":
+            if residual_flat is not None:
+                vals, idx, stored, decoded, _, res_dense = self.csr_core(
+                    True)(new_flat, base_flat, residual_flat)
+            else:
+                vals, idx, stored, decoded = self.csr_core(False)(
+                    new_flat, base_flat)
+            self.account_batch_csr(stored, n, K)
+            stats = {"nnz": stored, "total": n, "values": vals,
+                     "indices": idx}
+            if residual_flat is not None:
+                return decoded, stats, res_dense
+            return decoded, stats
         if residual_flat is not None:
             masked, nnz, new_residual = self._batch_core(True)(
                 new_flat, base_flat, residual_flat)
@@ -310,7 +511,7 @@ class SparseComm:
     @property
     def payload_bytes(self) -> float:
         self._materialize()
-        return self._payload_host
+        return self._payload_host + self.row_ptr_bytes
 
     @property
     def aco(self) -> float:

@@ -142,6 +142,11 @@ CLIENT_STACK_SPEC = P(CLIENT_AXIS, None)
 CLIENT_VEC_SPEC = P(CLIENT_AXIS)
 # replicated values (the global model, the supervised weight)
 REPLICATED_SPEC = P()
+# one CSR payload triple — (K, cap) values, (K, cap) column indices, (K,)
+# stored counts — sharded row-wise like the stacks they compact: each device
+# packs/decodes only its local client rows, so compaction adds no collective
+CLIENT_PAYLOAD_SPECS = (CLIENT_STACK_SPEC, CLIENT_STACK_SPEC,
+                        CLIENT_VEC_SPEC)
 
 
 def client_mesh(num_devices=None) -> Mesh:

@@ -1,0 +1,114 @@
+"""Pallas kernel compacting sparse-delta rows into CSR payloads (§IV-F).
+
+The sparse-delta kernels mask a (K, N) stack of client deltas and count the
+survivors, but the masked output is still DENSE — the comm layer merely
+*accounted* nnz * 8 bytes while moving (K, N) floats. This kernel materializes
+the actual wire payload: per client row, the kept elements are packed into a
+``(cap,)`` values buffer and a matching ``(cap,)`` int32 column-index buffer
+(ascending column order), so bytes-on-wire is the real size of real arrays
+(values + indices + the derived row_ptr), not a promise.
+
+Pipeline (matching the compaction plan the sparse-delta kernel's per-block
+nnz output was designed for):
+
+1. per-block keep counts — one cheap jnp pass over the (K, N) stack
+   (``keep = (|x| >= thr) & (x != 0)``; exact zeros carry no information and
+   never go on the wire, unlike the sparse-delta nnz metric which counts
+   every threshold survivor);
+2. exclusive scan of the counts along the block axis -> each (row, block)'s
+   global write offset;
+3. in-kernel scatter on a ``(K, ceil(N/512))`` grid: each block ranks its
+   kept elements with an in-block cumsum, packs them with a (512, 512)
+   one-hot matmul (the MXU-friendly stream-compaction idiom — Mosaic has no
+   vector scatter), and stores the packed (1, 512) window at its dynamic
+   global offset via ``pl.store``/``pl.dslice``.
+
+Capacity/overflow contract: ``cap`` is the static per-row payload capacity.
+Elements with global rank >= cap fall off the end of the buffer — the
+wrapper zero-masks every slot >= ``min(nnz, cap)``, and the comm layer
+spills the dropped mass into the error-feedback residual (or drops it,
+matching the paper's lossy scheme, when EF is off). The returned ``nnz`` is
+the TRUE per-row count, so callers can detect overflow (``nnz > cap``).
+
+Blocks overlap-write by construction: a block stores a full 512-wide window
+at offset ``base`` but only its first ``count`` lanes are meaningful; the
+next block's window starts at ``base + count`` and overwrites the stale
+suffix. Grid iteration over the minor (block) axis is sequential, which is
+what makes this sound.
+
+Oracle: kernels/ref.py::csr_compact2d_ref / csr_decode_ref.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK = 512
+
+
+def _csr_scatter_kernel(n_valid, cap, x_ref, thr_ref, off_ref,
+                        vals_ref, idx_ref):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)               # (1, BLK)
+    thr = thr_ref[0, 0]
+    base = off_ref[0, 0]                             # global rank of this
+                                                     # block's first survivor
+    col = j * BLK + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    keep = (jnp.abs(x) >= thr) & (x != 0.0) & (col < n_valid)
+    rank = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1          # in-block
+    # one-hot pack: out[p] = x[c] where rank[c] == p (exactly one hit per
+    # occupied slot, zero elsewhere — exact, no float accumulation)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (BLK, BLK), 1)
+    oh = (rank[0, :, None] == slot) & keep[0, :, None]             # (c, p)
+    vals_c = jnp.sum(oh.astype(jnp.float32) * x[0, :, None], axis=0)
+    cols_c = jnp.sum(oh.astype(jnp.int32) * col[0, :, None], axis=0)
+    # rank >= cap lands in the pad tail of the (cap + BLK) buffer; a block
+    # starting wholly past cap writes at the clamped offset (pad only)
+    wb = jnp.minimum(base, cap)
+    pl.store(vals_ref, (pl.dslice(0, 1), pl.dslice(wb, BLK)), vals_c[None, :])
+    pl.store(idx_ref, (pl.dslice(0, 1), pl.dslice(wb, BLK)), cols_c[None, :])
+
+
+def csr_compact2d_pallas(x, thresholds, cap, *, interpret=True):
+    """x: (K, N) stacked flat deltas, any N; thresholds: (K,); cap: static
+    per-row payload capacity (1 <= cap <= N).
+
+    Returns (values (K, cap) f32, indices (K, cap) int32, nnz (K,) int32):
+    row k's kept elements (``|x| >= thr_k`` and nonzero) packed in ascending
+    column order, zero-padded past ``min(nnz_k, cap)``; ``nnz`` is the true
+    (uncapped) count. Per-row op — shard-invariant under a client mesh.
+    """
+    K, N = x.shape
+    cap = int(cap)
+    assert 1 <= cap <= N, (cap, N)
+    pad = (-N) % BLK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
+    nblk = (N + pad) // BLK
+    thr = jnp.asarray(thresholds, jnp.float32).reshape(K, 1)
+    # stages 1-2: per-block keep counts -> exclusive-scan write offsets
+    keep = (jnp.abs(x.astype(jnp.float32)) >= thr) & (x != 0)
+    blocks = keep.reshape(K, nblk, BLK).sum(axis=2, dtype=jnp.int32)
+    offsets = jnp.cumsum(blocks, axis=1) - blocks
+    nnz = jnp.sum(blocks, axis=1)
+    cap_pad = cap + BLK                    # overflow windows land in the pad
+    vals, idx = pl.pallas_call(
+        partial(_csr_scatter_kernel, N, cap),
+        grid=(K, nblk),
+        in_specs=[pl.BlockSpec((1, BLK), lambda k, j: (k, j)),
+                  pl.BlockSpec((1, 1), lambda k, j: (k, 0)),
+                  pl.BlockSpec((1, 1), lambda k, j: (k, j))],
+        out_specs=[pl.BlockSpec((1, cap_pad), lambda k, j: (k, 0)),
+                   pl.BlockSpec((1, cap_pad), lambda k, j: (k, 0))],
+        out_shape=[jax.ShapeDtypeStruct((K, cap_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((K, cap_pad), jnp.int32)],
+        interpret=interpret,
+    )(x, thr, offsets)
+    stored = jnp.minimum(nnz, cap)
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < stored[:, None]
+    vals = jnp.where(valid, vals[:, :cap], 0.0)
+    idx = jnp.where(valid, idx[:, :cap], 0)
+    return vals, idx, nnz

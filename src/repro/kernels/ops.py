@@ -11,8 +11,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.csr_compact import csr_compact2d_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.masked_pseudo_ce import masked_pseudo_ce_pallas
+from repro.kernels.ref import csr_decode_ref
 from repro.kernels.sparse_delta import (sparse_delta2d_pallas,
                                         sparse_delta2d_quantile_pallas,
                                         sparse_delta_pallas)
@@ -79,6 +81,20 @@ def sparse_delta_topfrac(x, keep_frac):
     (masked (K, N), nnz (K, nblk), thresholds (K,))."""
     return sparse_delta2d_quantile_pallas(x, keep_frac,
                                           interpret=_interpret())
+
+
+def csr_compact(x, thresholds, cap):
+    """(K, N) stacked flat deltas x (K,) thresholds -> the compacted CSR
+    wire payload (values (K, cap) f32, indices (K, cap) int32, true nnz
+    (K,) int32) in one grid launch (per-block counts -> exclusive scan ->
+    in-kernel scatter). Per-row op, so shard-safe under the client mesh."""
+    return csr_compact2d_pallas(x, thresholds, cap, interpret=_interpret())
+
+
+def csr_decode(values, indices, n):
+    """Scatter-add decode of a CSR payload to dense (K, n) f32 rows.
+    Padding slots hold value 0 at index 0 and scatter nothing."""
+    return csr_decode_ref(values, indices, n)
 
 
 def staleness_agg(deltas, weights):

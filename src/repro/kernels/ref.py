@@ -67,6 +67,78 @@ def sparse_delta2d_ref(x, thresholds):
     return masked, nnz
 
 
+def csr_compact2d_ref(x, thresholds, cap):
+    """Compacted CSR wire format for a stack of sparse deltas (§IV-F).
+
+    x: (K, N) stacked flat deltas; thresholds: (K,); cap: static per-row
+    payload capacity. Keeps ``(|x| >= thr) & (x != 0)`` — exact zeros pass
+    the sparse-delta nnz *metric* at degenerate thresholds but carry no
+    information, so they never go on the wire. Returns
+    (values (K, cap) f32, indices (K, cap) int32, nnz (K,) int32): kept
+    elements packed in ascending column order, zero-padded past
+    ``min(nnz, cap)``; ``nnz`` is the true (uncapped) count, so overflow is
+    detectable. Rank >= cap overflows off the payload (the comm layer
+    spills it into the error-feedback residual).
+    """
+    K, n = x.shape
+    thresholds = jnp.asarray(thresholds, jnp.float32).reshape(K, 1)
+    keep = (jnp.abs(x.astype(jnp.float32)) >= thresholds) & (x != 0)
+    rank = jnp.cumsum(keep.astype(jnp.int32), axis=1)        # 1-based
+    nnz = rank[:, -1]
+    # slot s holds the s-th survivor; its column is the first index where
+    # the running rank reaches s — a vmapped binary search over the
+    # monotone rank vector (an argsort of the drop mask gives the same
+    # columns but XLA:CPU sorts measured 7x slower)
+    slots = jnp.arange(1, cap + 1, dtype=jnp.int32)
+    cols = jax.vmap(lambda r: jnp.searchsorted(r, slots, side="left"))(rank)
+    valid = slots[None, :] <= jnp.minimum(nnz, cap)[:, None]
+    idx = jnp.where(valid, cols, 0).astype(jnp.int32)
+    vals = jnp.where(valid, jnp.take_along_axis(x, idx, axis=1), 0.0)
+    return vals.astype(jnp.float32), idx, nnz
+
+
+def csr_capped_mask_ref(x, thresholds, cap):
+    """Dense equivalent of ``csr_decode_ref(*csr_compact2d_ref(...))``:
+    survivors whose in-row rank (column order) fits the capacity, everything
+    else zeroed. Identical output to the compact -> scatter-decode
+    round-trip, but pure elementwise/cumsum ops — no scatter, which XLA:CPU
+    executes serially. The engines use this for the dense reconstruction
+    (client upload models, distribute targets, residual expansion) while
+    the payload arrays themselves feed accounting and the fused
+    aggregation; on the distribute path, where only the stored counts are
+    consumed, XLA dead-code-eliminates the compaction sort entirely.
+    Returns (decoded (K, n), stored per-row counts (K,) int32).
+    """
+    K, n = x.shape
+    thresholds = jnp.asarray(thresholds, jnp.float32).reshape(K, 1)
+    keep = (jnp.abs(x.astype(jnp.float32)) >= thresholds) & (x != 0)
+    rank = jnp.cumsum(keep.astype(jnp.int32), axis=1)        # 1-based
+    decoded = jnp.where(keep & (rank <= cap), x, 0).astype(jnp.float32)
+    stored = jnp.minimum(keep.sum(axis=1), cap).astype(jnp.int32)
+    return decoded, stored
+
+
+def csr_decode_ref(values, indices, n):
+    """Scatter-add decode of a CSR payload back to dense (K, n) rows.
+
+    Invalid (padding) slots carry value 0 at index 0, so they scatter
+    nothing. Round-trip contract: with cap >= nnz,
+    ``csr_decode_ref(*csr_compact2d_ref(x, thr, cap)[:2], n)`` equals the
+    masked-dense oracle ``sparse_delta2d_ref(x, thr)[0]`` exactly.
+    """
+    K = values.shape[0]
+    rows = jnp.arange(K, dtype=jnp.int32)[:, None]
+    return jnp.zeros((K, n), jnp.float32).at[rows, indices].add(
+        values.astype(jnp.float32))
+
+
+def csr_row_ptr_ref(nnz_stored):
+    """(K,) stored per-row counts -> the (K+1,) CSR row pointer."""
+    nnz_stored = jnp.asarray(nnz_stored, jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(nnz_stored)])
+
+
 def staleness_agg_ref(deltas, weights):
     """Paper Eq. 10 inner sum: staleness/size-weighted client aggregation.
 

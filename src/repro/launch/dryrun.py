@@ -94,7 +94,6 @@ def run_fl(arch, *, multi_pod=False, num_clients=16, local_steps=4,
     """Dry-run the FedS3A round (core/distributed_fl.py) for an LM arch:
     clients = the data mesh axis, aggregation = weighted reduction."""
     import dataclasses
-    import jax.numpy as jnp
     from repro.core.distributed_fl import fl_input_specs, make_fl_train_step
     from repro.distributed.sharding import mesh_axis_sizes, param_specs
     from repro.models import lm as _lm

@@ -12,7 +12,6 @@ axis (every op is batched, so GSPMD partitions it cleanly).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import _dense_init, pdtype, cdtype, rmsnorm
+from repro.models.layers import _dense_init, pdtype, cdtype
 
 NEG = -1e30
 

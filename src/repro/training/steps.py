@@ -5,7 +5,6 @@ functions FL clients run locally in `repro.core`.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

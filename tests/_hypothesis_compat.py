@@ -9,6 +9,8 @@ environments without the dependency.
 """
 from __future__ import annotations
 
+__all__ = ["given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

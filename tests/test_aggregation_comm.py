@@ -2,12 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.core import aggregation as agg
 from repro.core.functions import staleness_fn
-from repro.core.grouping import group_clients, kmeans
+from repro.core.grouping import group_clients
 from repro.core.sparse_comm import SparseComm, flatten_tree, unflatten_like
 
 
@@ -96,8 +95,71 @@ def test_quantile_mode_keeps_requested_fraction(frac, seed):
     _, stats = comm.encode(new, base)
     kept = stats["nnz"] / stats["total"]
     assert abs(kept - frac) < 0.15
-    # ACO accounting: payload = 8 bytes/nnz vs 4 dense
-    assert abs(comm.aco - 2 * kept) < 1e-6
+    # CSR accounting: value + index per stored element plus the
+    # host-tracked row_ptr framing — payload_bytes IS the payload size
+    expect = float(stats["nnz"]) * 8 + comm.row_ptr_bytes
+    assert abs(comm.payload_bytes - expect) < 1e-6
+    assert abs(comm.aco - expect / comm.dense_bytes) < 1e-6
+
+
+def test_csr_reported_bytes_equal_actual_payload(rng):
+    """The acceptance contract of the compacted format: reported
+    bytes-on-wire == the byte size of the (values, indices, row_ptr)
+    arrays the encode actually produced."""
+    from repro.kernels.ref import csr_row_ptr_ref
+    comm = SparseComm("p0.2", use_kernel=False)
+    new = jax.random.normal(rng, (5, 3000))
+    _, stats = comm.encode_batch(new, jnp.zeros_like(new))
+    values, indices = stats["values"], stats["indices"]
+    stored = np.asarray(stats["nnz"])
+    row_ptr = np.asarray(csr_row_ptr_ref(stats["nnz"]))
+    # every stored slot is a real (value, index) pair; padding is zeroed
+    for k in range(5):
+        assert np.count_nonzero(np.asarray(values[k])) <= stored[k]
+        assert np.asarray(values[k])[stored[k]:].sum() == 0
+    actual = stored.sum() * (4 + 4) + row_ptr.size * 4
+    assert comm.payload_bytes == actual
+    # paper regime: >50% reduction vs dense at the default p0.2 sparsity
+    assert comm.aco < 0.5
+
+
+def test_csr_weighted_scatter_matches_dense_decode(rng):
+    from repro.kernels import ref as R
+    x = jax.random.normal(rng, (4, 700))
+    thr = jnp.full((4,), 0.6, jnp.float32)
+    vals, idx, nnz = R.csr_compact2d_ref(x, thr, 700)
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (4,))
+    fused = agg.csr_weighted_scatter(vals, idx, w, 700)
+    dense = np.einsum("k,kn->n", np.asarray(w),
+                      np.asarray(R.csr_decode_ref(vals, idx, 700)))
+    np.testing.assert_allclose(np.asarray(fused), dense, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_blend_flat_csr_matches_dense_blend(rng):
+    """The fused scatter-add aggregation == blending the decoded uploads
+    through the dense path, to float tolerance."""
+    from repro.core import aggregation
+    from repro.kernels import ref as R
+    K, N = 5, 1200
+    base = jax.random.normal(rng, (K, N))
+    delta = jax.random.normal(jax.random.fold_in(rng, 1), (K, N))
+    server = jax.random.normal(jax.random.fold_in(rng, 2), (N,))
+    thr = jnp.full((K,), 0.8, jnp.float32)
+    vals, idx, nnz = R.csr_compact2d_ref(delta, thr, N)
+    w = jax.random.uniform(jax.random.fold_in(rng, 3), (K,))
+    fw = jnp.float32(0.3)
+    out = aggregation.blend_flat_csr(server, base, vals, idx, w, fw)
+    uploaded = np.asarray(base) + np.asarray(R.csr_decode_ref(vals, idx, N))
+    expect = 0.3 * np.asarray(server) + 0.7 * np.einsum(
+        "k,kn->n", np.asarray(w), uploaded)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=2e-5,
+                               atol=2e-5)
+    # kernel path agrees
+    out_k = aggregation.blend_flat_csr(server, base, vals, idx, w, fw,
+                                       use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out_k), expect, rtol=2e-5,
+                               atol=2e-5)
 
 
 def test_combine_weights_cold_start_explicit():

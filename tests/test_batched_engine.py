@@ -63,15 +63,22 @@ def test_parity_participation_and_logs(both_engines):
 
 def test_auto_engine_selection(data):
     """engine=None: sequential for the paper CNN on CPU; for small models
-    the stacked engines win — sharded when the host has multiple devices,
-    batched otherwise. Explicit flags (and the legacy batched= alias)
-    always win."""
+    the stacked engines win — sharded when the host has multiple devices
+    AND the round is big enough to amortize the collectives, batched
+    otherwise. Explicit flags (and the legacy batched= alias) always win."""
+    from repro.core.feds3a import MIN_SHARD_ROWS
     on_cpu = jax.default_backend() == "cpu"
-    multi = len(jax.devices()) > 1
+    D = len(jax.devices())
     tr = FedS3ATrainer(data, FedS3AConfig(rounds=1))
     assert tr.batched == (not on_cpu)
+    # the 10-client fixture admits ceil(0.6 * 10) = 6 participants — under
+    # MIN_SHARD_ROWS per device on a 4-device host, so auto stays batched
+    # (tiny rounds lose more to psum overhead than they gain from sharding;
+    # measured at K=8, D=4 on CPU)
     tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, cnn=TEST_CNN))
-    assert tr.engine == ("sharded" if multi else "batched")
+    k = int(np.ceil(0.6 * tr.M))
+    want = "sharded" if (D > 1 and k >= MIN_SHARD_ROWS * D) else "batched"
+    assert tr.engine == want
     assert tr.batched is True
     tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, engine="batched",
                                           cnn=TEST_CNN))
@@ -90,6 +97,28 @@ def test_auto_engine_selection(data):
     assert tr.engine == "sharded"
 
 
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a client mesh")
+def test_auto_engine_threshold_calibration():
+    """Regression for the K/device calibration: a round under
+    MIN_SHARD_ROWS participants per device auto-selects batched, a fleet
+    above it auto-selects sharded."""
+    from repro.core.feds3a import MIN_SHARD_ROWS
+    from repro.data import make_fleet_dataset
+    D = len(jax.devices())
+    # K = ceil(0.5 * 8) = 4 participants on a 4-device host: 1 row/device
+    small = make_fleet_dataset(8, scale=0.0008, seed=0)
+    tr = FedS3ATrainer(small, FedS3AConfig(rounds=1, C=0.5, cnn=TEST_CNN,
+                                           batch_size=50))
+    assert tr.scheduler.k < MIN_SHARD_ROWS * D
+    assert tr.engine == "batched"
+    # K = ceil(0.5 * 64) = 32 participants: 8 rows/device
+    big = make_fleet_dataset(64, scale=0.0008, seed=0)
+    tr = FedS3ATrainer(big, FedS3AConfig(rounds=1, C=0.5, cnn=TEST_CNN,
+                                         batch_size=50))
+    assert tr.scheduler.k >= MIN_SHARD_ROWS * D
+    assert tr.engine == "sharded"
+
+
 # --- sync-free batched comm ------------------------------------------------
 def test_encode_batch_no_host_sync(rng):
     """encode_batch returns device values only and defers ACO accounting —
@@ -103,7 +132,9 @@ def test_encode_batch_no_host_sync(rng):
     aco = comm.aco
     assert comm._pending_payload == []
     kept = float(jnp.sum(stats["nnz"])) / flat.size
-    assert abs(aco - 2 * kept) < 1e-6
+    # value + index per stored element plus the host-tracked row_ptr
+    expect = float(jnp.sum(stats["nnz"])) * 8 + comm.row_ptr_bytes
+    assert abs(aco - expect / comm.dense_bytes) < 1e-6
     assert abs(kept - 0.2) < 0.1
 
 

@@ -1,6 +1,5 @@
 """Synthetic CIC-IDS data: Table III fidelity, entropies, metrics."""
 import numpy as np
-import pytest
 
 from repro.core.metrics import weighted_metrics
 from repro.data import (BALANCED_SCENARIO, BASIC_SCENARIO, make_dataset,

@@ -3,10 +3,9 @@ round over model-zoo architectures."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
-from repro.core.distributed_fl import make_fl_train_step, sgd_local_steps
+from repro.core.distributed_fl import make_fl_train_step
 from repro.models import lm
 
 

@@ -1,6 +1,5 @@
 """Dry-run machinery: small-mesh lower+compile in a subprocess (the forced
 device count must land before jax init), plus the HLO cost model."""
-import json
 import os
 import subprocess
 import sys

@@ -32,9 +32,14 @@ MATRIX = [
     ("noniid-tau1-k8", "basic", dict(C=0.8, tau=1)),
     ("balanced-tau3-k5", "balanced", dict(C=0.5, tau=3)),
     ("noniid-ef-k6", "basic", dict(C=0.6, tau=2, error_feedback=True)),
-    # Pallas kernel path end to end: sparse-delta 2D grid + staleness_agg
-    # inside the sharded stages (interpret mode on CPU)
+    # Pallas kernel path end to end: CSR compaction + fused scatter-add
+    # aggregation + staleness_agg inside the sharded stages (interpret
+    # mode on CPU)
     ("noniid-kernels-k6", "basic", dict(C=0.6, tau=2, use_kernels=True)),
+    # legacy dense-masked wire format (masked dense deltas, counted nnz)
+    # stays pinned across all three engines, including its EF path
+    ("noniid-wire-dense-k6", "basic",
+     dict(C=0.6, tau=2, wire_format="dense_masked", error_feedback=True)),
 ]
 
 

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse_comm import SparseComm, tree_add
+from repro.core.sparse_comm import SparseComm
 
 
 def _tree(rng, scale=1.0):
@@ -41,9 +41,12 @@ def test_error_feedback_recovers_full_delta(rng):
 
 
 def test_residual_is_the_masked_complement(rng):
+    """Legacy dense-masked format: EF is lossless, the residual is exactly
+    the masked-out complement."""
     base = _tree(rng, 0.0)
     new = _tree(jax.random.fold_in(rng, 2))
-    comm = SparseComm(threshold="p0.5", use_kernel=False)
+    comm = SparseComm(threshold="p0.5", use_kernel=False,
+                      wire_format="dense_masked")
     zeros = jax.tree.map(jnp.zeros_like, base)
     delta, _, residual = comm.encode(new, base, residual=zeros)
     # delta + residual == full delta
@@ -51,6 +54,40 @@ def test_residual_is_the_masked_complement(rng):
                        jax.tree.leaves(new)):
         np.testing.assert_allclose(np.asarray(d + r), np.asarray(n),
                                    rtol=1e-5, atol=1e-6)
+
+
+def test_csr_residual_is_the_truncated_complement(rng):
+    """CSR format: the residual store keeps the top ``residual_frac`` of the
+    complement by magnitude — what it drops is bounded by its own quantile
+    threshold, and ``residual_frac=1.0`` recovers the lossless contract."""
+    from repro.kernels.sparse_delta import local_quantile_thresholds
+    base = _tree(rng, 0.0)
+    new = _tree(jax.random.fold_in(rng, 2))
+    zeros = jax.tree.map(jnp.zeros_like, base)
+
+    # residual_frac=1.0: nothing is dropped (every nonzero is stored)
+    comm = SparseComm(threshold="p0.5", use_kernel=False, residual_frac=1.0)
+    delta, _, residual = comm.encode(new, base, residual=zeros)
+    for d, r, n in zip(jax.tree.leaves(delta), jax.tree.leaves(residual),
+                       jax.tree.leaves(new)):
+        np.testing.assert_allclose(np.asarray(d + r), np.asarray(n),
+                                   rtol=1e-5, atol=1e-6)
+
+    # residual_frac=0.25: the store holds at most rcap entries, and every
+    # dropped complement entry is under the per-row residual quantile
+    comm = SparseComm(threshold="p0.5", use_kernel=False, residual_frac=0.25)
+    delta, _, residual = comm.encode(new, base, residual=zeros)
+    from repro.core.sparse_comm import flatten_tree
+    full = np.asarray(flatten_tree(new))
+    sent = np.asarray(flatten_tree(delta))
+    res = np.asarray(flatten_tree(residual))
+    n_params = full.size
+    assert np.count_nonzero(res) <= comm.residual_capacity(n_params)
+    dropped = full - sent - res
+    raw_complement = (full - sent)[None, :]
+    r_thr = float(local_quantile_thresholds(jnp.asarray(raw_complement),
+                                            comm.residual_frac)[0])
+    assert np.abs(dropped).max() <= r_thr + 1e-7
 
 
 def test_trainer_error_feedback_mode_runs():
@@ -61,3 +98,31 @@ def test_trainer_error_feedback_mode_runs():
     res = tr.train()
     assert res["metrics"]["accuracy"] > 0.8
     assert res["aco"] < 0.6
+
+
+def test_sharded_ef_uses_sparse_residual_store():
+    """The sharded engine under the CSR format keeps per-client residuals
+    in capacity-bounded CSR rows — no dense (M, N) residual matrix — and
+    the store is strictly smaller than the dense equivalent it replaced."""
+    import jax as _jax
+    import pytest
+    if len(_jax.devices()) < 2:
+        pytest.skip("needs a client mesh")
+    from repro.configs.feds3a_cnn import CNNConfig
+    from repro.core import FedS3AConfig, FedS3ATrainer
+    from repro.data import make_dataset
+    cnn = CNNConfig(name="feds3a-cnn-ef", conv_filters=(8, 8), hidden=16)
+    data = make_dataset("basic", scale=0.0015, seed=0)
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=2, seed=0, engine="sharded", error_feedback=True, cnn=cnn))
+    for _ in range(2):
+        tr.run_round()
+    assert not hasattr(tr, "_residual_mat")
+    n = tr._global_flat.shape[0]
+    rcap = tr.comm.residual_capacity(n)
+    assert tr._res_vals.shape == (tr.M, rcap)
+    assert tr._res_idx.shape == (tr.M, rcap)
+    assert rcap < n
+    assert tr.residual_store_bytes() < tr.M * n * 4
+    # participants that ran carry a real residual
+    assert float(jnp.abs(tr._res_vals).sum()) > 0

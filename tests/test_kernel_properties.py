@@ -119,6 +119,92 @@ def test_staleness_agg_matches_ref(seed, k, nblk, off, wmode):
         assert float(jnp.abs(out).max()) == 0.0
 
 
+# --- CSR compaction --------------------------------------------------------
+def _delta_with_zeros(seed, k, n, zero_frac=0.3):
+    """Random deltas with injected exact zeros (they pass degenerate
+    thresholds but must never go on the wire)."""
+    x = _delta(seed, k, n, 1.0)
+    u = jax.random.uniform(jax.random.PRNGKey(seed + 7), (k, n))
+    return jnp.where(u < zero_frac, 0.0, x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=6),
+    nblk=st.integers(min_value=0, max_value=3),
+    off=st.sampled_from([-1, 0, 1, 17, 255, 511]),
+    thr=st.sampled_from([0.0, 0.3, 1.5, np.inf]),
+)
+def test_csr_compact_roundtrip_matches_masked_oracle(seed, k, nblk, off,
+                                                     thr):
+    """Full-capacity compact -> decode reproduces the masked-dense oracle
+    EXACTLY; kernel and jnp oracle agree elementwise; indices are strictly
+    ascending within each stored prefix and padding is zeroed."""
+    n = max(nblk * BLK + off, 1)
+    x = _delta_with_zeros(seed, k, n)
+    thrs = jnp.full((k,), thr, jnp.float32)
+    vals, idx, nnz = ops.csr_compact(x, thrs, n)
+    rvals, ridx, rnnz = R.csr_compact2d_ref(x, thrs, n)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
+    masked, _ = R.sparse_delta2d_ref(x, thrs)
+    decoded = np.asarray(R.csr_decode_ref(vals, idx, n))
+    np.testing.assert_array_equal(decoded, np.asarray(masked))
+    nnz_h, vals_h, idx_h = (np.asarray(a) for a in (nnz, vals, idx))
+    # zeros never stored, even at the all-pass threshold
+    expect_nnz = np.count_nonzero(np.asarray(masked), axis=1)
+    np.testing.assert_array_equal(nnz_h, expect_nnz)
+    for row in range(k):
+        s = nnz_h[row]
+        assert (np.diff(idx_h[row, :s]) > 0).all()
+        assert np.all(vals_h[row, s:] == 0)
+        assert np.all(idx_h[row, s:] == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=5),
+    n=st.sampled_from([300, 512, 1000, 1537]),
+    cap_frac=st.floats(min_value=0.05, max_value=0.8),
+)
+def test_csr_overflow_spill_invariants(seed, k, n, cap_frac):
+    """Capacity overflow keeps the first ``cap`` survivors in column order;
+    the spill (masked - decode) is exactly the tail, so decode + spill
+    reconstructs the masked oracle bit-for-bit (what the EF residual
+    relies on)."""
+    cap = max(1, int(cap_frac * n))
+    x = _delta_with_zeros(seed, k, n)
+    thrs = jnp.full((k,), 0.2, jnp.float32)
+    vals, idx, nnz = ops.csr_compact(x, thrs, cap)
+    rvals, ridx, rnnz = R.csr_compact2d_ref(x, thrs, cap)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rvals))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(nnz), np.asarray(rnnz))
+    masked, _ = R.sparse_delta2d_ref(x, thrs)
+    masked = np.asarray(masked)
+    decoded = np.asarray(R.csr_decode_ref(vals, idx, n))
+    stored = np.minimum(np.asarray(nnz), cap)
+    spill = masked - decoded
+    for row in range(k):
+        kept_cols = np.flatnonzero(masked[row])
+        # decode holds exactly the first `stored` kept columns...
+        np.testing.assert_array_equal(
+            np.flatnonzero(decoded[row]), kept_cols[:stored[row]])
+        # ...and the spill is exactly the overflow tail
+        np.testing.assert_array_equal(
+            np.flatnonzero(spill[row]), kept_cols[stored[row]:])
+    np.testing.assert_array_equal(decoded + spill, masked)
+
+
+def test_csr_row_ptr():
+    nnz = jnp.asarray([3, 0, 5, 1], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(R.csr_row_ptr_ref(nnz)),
+                                  [0, 3, 3, 8, 9])
+
+
 # --- shard invariance ------------------------------------------------------
 @pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a client mesh")
 def test_sparse_encode_shard_invariant():

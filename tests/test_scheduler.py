@@ -3,7 +3,6 @@ properties of the FedS3A invariants."""
 import math
 
 import numpy as np
-import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.core.scheduler import SemiAsyncScheduler, paper_latency
