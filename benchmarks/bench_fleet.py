@@ -15,7 +15,14 @@ Bytes-on-wire comes from the SparseComm deferred counters; under the
 values + indices + row_ptr of arrays that really exist — broken down per
 component in the report. For each K an extra error-feedback cell at the
 highest device count reports the sparse residual store footprint against
-the dense (M, N) equivalent it replaced.
+the dense (M, N) equivalent it replaced, and an extra ``base_store="dense"``
+cell pins the versioned base store's two wins: server base memory
+(O(tau*N + M) ring + chain vs the O(M*N) base matrix, reported as
+``base_store_bytes``) and distribution bytes-on-wire (chain-delta broadcast
+— each transition payload once a round, at most tau+1 — vs one encode per
+target;
+the versioned cells also report the broadcast-only ledger as
+``dist_payload_bytes_per_round``).
 
   PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
   PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: K<=64,
@@ -44,7 +51,8 @@ FULL_DEVICES = (1, 2, 4)
 SMOKE_DEVICES = (1, 4)
 
 
-def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False):
+def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
+               base_store="versioned"):
     """One (K, current-device-count) measurement. Import jax lazily so the
     driver process never initializes an XLA client."""
     import jax
@@ -58,13 +66,15 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False):
     data = make_fleet_dataset(num_clients, scale=0.0008, seed=seed)
     tr = FedS3ATrainer(data, FedS3AConfig(
         rounds=rounds + warmup, seed=seed, engine="sharded", cnn=cnn,
-        C=0.5, batch_size=50, error_feedback=error_feedback))
+        C=0.5, batch_size=50, error_feedback=error_feedback,
+        base_store=base_store))
 
     for _ in range(warmup):                # shapes retrace the first rounds
         tr.run_round()
     jax.block_until_ready(tr._global_flat)
     payload0, dense0 = tr.comm.payload_bytes, tr.comm.dense_bytes
     wire0 = tr.comm.wire_breakdown()
+    dist0 = tr.store.dist_payload_bytes() if base_store == "versioned" else 0
 
     t0 = time.perf_counter()
     for _ in range(rounds):
@@ -72,12 +82,21 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False):
     jax.block_until_ready(tr._global_flat)
     elapsed = time.perf_counter() - t0
     wire1 = tr.comm.wire_breakdown()
+    dist1 = tr.store.dist_payload_bytes() if base_store == "versioned" else 0
 
     n_params = int(tr._global_flat.shape[0])
     return {
         "clients": num_clients,
         "devices": len(jax.devices()),
         "error_feedback": error_feedback,
+        "base_store": base_store,
+        # server-side base-model state: the versioned ring + chain is
+        # O(tau*N + M); the dense equivalent is the (M, N) matrix
+        "base_store_bytes": tr.base_store_bytes(),
+        "base_store_dense_equiv_bytes": len(data["clients"]) * n_params * 4,
+        # broadcast-only distribution ledger (versioned store; 0 for dense
+        # — there distribution bytes are folded into payload_bytes only)
+        "dist_payload_bytes_per_round": (dist1 - dist0) / rounds,
         "participants_per_round": tr.scheduler.k,
         "rounds_timed": rounds,
         "s_per_round": elapsed / rounds,
@@ -103,18 +122,22 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False):
 
 def worker(args):
     results = [bench_cell(k, rounds=args.rounds, seed=args.seed,
-                          error_feedback=args.ef)
+                          error_feedback=args.ef, base_store=args.base_store)
                for k in args.clients]
     with open(args.out, "w") as f:
         json.dump(results, f)
 
 
 def _cells(args):
-    """(devices, clients, error_feedback) cells: the plain sweep plus one
-    EF cell per K at the highest device count (the residual-store story)."""
+    """(devices, clients, error_feedback, base_store) cells: the plain
+    sweep (versioned store, the default) plus — at the highest device count
+    — one EF cell per K (the residual-store story) and one dense-base-store
+    cell per K (the versioned-store memory + distribution-bytes story)."""
     dmax = max(args.devices)
-    cells = [(d, k, False) for d in args.devices for k in args.clients]
-    cells += [(dmax, k, True) for k in args.clients]
+    cells = [(d, k, False, "versioned") for d in args.devices
+             for k in args.clients]
+    cells += [(dmax, k, True, "versioned") for k in args.clients]
+    cells += [(dmax, k, False, "dense") for k in args.clients]
     return cells
 
 
@@ -124,38 +147,42 @@ def driver(args):
     # (measured 4-5x on the later cell — lingering executables and
     # allocator state), so every cell gets a pristine runtime
     results = []
-    for d, k, ef in _cells(args):
+    for d, k, ef, store in _cells(args):
         env = dict(os.environ)
         flags = [f for f in env.get("XLA_FLAGS", "").split()
                  if "--xla_force_host_platform_device_count" not in f]
         env["XLA_FLAGS"] = " ".join(
             flags + [f"--xla_force_host_platform_device_count={d}"])
-        out = f".bench_fleet_worker_{d}_{k}_{int(ef)}.json"
+        out = f".bench_fleet_worker_{d}_{k}_{int(ef)}_{store}.json"
         cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
                "--worker", "--out", out, "--rounds", str(args.rounds),
-               "--seed", str(args.seed), "--clients", str(k)]
+               "--seed", str(args.seed), "--clients", str(k),
+               "--base-store", store]
         if ef:
             cmd.append("--ef")
-        print(f"[bench_fleet] K={k} devices={d} ef={ef}", flush=True)
+        print(f"[bench_fleet] K={k} devices={d} ef={ef} store={store}",
+              flush=True)
         subprocess.run(cmd, env=env, check=True)
         with open(out) as f:
             results.extend(json.load(f))
         os.remove(out)
 
     for r in results:
-        ef = " ef" if r["error_feedback"] else ""
-        print(f"  K={r['clients']:5d} D={r['devices']}{ef:3s} "
+        tag = " ef" if r["error_feedback"] else \
+            (" db" if r.get("base_store") == "dense" else "")
+        print(f"  K={r['clients']:5d} D={r['devices']}{tag:3s} "
               f"{r['rounds_per_sec']:7.3f} rounds/s "
               f"({r['s_per_round']*1e3:8.1f} ms/round)  "
               f"wire {r['payload_bytes_per_round']/1e6:8.2f} MB/round "
-              f"(aco {r['aco']:.3f})")
+              f"(aco {r['aco']:.3f})  "
+              f"base store {r['base_store_bytes']/1e6:.2f} MB")
         if r["error_feedback"]:
             print(f"        residual store {r['residual_store_bytes']/1e6:.2f}"
                   f" MB vs {r['residual_dense_equiv_bytes']/1e6:.2f} MB dense")
     # scaling summary: rounds/sec at each K, normalized to the 1-device run
     summary = {}
     for r in results:
-        if not r["error_feedback"]:
+        if not r["error_feedback"] and r.get("base_store") != "dense":
             summary.setdefault(r["clients"], {})[r["devices"]] = \
                 r["rounds_per_sec"]
     scaling = {
@@ -179,6 +206,8 @@ def main():
         int(x) for x in s.split(",")), default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="BENCH_fleet.json")
+    ap.add_argument("--base-store", default="versioned",
+                    choices=("versioned", "dense"), help=argparse.SUPPRESS)
     ap.add_argument("--ef", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)

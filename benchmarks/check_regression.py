@@ -18,7 +18,13 @@ baseline (BENCH_fleet.json) cell by cell — cells are keyed by
   and any real increase means the compaction got worse and trips the
   gate), or
 * the residual store stopped being smaller than its dense equivalent on
-  the error-feedback cells.
+  the error-feedback cells, or
+* the base-store memory gate fails: a versioned-store cell's
+  ``base_store_bytes`` must stay strictly below the dense O(M*N)
+  equivalent at every committed fleet size, and wherever a (K, D) pair has
+  both a versioned and a ``base_store="dense"`` cell, the versioned cell
+  must also put strictly fewer bytes on the wire (its distribution is a
+  chain-delta broadcast instead of per-target encodes).
 
 The throughput comparison is absolute rounds/sec against a baseline
 measured on whatever machine last ran the full sweep — a systematically
@@ -47,7 +53,8 @@ def _cells(path):
     results = payload["results"] if isinstance(payload, dict) else payload
     out = {}
     for r in results:
-        key = (r["clients"], r["devices"], bool(r.get("error_feedback")))
+        key = (r["clients"], r["devices"], bool(r.get("error_feedback")),
+               r.get("base_store", "versioned"))
         out[key] = r
     return out
 
@@ -56,8 +63,35 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol):
     failures, skipped, rows, speeds = [], [], [], []
     for key, cand in sorted(candidate.items()):
         base = baseline.get(key)
-        k, d, ef = key
-        name = f"K={k} D={d}{' ef' if ef else ''}"
+        k, d, ef, store = key
+        name = f"K={k} D={d}{' ef' if ef else ''}" + \
+            (f" {store}" if store != "versioned" else "")
+        # base-store memory gate: the versioned store must stay sublinear —
+        # strictly below the dense (M, N) equivalent — at every committed
+        # fleet size (candidate-only check, no baseline cell needed)
+        if store == "versioned" and "base_store_bytes" in cand:
+            if cand["base_store_bytes"] >= \
+                    cand.get("base_store_dense_equiv_bytes", float("inf")):
+                failures.append(
+                    f"{name}: versioned base store "
+                    f"{cand['base_store_bytes']} B is not smaller than the "
+                    f"dense equivalent "
+                    f"{cand['base_store_dense_equiv_bytes']} B")
+            dense_twin = candidate.get((k, d, ef, "dense"))
+            if dense_twin is not None:
+                if cand["base_store_bytes"] >= \
+                        dense_twin.get("base_store_bytes", float("inf")):
+                    failures.append(
+                        f"{name}: versioned base store is not smaller than "
+                        f"the measured dense-store cell")
+                if cand["payload_bytes_per_round"] >= \
+                        dense_twin["payload_bytes_per_round"]:
+                    failures.append(
+                        f"{name}: versioned distribution lost its "
+                        f"bytes-on-wire win — "
+                        f"{cand['payload_bytes_per_round']:.0f}/round vs "
+                        f"{dense_twin['payload_bytes_per_round']:.0f} with "
+                        f"the dense store")
         if base is None:
             skipped.append(name)
             continue

@@ -41,7 +41,7 @@ Wire format
   produced by the compaction kernel, so the reported bytes-on-wire /ACO is
   the byte size of arrays that actually exist, and exact zeros never
   travel. In the paper regime (this quickstart: the full CNN, real
-  training) that measures ACO ≈ 0.46 — a >50% cut vs dense at the default
+  training) that measures ACO ≈ 0.5 — a ~50% cut vs dense at the default
   p0.2 sparsity. At toy scale the kept fraction runs high (ACO 0.58-0.64
   in the small-CNN fleet benchmark cells): after only 1-2 Adam steps the
   delta magnitudes are nearly uniform, so the p0.2 quantile threshold
@@ -60,6 +60,39 @@ Wire format
   move between engines and ACO counts 8 bytes per threshold survivor
   without materializing a payload. Kept for debugging and as the parity
   baseline.
+
+Base store
+----------
+``FedS3AConfig(base_store=...)`` selects how the server remembers what each
+client holds (every engine supports both):
+
+* ``"versioned"`` (default) — the staleness-windowed store: the server
+  keeps a ring of the last ``tau + 2`` canonical reconstructions ``R_v``
+  plus one compacted chain delta per round transition, and a client's base
+  is just a ring lookup by its ``base_version`` — clients at the same
+  version hold the bit-identical model. Distribution becomes a chain-delta
+  broadcast — each transition payload goes on the wire once per round (at
+  most ``tau + 1`` of them) and every listening client picks up the suffix
+  it needs — instead of one sparse encode per target, and
+  server base memory is O(tau * N + M) instead of the O(M * N) per-client
+  state the dense store needs — the difference between thousands and
+  millions of clients fitting on one parameter server.
+* ``"dense"`` — the legacy layout (per-client base trees / rows / the
+  (M, N) matrix) with one distribution encode per target. Kept as the
+  parity-pinned reference.
+
+When do the two differ numerically? Only through sparsification loss.
+With ``sparse_comm=False`` every chain delta is an exact dense copy, so
+``R_v`` equals the aggregated global model bit-for-bit and the two stores
+produce identical runs (pinned in tests/test_base_store.py). With
+sparsification on, the dense store lets every client accumulate its OWN
+lossy approximation (each per-target encode thresholds against that
+client's base), while the versioned store gives all same-version clients
+one shared canonical approximation ``R_v = R_{v-1} + decode(chain)``. Both
+sit within the sparsification error budget of the true global model; they
+are equally faithful to the paper, which specifies the threshold rule but
+not server-side bookkeeping. The cross-engine parity matrix therefore pins
+each store against its own sequential reference.
 
 CI runs ``benchmarks/check_regression.py`` against the committed
 BENCH_fleet.json on every PR, failing on >30% rounds/sec regression or any

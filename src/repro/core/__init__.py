@@ -2,4 +2,5 @@
 semi-asynchronous learning (scheduler, aggregation, pseudo-labeling,
 staleness control, sparse-diff communication, baselines)."""
 from repro.core.feds3a import FedS3AConfig, FedS3ATrainer  # noqa: F401
+from repro.core.base_store import VersionedBaseStore  # noqa: F401
 from repro.core.baselines import FedAvgSSL, FedAsyncSSL, LocalSSL  # noqa: F401

@@ -1,0 +1,224 @@
+"""Staleness-windowed versioned base store (§IV-C2 distribution).
+
+The paper's staleness-tolerant distribution bounds every in-flight client to
+within ``tau`` versions of the global model, so the server never needs a
+per-client copy of anybody's base model: at most ``tau + 2`` distinct global
+versions can be referenced at once (versions ``r - tau .. r`` by in-flight
+runs, plus ``r - tau - 1`` transiently by clients about to be force-restarted
+at the round boundary).  This module exploits that invariant:
+
+* a **ring buffer** of the last ``tau + 2`` canonical flat reconstructions
+  ``R_v`` (slot ``v % (tau + 2)``), where ``R_0`` is the warmed-up initial
+  model and ``R_{v+1} = R_v + decode(chain_v+1)``;
+* one compacted **CSR chain delta** per retained round transition
+  ``v -> v+1`` — the actual (values, indices) payload every client moving
+  past that transition receives, so clients that share a ``base_version``
+  hold the bit-identical reconstruction by construction;
+* a per-client ``base_version`` integer array.
+
+Server memory is ``O(tau * N + M)`` — the ``(M, N)`` dense base matrices the
+engines previously kept are gone — and distribution becomes a **chain-delta
+broadcast**: each transition payload goes on the wire once per round and a
+client at stale version ``v`` picks up the suffix ``v+1 ..`` it needs, so a
+round transmits at most ``tau + 1`` payloads (the suffix from the stalest
+target's version) instead of one per-client encode per target.  At ``K``
+targets per round that cuts distribution bytes roughly ``K``-fold.
+
+Numerics: with sparsification enabled the chain reconstruction ``R_v`` is a
+*canonical lossy* approximation of the aggregated global model ``G_v`` — the
+same one for every client — whereas the legacy dense store accumulated a
+*per-client* lossy approximation (each client's base absorbed its own
+encode-against-own-base error).  With ``sparse_comm=False`` every chain
+delta is exact, ``R_v == G_v`` bit-for-bit, and the versioned store
+reproduces the dense store exactly (pinned by tests/test_base_store.py).
+
+Accounting is deferred like ``SparseComm``'s: chain stored-counts stay
+device scalars; ``dist_payload_bytes()`` materializes on read.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ring_set = None
+
+
+def _set_row(ring, slot, row):
+    """ring.at[slot].set(row) under one cached jit (slot is a traced int,
+    so every slot shares the compile)."""
+    global _ring_set
+    if _ring_set is None:
+        _ring_set = jax.jit(lambda r, s, x: r.at[s].set(x))
+    return _ring_set(ring, jnp.int32(slot), row)
+
+
+_gather = None
+
+
+def _gather_rows(ring, slots):
+    global _gather
+    if _gather is None:
+        _gather = jax.jit(lambda r, s: r[s])
+    return _gather(ring, slots)
+
+
+_totals = {}
+
+
+def _payload_total(scalars):
+    """sum(stored) * 8 bytes over a round's chain-suffix payloads in ONE
+    jitted dispatch (cached per arity). The stored counts come out of the
+    sharded stages fully replicated, and every eager op on a replicated
+    array costs ~1.5 ms of multi-device dispatch on CPU — folding the
+    stack/sum/scale into one call keeps the per-round broadcast accounting
+    at a single dispatch."""
+    n = len(scalars)
+    fn = _totals.get(n)
+    if fn is None:
+        fn = jax.jit(lambda *s: jnp.sum(jnp.stack(s)) * 8)
+        _totals[n] = fn
+    return fn(*scalars)
+
+
+class VersionedBaseStore:
+    """Ring of ``tau + 2`` canonical reconstructions + chain deltas.
+
+    The trainer computes each round's transition payload inside its own
+    jitted round stage (the encode fuses with the aggregation blend) and
+    hands the result to :meth:`advance`; :meth:`account_distribution` then
+    books the per-version broadcast onto the trainer's ``SparseComm``.
+    """
+
+    def __init__(self, global_flat, M, tau):
+        self.n = int(global_flat.shape[0])
+        self.M = int(M)
+        self.tau = int(tau)
+        self.depth = self.tau + 2
+        self.ring = jnp.broadcast_to(
+            jnp.asarray(global_flat, jnp.float32), (self.depth, self.n))
+        self._latest = jnp.asarray(global_flat, jnp.float32)
+        # which version each ring slot currently holds (-1 = never written)
+        self.slot_version = np.full(self.depth, -1, np.int64)
+        self.slot_version[0] = 0
+        self.client_version = np.zeros(self.M, np.int64)
+        self.version = 0
+        # version v -> payload of transition v-1 -> v:
+        #   {"stored": device-scalar-or-int[, "vals": (cap,), "idx": (cap,)]}
+        self._chain = {}
+        self._dist_pending = []      # device scalars, bytes per broadcast
+        self._dist_host = 0.0
+
+    # -- lookups -----------------------------------------------------------
+    def slot(self, version):
+        return int(version) % self.depth
+
+    def slots_for(self, client_ids):
+        """(K,) int32 ring-slot index per client — the version-indexed
+        gather ``ring[slots]`` replaces the dense (M, N) row gather."""
+        return jnp.asarray(self.client_version[np.asarray(client_ids)]
+                           % self.depth, jnp.int32)
+
+    def gather(self, client_ids):
+        """(K, N) base rows for ``client_ids`` — a ring lookup, not a
+        per-client state read: same-version clients get the same row."""
+        return _gather_rows(self.ring, self.slots_for(client_ids))
+
+    def latest(self):
+        """R_version — the canonical reconstruction of the newest global.
+        Cached at :meth:`advance` so reading it per round costs no ring
+        gather (an eager multi-device op the sharded engine would pay every
+        round)."""
+        return self._latest
+
+    # -- round transition --------------------------------------------------
+    def advance(self, new_recon, payload, new_version):
+        """Install ``R_{new_version}`` and its chain payload.
+
+        ``payload``: {"stored": count[, "vals", "idx"]} for the transition
+        ``new_version - 1 -> new_version`` (counts may be device scalars —
+        nothing syncs here).  Raises if the evicted ring slot still holds a
+        version some client references: by the scheduler's tau-forcing
+        invariant that can never happen, so a raise means the staleness
+        window was violated upstream.
+        """
+        if new_version != self.version + 1:
+            raise ValueError(f"advance must be sequential: at version "
+                             f"{self.version}, got {new_version}")
+        slot = self.slot(new_version)
+        evicted = self.slot_version[slot]
+        if evicted >= 0 and bool((self.client_version == evicted).any()):
+            raise RuntimeError(
+                f"ring eviction would drop version {evicted} still "
+                f"referenced by a client (window depth {self.depth}, "
+                f"new version {new_version})")
+        self.ring = _set_row(self.ring, slot, new_recon)
+        self._latest = new_recon
+        self.slot_version[slot] = new_version
+        self.version = new_version
+        self._chain[new_version] = payload
+        # transitions older than the deepest possible suffix can never be
+        # re-broadcast again: the stalest distribution target is a forced
+        # client at version new - tau - 1, whose suffix starts at
+        # new - tau — so exactly tau + 1 chain entries stay live
+        for v in [v for v in self._chain if v < new_version - self.tau]:
+            del self._chain[v]
+
+    def account_distribution(self, comm, targets):
+        """Book this round's chain-delta broadcast onto ``comm``.
+
+        Each transition payload goes on the wire ONCE per round however
+        many clients listen: a client at stale version ``v`` picks the
+        suffix ``v+1 .. version`` out of the broadcast, so the round's
+        broadcast set is the union of the targets' suffixes — the single
+        suffix from the stalest target's version, at most ``tau + 1``
+        payloads.  Then bumps the targets to the new version.
+
+        With sparsification disabled every chain payload is the full dense
+        model, so a stale client only needs the newest one: the broadcast
+        collapses to ONE dense payload per round.
+        """
+        targets = np.asarray(sorted(set(int(t) for t in targets)), np.int64)
+        if targets.size:
+            vers = self.client_version[targets]
+            if (vers >= self.version).any():
+                raise ValueError("distribution target already at (or past) "
+                                 "the current version")
+            if not comm.enabled:
+                comm.account_batch(None, self.n, 1)
+                self._dist_host += self.n * 4
+            else:
+                stored = [self._chain[t]["stored"]
+                          for t in range(int(vers.min()) + 1,
+                                         self.version + 1)]
+                total = _payload_total(stored)       # one dispatch
+                self._dist_pending.append(total)
+                csr = comm.wire_format == "csr"
+                comm.account_payload(
+                    total, self.n, len(stored),
+                    row_ptr_rows=len(stored) if csr else 0)
+                if csr:
+                    self._dist_host += 4 * (len(stored) + 1)
+            self.client_version[targets] = self.version
+
+    # -- reporting ---------------------------------------------------------
+    def dist_payload_bytes(self):
+        """Cumulative distribution bytes-on-wire (broadcast payloads only,
+        uploads excluded). Materializes pending device scalars on read."""
+        if self._dist_pending:
+            self._dist_host += float(np.asarray(
+                jnp.stack(self._dist_pending), np.float64).sum())
+            self._dist_pending = []
+        return self._dist_host
+
+    def bytes(self):
+        """Server memory held by the base store: the reconstruction ring
+        (O(tau * N)), the retained chain payloads (O(tau * cap)) and the
+        per-client version array (O(M)) — the ``O(M * N)`` dense base state
+        this store replaces appears nowhere."""
+        total = self.ring.size * 4 + self.client_version.nbytes
+        for p in self._chain.values():
+            total += 4                                   # stored count
+            if "vals" in p:
+                total += int(p["vals"].size) * 4 + int(p["idx"].size) * 4
+        return int(total)

@@ -40,6 +40,19 @@ via a fused scatter-add decode, and — under error feedback — per-client
 residuals live in a capacity-bounded sparse store instead of dense (M, N)
 state. ``wire_format="dense_masked"`` keeps the pre-compaction reference
 behaviour (masked dense deltas, counted-not-materialized payloads).
+
+Per-client base state is versioned by default (``base_store="versioned"``):
+the server keeps a ring of the last ``tau + 2`` canonical reconstructions
+plus one compacted chain delta per round transition
+(``core.base_store.VersionedBaseStore``), a client's base is a ring lookup
+by ``base_version``, and distribution is a chain-delta broadcast (each
+transition payload on the wire once per round, ≤ tau + 1 of them, shared by
+every listening client) instead of one encode per target. Server base
+memory is O(tau * N + M)
+rather than the O(M * N) the dense layouts needed. ``base_store="dense"``
+keeps the legacy per-client stores (per-client trees / ``_base_rows`` /
+``_base_mat``), whose per-client encode-against-own-base error the parity
+suite pins against the sequential reference.
 """
 from __future__ import annotations
 
@@ -53,6 +66,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.feds3a_cnn import CONFIG as CNN_CONFIG
 from repro.core import aggregation as agg
+from repro.core.base_store import VersionedBaseStore
 from repro.core.functions import (adaptive_learning_rates, staleness_fn,
                                   supervised_weight)
 from repro.core.grouping import group_clients, init_index, kmeans_device
@@ -65,13 +79,14 @@ from repro.core.scheduler import SemiAsyncScheduler, paper_latency
 from repro.core.sparse_comm import SparseComm, flatten_tree, unflatten_like
 from repro.distributed.sharding import (CLIENT_AXIS, CLIENT_PAYLOAD_SPECS,
                                         CLIENT_STACK_SPEC, CLIENT_VEC_SPEC,
-                                        REPLICATED_SPEC, client_mesh,
-                                        padded_rows)
+                                        REPLICATED_SPEC, RING_SLOT_SPEC,
+                                        RING_SPEC, client_mesh, padded_rows)
 from repro.kernels.ops import csr_decode
 from repro.models.cnn import cnn_param_count, init_cnn
 from repro.optimizer import adam_init
 
 ENGINES = ("sequential", "batched", "sharded")
+BASE_STORES = ("versioned", "dense")
 
 # auto engine selection: minimum participants per device before the sharded
 # engine beats batched — below this the psum/collective overhead dominates
@@ -143,6 +158,13 @@ class FedS3AConfig:
                                          # N kept by magnitude (1.0 =
                                          # lossless); the sharded store is
                                          # O(M * residual_frac * N)
+    base_store: str = "versioned"        # "versioned": ring of tau+2 global
+                                         # reconstructions + chain deltas,
+                                         # chain-delta broadcast
+                                         # distribution, O(tau*N + M) server
+                                         # memory | "dense": legacy
+                                         # per-client base state (O(M*N)),
+                                         # per-target distribution encodes
     error_feedback: bool = False         # beyond-paper: EF-sparsification
     l1: float = 1e-5                    # §IV-F L1 regularisation
     use_kernels: bool = False           # Pallas kernels (interpret on CPU)
@@ -178,6 +200,10 @@ class FedS3ATrainer:
         self.M = len(data["clients"])
         self.cnn = self.cfg.cnn if self.cfg.cnn is not None else CNN_CONFIG
         self.engine = self._select_engine()
+        if self.cfg.base_store not in BASE_STORES:
+            raise ValueError(f"base_store must be one of {BASE_STORES}, "
+                             f"got {self.cfg.base_store!r}")
+        self.base_store = self.cfg.base_store
         # legacy attribute: any stacked-flat-state engine counts as batched
         self.batched = self.engine != "sequential"
         self.mesh = client_mesh() if self.engine == "sharded" else None
@@ -302,22 +328,44 @@ class FedS3ATrainer:
         # one zeroed Adam state shared by every distribution (JAX arrays are
         # immutable, so the template is safe to alias across clients)
         self._zero_opt = adam_init(params)
+        n = self._global_flat.shape[0]
+        if self.base_store == "versioned":
+            # staleness-windowed versioned base store, shared by all three
+            # engines: ring of tau+2 canonical reconstructions + one chain
+            # delta per retained transition + per-client versions. No
+            # per-client base state exists anywhere — a client's base is
+            # the ring row its base_version indexes.
+            self.store = VersionedBaseStore(self._global_flat, self.M,
+                                            cfg.tau)
+            self._advance_jit = None
         if self.batched:
             # server Adam state carries over from the warmup, flattened once
             self.server_opt = {"m": flatten_tree(opt["m"]),
                                "v": flatten_tree(opt["v"]), "t": opt["t"]}
-            self._base_version = np.zeros(self.M, dtype=int)
             self._key_jits = {}
             self._upload_jits = {}
             self._finalize_jit = None
-            if self.engine == "sharded":
-                # fleet layout: ONE (M, N) base matrix (and residual matrix
-                # under error feedback) so each round is a single gather of
-                # participant rows and a single scatter back — no per-row
-                # python traffic at thousand-client scale
-                self._base_mat = jnp.broadcast_to(
-                    self._global_flat, (self.M, self._global_flat.shape[0]))
-                if cfg.error_feedback:
+            if self.base_store == "dense":
+                self._base_version = np.zeros(self.M, dtype=int)
+                if self.engine == "sharded":
+                    # legacy fleet layout: ONE (M, N) base matrix so each
+                    # round is a single gather of participant rows and a
+                    # single scatter back — no per-row python traffic at
+                    # thousand-client scale (but O(M * N) server memory;
+                    # the versioned store removes it)
+                    self._base_mat = jnp.broadcast_to(
+                        self._global_flat, (self.M, n))
+                else:
+                    # per-client base params as flat (N,) device rows
+                    # (initially all aliasing the warmed-up global model —
+                    # JAX arrays are immutable); clients always start a
+                    # round at their base model, so no per-client trees are
+                    # kept at all. Rows rather than one (M, N) array so
+                    # distribution replaces references instead of copying
+                    # the whole fleet's parameters every round.
+                    self._base_rows = [self._global_flat] * self.M
+            if cfg.error_feedback:
+                if self.engine == "sharded":
                     if self.wire_fmt == "csr":
                         # sparse residual store: per-client residuals live in
                         # capacity-bounded CSR rows — O(M * rcap) instead of
@@ -325,26 +373,17 @@ class FedS3ATrainer:
                         # fleets (rcap*(4+4) bytes/client vs 4N dense). No
                         # per-row count is kept: padding slots hold value 0
                         # at index 0, so the decode needs none.
-                        rcap = self.comm.residual_capacity(
-                            self._global_flat.shape[0])
+                        rcap = self.comm.residual_capacity(n)
                         self._res_vals = jnp.zeros((self.M, rcap),
                                                    jnp.float32)
                         self._res_idx = jnp.zeros((self.M, rcap), jnp.int32)
                     else:
-                        self._residual_mat = jnp.zeros_like(self._base_mat)
-            else:
-                # per-client base params as flat (N,) device rows (initially
-                # all aliasing the warmed-up global model — JAX arrays are
-                # immutable); clients always start a round at their base
-                # model, so no per-client trees are kept at all. Rows rather
-                # than one (M, N) array so distribution replaces references
-                # instead of copying the whole fleet's parameters every
-                # round.
-                self._base_rows = [self._global_flat] * self.M
-                if cfg.error_feedback:
+                        self._residual_mat = jnp.zeros((self.M, n),
+                                                       jnp.float32)
+                else:
                     zero = jnp.zeros_like(self._global_flat)
                     self._residual_rows = [zero] * self.M
-        else:
+        elif self.base_store == "dense":
             # per-client state: (params, opt, base_version, base_params)
             self.clients = []
             for i in range(self.M):
@@ -354,6 +393,11 @@ class FedS3ATrainer:
                     "base_version": 0,
                     "base_params": params,
                 })
+        else:
+            # versioned sequential: a client's params/opt/base are all
+            # derived from its ring version; only the EF residual tree is
+            # genuinely per-client state
+            self.clients = [{} for _ in range(self.M)]
         self.global_version = 0
 
     # ------------------------------------------------------------------
@@ -370,19 +414,45 @@ class FedS3ATrainer:
     def global_params(self, tree):
         self._gp_tree = tree
 
+    @property
+    def base_versions(self):
+        """(M,) per-client base model versions — engine/store-agnostic."""
+        if self.base_store == "versioned":
+            return self.store.client_version.copy()
+        if self.engine == "sequential":
+            return np.array([c["base_version"] for c in self.clients])
+        return np.asarray(self._base_version).copy()
+
     # ------------------------------------------------------------------
     def _train_client(self, i, lr):
-        st = self.clients[i]
+        """Run client i's local epochs; returns (trained, base) trees."""
         self.rng, k = jax.random.split(self.rng)
         x = self.data["clients"][i]["x"]
-        params, opt = st["params"], st["opt"]
-        for _ in range(self.cfg.epochs):
-            params, opt, _ = self.client_epoch(params, opt, x, lr, k)
-        st["params"], st["opt"] = params, opt
-        return params
+        if self.base_store == "versioned":
+            # the base is a ring lookup by the client's version — identical
+            # for every client at that version, no per-client state read
+            base = unflatten_like(self.store.gather([i])[0], self._template)
+            params, opt = base, self._zero_opt
+        else:
+            st = self.clients[i]
+            base = st["base_params"]
+            params, opt = st["params"], st["opt"]
+        for e in range(self.cfg.epochs):
+            # epoch e > 0 folds its index into the per-round client key so
+            # each epoch draws fresh dropout masks (the batched engine does
+            # the identical fold; epoch 0 keeps the raw key so E=1 runs are
+            # unchanged). The former reuse of one key replayed the same
+            # masks every epoch.
+            ke = k if e == 0 else jax.random.fold_in(k, e)
+            params, opt, _ = self.client_epoch(params, opt, x, lr, ke)
+        if self.base_store == "dense":
+            st["params"], st["opt"] = params, opt
+        return params, base
 
     def _distribute(self, i):
-        """Send the current global model to client i (sparse diff)."""
+        """Send the current global model to client i (sparse diff against
+        its dense per-client base; the versioned store broadcasts chain
+        payloads instead — see ``_advance_versioned``)."""
         st = self.clients[i]
         if st["base_version"] == self.global_version:
             # no-op diff: nothing to transmit. The client was already
@@ -390,11 +460,89 @@ class FedS3ATrainer:
             # base_params and its opt is already the zeroed template.
             return
         delta, _ = self.comm.encode(self.global_params, st["base_params"])
-        newp = self.comm.apply(st["base_params"], delta)
+        # disabled sparsification moves the dense model: the copy is exact
+        # (base + (g - base) re-rounds; g itself does not)
+        newp = self.comm.apply(st["base_params"], delta) \
+            if self.comm.enabled else self.global_params
         st["params"] = newp
         st["base_params"] = newp
         st["base_version"] = self.global_version
         st["opt"] = self._zero_opt
+
+    # ------------------------------------------------------------------
+    # versioned base store plumbing (all engines)
+    def _advance_encode_body(self):
+        """Traced body shared by every engine's finalize stage: ONE chain-
+        transition encode of the new global model against the previous
+        canonical reconstruction R_r. Returns (R_{r+1}, payload) where the
+        payload tuple is (values, indices, stored) under the CSR format,
+        (nnz,) under dense_masked, and () with sparsification disabled —
+        there R_{r+1} is the new global model bit-for-bit, which is what
+        makes the versioned store reproduce the dense store exactly."""
+        if self.wire_fmt == "csr":
+            core = self.comm.csr_core(False)
+
+            def body(new_flat, prev):
+                vals, idx, stored, decoded = core(new_flat[None], prev[None])
+                return prev + decoded[0], (vals[0], idx[0], stored[0])
+
+            return body
+        core = self.comm.batch_core(False) if self.comm.enabled else None
+
+        def body(new_flat, prev):
+            if core is None:
+                return new_flat, ()
+            masked, nnz = core(new_flat[None], prev[None])
+            return prev + masked[0], (nnz[0],)
+
+        return body
+
+    def _chain_entry(self, payload):
+        """Payload tuple from ``_advance_encode_body`` -> the store's chain
+        record ({"stored": count[, "vals", "idx"]})."""
+        if self.wire_fmt == "csr":
+            return {"vals": payload[0], "idx": payload[1],
+                    "stored": payload[2]}
+        if self.comm.enabled:
+            return {"stored": payload[0]}
+        return {"stored": self._global_flat.shape[0]}
+
+    def _advance_versioned(self, recon, payload, targets, forced):
+        """Install the new reconstruction + chain delta, book the
+        chain-delta broadcast, bump the targets, reset forced residuals."""
+        self.store.advance(recon, self._chain_entry(payload),
+                           self.global_version)
+        self.store.account_distribution(self.comm, targets)
+        self._reset_forced_residuals(forced)
+
+    def _reset_forced_residuals(self, forced):
+        """A deprecated client's forced restart discards its in-flight
+        trajectory AND its error-feedback residual — the residual was
+        accumulated against a base the client no longer holds (see the
+        SparseComm docstring; pinned in tests/test_error_feedback.py)."""
+        if not self.cfg.error_feedback or not forced:
+            return
+        ids = sorted(set(forced))
+        if self.engine == "sharded":
+            fidx = jnp.asarray(ids)
+            if self.wire_fmt == "csr":
+                shape = (len(ids), self._res_vals.shape[1])
+                self._res_vals = _scatter_rows(
+                    self._res_vals, fidx, jnp.zeros(shape, jnp.float32))
+                self._res_idx = _scatter_rows(
+                    self._res_idx, fidx, jnp.zeros(shape, jnp.int32))
+            else:
+                self._residual_mat = _scatter_rows(
+                    self._residual_mat, fidx,
+                    jnp.zeros((len(ids), self._residual_mat.shape[1]),
+                              jnp.float32))
+        elif self.engine == "batched":
+            zero = jnp.zeros_like(self._global_flat)
+            for i in ids:
+                self._residual_rows[i] = zero
+        else:
+            for i in ids:
+                self.clients[i].pop("residual", None)
 
     # ------------------------------------------------------------------
     def run_round(self):
@@ -443,17 +591,16 @@ class FedS3ATrainer:
         client_models, sizes, stalenesses, hists = [], [], [], []
         for run in participants:
             i = run.client
-            newp = self._train_client(i, float(lrs[i]))
+            newp, base = self._train_client(i, float(lrs[i]))
             if cfg.error_feedback:
                 res = self.clients[i].get("residual")
                 if res is None:
                     res = jax.tree.map(jnp.zeros_like, newp)
-                delta, _, res = self.comm.encode(
-                    newp, self.clients[i]["base_params"], residual=res)
+                delta, _, res = self.comm.encode(newp, base, residual=res)
                 self.clients[i]["residual"] = res
             else:
-                delta, _ = self.comm.encode(newp, self.clients[i]["base_params"])
-            uploaded = self.comm.apply(self.clients[i]["base_params"], delta)
+                delta, _ = self.comm.encode(newp, base)
+            uploaded = self.comm.apply(base, delta)
             client_models.append(uploaded)
             sizes.append(len(self.data["clients"][i]["x"]))
             stalenesses.append(stale[i])
@@ -478,8 +625,20 @@ class FedS3ATrainer:
 
         # distribution: latest + deprecated clients get the new model
         part_ids = [run.client for run in participants]
-        for i in set(part_ids) | set(forced):
-            self._distribute(i)
+        targets = sorted(set(part_ids) | set(forced))
+        if self.base_store == "versioned":
+            # one chain-transition encode + chain-delta broadcast (each
+            # transition payload once per round) instead of one encode per
+            # target
+            if self._advance_jit is None:
+                self._advance_jit = jax.jit(self._advance_encode_body())
+            new_flat = flatten_tree(self.global_params)
+            recon, payload = self._advance_jit(new_flat, self.store.latest())
+            self._advance_versioned(recon, payload, targets, forced)
+        else:
+            for i in targets:
+                self._distribute(i)
+            self._reset_forced_residuals(forced)
 
         return self._round_epilogue(prev_time, participants, stale, forced, t)
 
@@ -573,10 +732,11 @@ class FedS3ATrainer:
         def body(new_flat, dist_base):
             g = jnp.broadcast_to(new_flat, dist_base.shape)
             if core is None:
-                masked = g - dist_base
-                nnz = jnp.full((dist_base.shape[0],), new_flat.shape[0])
-            else:
-                masked, nnz = core(g, dist_base)
+                # disabled sparsification moves the dense model: the new
+                # base is an exact copy (dist_base + (g - dist_base)
+                # re-rounds; g itself does not)
+                return g, jnp.full((dist_base.shape[0],), new_flat.shape[0])
+            masked, nnz = core(g, dist_base)
             return dist_base + masked, nnz
 
         return body
@@ -592,15 +752,22 @@ class FedS3ATrainer:
 
     def _finalize_fn(self):
         """server-flatten + weighted aggregation + distribute encode, one
-        jit (retraces per (participants, targets) shape pair). Under the
-        CSR format the aggregation consumes the upload payloads directly:
-        the scatter-add decode is fused into the weighted client sum
-        (``agg.blend_flat_csr``), so the dense uploaded stack never crosses
-        the stage boundary."""
+        jit. Under the CSR format the aggregation consumes the upload
+        payloads directly: the scatter-add decode is fused into the
+        weighted client sum (``agg.blend_flat_csr``), so the dense uploaded
+        stack never crosses the stage boundary.
+
+        Versioned base store: the distribute half is the single
+        chain-transition encode against R_r (no per-target stack — the jit
+        never retraces on the round's target count, only on K). The dense
+        store keeps the per-target encode over the (T, N) base stack
+        (retraces per (participants, targets) shape pair)."""
         if self._finalize_jit is not None:
             return self._finalize_jit
         use_kernel = self.cfg.use_kernels
-        distribute = self._distribute_encode_body()
+        versioned = self.base_store == "versioned"
+        distribute = self._advance_encode_body() if versioned \
+            else self._distribute_encode_body()
 
         if self.wire_fmt == "csr":
             @jax.jit
@@ -608,6 +775,9 @@ class FedS3ATrainer:
                 new_flat = agg.blend_flat_csr(
                     server_flat, base_flat, vals, idx, w, fw,
                     use_kernel=use_kernel)
+                if versioned:
+                    recon, payload = distribute(new_flat, dist_base)
+                    return (new_flat, recon) + payload
                 new_base, nnz = distribute(new_flat, dist_base)
                 return new_flat, new_base, nnz
         else:
@@ -619,6 +789,9 @@ class FedS3ATrainer:
                 else:
                     unsup = jnp.einsum("k,kn->n", w, uploaded)
                 new_flat = fw * server_flat + (1.0 - fw) * unsup
+                if versioned:
+                    recon, payload = distribute(new_flat, dist_base)
+                    return (new_flat, recon) + payload
                 new_base, nnz = distribute(new_flat, dist_base)
                 return new_flat, new_base, nnz
 
@@ -647,7 +820,12 @@ class FedS3ATrainer:
         idx = jnp.asarray(part_ids)
         xs = self._x_pad[idx]
         vs = self._valid_pad[idx]
-        base_flat = jnp.stack([self._base_rows[i] for i in part_ids])
+        if self.base_store == "versioned":
+            # version-indexed base gather from the (tau+2, N) ring — no
+            # per-client rows exist
+            base_flat = self.store.gather(part_ids)
+        else:
+            base_flat = jnp.stack([self._base_rows[i] for i in part_ids])
 
         trained_flat, _ = self.batched_epoch(base_flat, xs, vs,
                                              lrs[part_ids], keys)
@@ -706,20 +884,37 @@ class FedS3ATrainer:
         # participants are stale by construction (their base predates the
         # version bump), so the target set is never empty.
         targets = sorted(set(part_ids) | set(forced))
-        dist_base = jnp.stack([self._base_rows[i] for i in targets])
-        if self.wire_fmt == "csr":
-            new_flat, new_base, nnz_d = self._finalize_fn()(
-                sp_flat, base_flat, vals, pidx, jnp.asarray(w, jnp.float32),
-                jnp.float32(fw), dist_base)
-            self.comm.account_batch_csr(nnz_d, n, len(targets))
+        if self.base_store == "versioned":
+            # chain-delta broadcast: the finalize jit encodes ONE chain
+            # transition against R_r; the store books the suffix from the
+            # stalest target's version, each transition payload once
+            prev = self.store.latest()
+            if self.wire_fmt == "csr":
+                out = self._finalize_fn()(
+                    sp_flat, base_flat, vals, pidx,
+                    jnp.asarray(w, jnp.float32), jnp.float32(fw), prev)
+            else:
+                out = self._finalize_fn()(
+                    sp_flat, uploaded_flat, jnp.asarray(w, jnp.float32),
+                    jnp.float32(fw), prev)
+            new_flat, recon, payload = out[0], out[1], out[2:]
+            self._advance_versioned(recon, payload, targets, forced)
         else:
-            new_flat, new_base, nnz_d = self._finalize_fn()(
-                sp_flat, uploaded_flat, jnp.asarray(w, jnp.float32),
-                jnp.float32(fw), dist_base)
-            self.comm.account_batch(nnz_d, n, len(targets))
-        for row, i in enumerate(targets):
-            self._base_rows[i] = new_base[row]
-        self._base_version[targets] = self.global_version
+            dist_base = jnp.stack([self._base_rows[i] for i in targets])
+            if self.wire_fmt == "csr":
+                new_flat, new_base, nnz_d = self._finalize_fn()(
+                    sp_flat, base_flat, vals, pidx,
+                    jnp.asarray(w, jnp.float32), jnp.float32(fw), dist_base)
+                self.comm.account_batch_csr(nnz_d, n, len(targets))
+            else:
+                new_flat, new_base, nnz_d = self._finalize_fn()(
+                    sp_flat, uploaded_flat, jnp.asarray(w, jnp.float32),
+                    jnp.float32(fw), dist_base)
+                self.comm.account_batch(nnz_d, n, len(targets))
+            for row, i in enumerate(targets):
+                self._base_rows[i] = new_base[row]
+            self._base_version[targets] = self.global_version
+            self._reset_forced_residuals(forced)
         self._global_flat = new_flat
         self._gp_tree = None      # materialized lazily on demand
 
@@ -732,7 +927,13 @@ class FedS3ATrainer:
         shard_map per participant-shape: each device trains its row shard
         of the (Kp, N) stack and sparsifies the deltas against local
         per-client quantile thresholds. Entirely client-local — the stage
-        has no collectives."""
+        has no collectives.
+
+        Versioned base store: the stage takes the replicated (tau+2, N)
+        reconstruction ring plus the sharded per-client slot vector and
+        gathers each shard's base rows locally (``ring[slots]``) — the
+        (Kp, N) base stack never materializes outside the stage. The dense
+        store passes the pre-gathered (Kp, N) rows as before."""
         key = (with_residual, with_hist)
         fn = self._stage1_jits.get(key)
         if fn is not None:
@@ -743,11 +944,19 @@ class FedS3ATrainer:
         placeholder = jnp.zeros((), jnp.float32)       # shard_map needs
                                                        # arrays, not Nones
         _PV, _PI, _PC = CLIENT_PAYLOAD_SPECS
+        versioned = self.base_store == "versioned"
+        base_specs = (RING_SPEC, RING_SLOT_SPEC) if versioned else (_ROW2,)
 
         if self.wire_fmt == "csr":
             n = self._global_flat.shape[0]
 
-            def shard_fn(base, xs, vs, lrs, keys, rvals, ridx):
+            def shard_fn(*args):
+                if versioned:
+                    ring, slots = args[:2]
+                    base = ring[slots]
+                    xs, vs, lrs, keys, rvals, ridx = args[2:]
+                else:
+                    base, xs, vs, lrs, keys, rvals, ridx = args
                 trained, _ = epoch(base, xs, vs, lrs, keys)
                 # the residual store arrives as CSR rows; expand the local
                 # shard to dense only inside the stage (per-row scatter)
@@ -760,9 +969,9 @@ class FedS3ATrainer:
                         hists if with_hist else placeholder,
                         rp[0], rp[1])
 
-            in_specs = (_ROW2, _ROW3, _ROW2, _ROW, _ROW2,
-                        _PV if with_residual else _REP,
-                        _PI if with_residual else _REP)
+            in_specs = base_specs + (_ROW3, _ROW2, _ROW, _ROW2,
+                                     _PV if with_residual else _REP,
+                                     _PI if with_residual else _REP)
             out_specs = (_PV, _PI, _PC,
                          _ROW2 if with_hist else _REP,
                          _PV if with_residual else _REP,
@@ -773,7 +982,13 @@ class FedS3ATrainer:
             self._stage1_jits[key] = fn
             return fn
 
-        def shard_fn(base, xs, vs, lrs, keys, residual):
+        def shard_fn(*args):
+            if versioned:
+                ring, slots = args[:2]
+                base = ring[slots]
+                xs, vs, lrs, keys, residual = args[2:]
+            else:
+                base, xs, vs, lrs, keys, residual = args
             trained, _ = epoch(base, xs, vs, lrs, keys)
             uploaded, nnz, hists, new_res = encode_upload(
                 trained, base, xs, vs, residual if with_residual else None)
@@ -786,8 +1001,8 @@ class FedS3ATrainer:
                      _ROW2 if with_residual else _REP)
         fn = jax.jit(shard_map(
             shard_fn, mesh=mesh,
-            in_specs=(_ROW2, _ROW3, _ROW2, _ROW, _ROW2,
-                      _ROW2 if with_residual else _REP),
+            in_specs=base_specs + (_ROW3, _ROW2, _ROW, _ROW2,
+                                   _ROW2 if with_residual else _REP),
             out_specs=out_specs, check_rep=False))
         self._stage1_jits[key] = fn
         return fn
@@ -815,18 +1030,44 @@ class FedS3ATrainer:
 
     def _stage2_sharded(self):
         """Aggregate + distribute under shard_map: the weighted client sum
-        is one psum over the client axis (pad rows carry weight zero), the
-        f(r) blend replicates, and each device sparsifies the distribution
-        deltas for its shard of the target rows."""
+        is one psum over the client axis (pad rows carry weight zero) and
+        the f(r) blend replicates. Dense store: each device then sparsifies
+        the distribution deltas for its shard of the target rows. Versioned
+        store: every device runs the identical single chain-transition
+        encode against the replicated R_r (no per-target work at all)."""
         fn = self._stage2_jits.get("finalize")
         if fn is not None:
             return fn
         mesh = self.mesh
         use_kernel = self.cfg.use_kernels
-        distribute = self._distribute_encode_body()
+        versioned = self.base_store == "versioned"
+        distribute = self._advance_encode_body() if versioned \
+            else self._distribute_encode_body()
+        # payload arity of the advance encode (csr triple / nnz / exact)
+        n_payload = 3 if self.wire_fmt == "csr" else \
+            (1 if self.comm.enabled else 0)
 
         if self.wire_fmt == "csr":
             _PV, _PI, _ = CLIENT_PAYLOAD_SPECS
+
+            if versioned:
+                def shard_fn(server_flat, ring, slots, vals, idx, w, fw,
+                             prev):
+                    base = ring[slots]
+                    new_flat = agg.blend_flat_sharded_csr(
+                        server_flat, base, vals, idx, w, fw,
+                        axis_name=CLIENT_AXIS, use_kernel=use_kernel)
+                    recon, payload = distribute(new_flat, prev)
+                    return (new_flat, recon) + payload
+
+                fn = jax.jit(shard_map(
+                    shard_fn, mesh=mesh,
+                    in_specs=(_REP, RING_SPEC, RING_SLOT_SPEC, _PV, _PI,
+                              _ROW, _REP, _REP),
+                    out_specs=(_REP, _REP) + (_REP,) * n_payload,
+                    check_rep=False))
+                self._stage2_jits["finalize"] = fn
+                return fn
 
             def shard_fn(server_flat, base, vals, idx, w, fw, dist_base):
                 new_flat = agg.blend_flat_sharded_csr(
@@ -839,6 +1080,22 @@ class FedS3ATrainer:
                 shard_fn, mesh=mesh,
                 in_specs=(_REP, _ROW2, _PV, _PI, _ROW, _REP, _ROW2),
                 out_specs=(_REP, _ROW2, _ROW), check_rep=False))
+            self._stage2_jits["finalize"] = fn
+            return fn
+
+        if versioned:
+            def shard_fn(server_flat, uploaded, w, fw, prev):
+                new_flat = agg.blend_flat_sharded(
+                    server_flat, uploaded, w, fw,
+                    axis_name=CLIENT_AXIS, use_kernel=use_kernel)
+                recon, payload = distribute(new_flat, prev)
+                return (new_flat, recon) + payload
+
+            fn = jax.jit(shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(_REP, _ROW2, _ROW, _REP, _REP),
+                out_specs=(_REP, _REP) + (_REP,) * n_payload,
+                check_rep=False))
             self._stage2_jits["finalize"] = fn
             return fn
 
@@ -875,7 +1132,8 @@ class FedS3ATrainer:
         # same RNG stream as the sequential path: one split per REAL
         # participant in arrival order, then the server's split
         keys = self._split_keys(K)
-        idx = jnp.asarray(part_ids + part_ids[:1] * pad)
+        pad_ids = part_ids + part_ids[:1] * pad
+        idx = jnp.asarray(pad_ids)
         xs = self._x_pad[idx]
         vs = self._valid_pad[idx]
         if pad:
@@ -887,7 +1145,13 @@ class FedS3ATrainer:
                                 np.zeros(pad, np.float32)]))[:, None]
         lrs_p = jnp.asarray(np.concatenate([lrs[part_ids], np.zeros(pad)]),
                             jnp.float32)
-        base = _gather_rows(self._base_mat, idx)
+        if self.base_store == "versioned":
+            # the base rows are gathered from the replicated (tau+2, N)
+            # ring inside the stages; only the slot vector crosses in
+            slots = self.store.slots_for(pad_ids)
+            base_args = (self.store.ring, slots)
+        else:
+            base_args = (_gather_rows(self._base_mat, idx),)
         n = self._global_flat.shape[0]
 
         with_hist = cfg.group_based and K > 1
@@ -899,7 +1163,7 @@ class FedS3ATrainer:
                 rvals = _gather_rows(self._res_vals, idx)
                 ridx = _gather_rows(self._res_idx, idx)
                 vals, pidx, nnz, hists_dev, nrv, nri = stage1(
-                    base, xs, vs, lrs_p, keys, rvals, ridx)
+                    *base_args, xs, vs, lrs_p, keys, rvals, ridx)
                 self._res_vals = _scatter_rows(self._res_vals, idx[:K],
                                                nrv[:K])
                 self._res_idx = _scatter_rows(self._res_idx, idx[:K],
@@ -907,18 +1171,18 @@ class FedS3ATrainer:
             else:
                 z = jnp.zeros((), jnp.float32)
                 vals, pidx, nnz, hists_dev, _, _ = stage1(
-                    base, xs, vs, lrs_p, keys, z, z)
+                    *base_args, xs, vs, lrs_p, keys, z, z)
             self.comm.account_batch_csr(nnz[:K], n, K)
         elif cfg.error_feedback:
             residual = _gather_rows(self._residual_mat, idx)
             uploaded, nnz, hists_dev, new_res = stage1(
-                base, xs, vs, lrs_p, keys, residual)
+                *base_args, xs, vs, lrs_p, keys, residual)
             self._residual_mat = _scatter_rows(
                 self._residual_mat, idx[:K], new_res[:K])
             self.comm.account_batch(nnz[:K], n, K)
         else:
             uploaded, nnz, hists_dev, _ = stage1(
-                base, xs, vs, lrs_p, keys, jnp.zeros((), jnp.float32))
+                *base_args, xs, vs, lrs_p, keys, jnp.zeros((), jnp.float32))
             self.comm.account_batch(nnz[:K], n, K)
 
         # server supervised epoch on the current global model (Eq. 6), in
@@ -946,27 +1210,66 @@ class FedS3ATrainer:
         self.global_version += 1
         # distribution: latest + deprecated clients get the new model
         targets = sorted(set(part_ids) | set(forced))
-        T = len(targets)
-        Tp = padded_rows(T, D)
-        tidx = jnp.asarray(targets + targets[:1] * (Tp - T))
-        dist_base = _gather_rows(self._base_mat, tidx)
-        if self.wire_fmt == "csr":
-            new_flat, new_base, nnz_d = self._stage2_sharded()(
-                sp_flat, base, vals, pidx, w_pad, jnp.float32(fw), dist_base)
-            self.comm.account_batch_csr(nnz_d[:T], n, T)
+        if self.base_store == "versioned":
+            # chain-delta broadcast: one replicated chain-transition encode
+            # in the stage; the store books the suffix from the stalest
+            # target's version (each transition payload once) — no
+            # per-target rows, gathers or retraces on the target count
+            prev = self.store.latest()
+            if self.wire_fmt == "csr":
+                out = self._stage2_sharded()(
+                    sp_flat, self.store.ring, slots, vals, pidx, w_pad,
+                    jnp.float32(fw), prev)
+            else:
+                out = self._stage2_sharded()(
+                    sp_flat, uploaded, w_pad, jnp.float32(fw), prev)
+            new_flat, recon, payload = out[0], out[1], out[2:]
+            self._advance_versioned(recon, payload, targets, forced)
         else:
-            new_flat, new_base, nnz_d = self._stage2_sharded()(
-                sp_flat, uploaded, w_pad, jnp.float32(fw), dist_base)
-            self.comm.account_batch(nnz_d[:T], n, T)
-        self._base_mat = _scatter_rows(self._base_mat, tidx[:T],
-                                       new_base[:T])
-        self._base_version[targets] = self.global_version
+            T = len(targets)
+            Tp = padded_rows(T, D)
+            tidx = jnp.asarray(targets + targets[:1] * (Tp - T))
+            dist_base = _gather_rows(self._base_mat, tidx)
+            if self.wire_fmt == "csr":
+                new_flat, new_base, nnz_d = self._stage2_sharded()(
+                    sp_flat, base_args[0], vals, pidx, w_pad,
+                    jnp.float32(fw), dist_base)
+                self.comm.account_batch_csr(nnz_d[:T], n, T)
+            else:
+                new_flat, new_base, nnz_d = self._stage2_sharded()(
+                    sp_flat, uploaded, w_pad, jnp.float32(fw), dist_base)
+                self.comm.account_batch(nnz_d[:T], n, T)
+            self._base_mat = _scatter_rows(self._base_mat, tidx[:T],
+                                           new_base[:T])
+            self._base_version[targets] = self.global_version
+            self._reset_forced_residuals(forced)
         self._global_flat = new_flat
         self._gp_tree = None      # materialized lazily on demand
 
         return self._round_epilogue(prev_time, participants, stale, forced, t)
 
     # ------------------------------------------------------------------
+    def base_store_bytes(self):
+        """Bytes of server-side per-client base-model state (counterpart to
+        ``residual_store_bytes``). The versioned store is O(tau * N + M):
+        the (tau+2, N) reconstruction ring + retained chain payloads + the
+        per-client version array. The legacy dense layouts are O(M * N)
+        (per-client trees / rows / the (M, N) matrix) — the fleet-scale
+        memory the versioned store removes."""
+        if self.base_store == "versioned":
+            return self.store.bytes()
+        if self.engine == "sharded":
+            return int(self._base_mat.size * 4) + self._base_version.nbytes
+        if self.engine == "batched":
+            # rows may alias (clients at the same version share buffers
+            # until a distribution diverges them); report the logical
+            # footprint, matching what a real parameter server would hold
+            return int(sum(r.size * 4 for r in self._base_rows)) \
+                + self._base_version.nbytes
+        return int(sum(
+            sum(leaf.size * 4 for leaf in jax.tree.leaves(c["base_params"]))
+            for c in self.clients)) + 8 * self.M
+
     def residual_store_bytes(self):
         """Bytes held by the per-client error-feedback residual state (0
         when EF is off). The sharded CSR store is O(M * rcap); the legacy

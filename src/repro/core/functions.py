@@ -41,8 +41,12 @@ def staleness_fn(name, a=None, b=0):
         aa = 0.5 if a is None else a
         return lambda s: float((s + 1.0) ** (-aa))
     if name == "hinge":
+        # FedAsync-style hinge: flat at 1 until s = b, then the polynomial
+        # decay RESTARTS at the hinge point — 1 / (a * (s - b) + 1), which
+        # is continuous at s = b for any b (the former s + b form jumped
+        # from 1 to 1/(2ab+1) there whenever b > 0)
         aa = 1.0 if a is None else a
-        return lambda s: 1.0 if s <= b else 1.0 / (aa * (s + b) + 1.0)
+        return lambda s: 1.0 if s <= b else 1.0 / (aa * (s - b) + 1.0)
     if name == "exponential":
         aa = E / 2 if a is None else a
         return lambda s: float(aa ** (-s))
@@ -70,8 +74,7 @@ def round_weight_fn(name, a=None):
 
 # --- adaptive learning rate (Eq. 11-12) --------------------------------------
 def adaptive_learning_rates(participation, *, base_lr, round_weight="constant",
-                            current_round=None, clip=(0.2, 5.0),
-                            adaptive=True):
+                            clip=(0.2, 5.0), adaptive=True):
     """participation: (R_so_far, M) 0/1 matrix of global-update participation.
 
     f_i = sum_r h(r) * part[r, i] / sum_j sum_r h(r) * part[r, j]

@@ -156,13 +156,17 @@ def make_batched_client_epoch(cfg, *, batch_size=100, threshold=0.95, l1=0.0,
                 flat, o, l = jax.lax.cond(live, live_step, dead_step, None)
                 return (flat, o, rng), (l, live)
 
-            # Adam state persists across the client's E epochs, and the RNG
-            # restarts from the client key each epoch — both matching the
-            # sequential reference (_train_client re-invokes its epoch with
-            # the carried opt state and the same per-round key).
-            for _ in range(epochs):
+            # Adam state persists across the client's E epochs; epoch e > 0
+            # folds its index into the client key so every epoch draws fresh
+            # dropout masks (epoch 0 keeps the raw key, so E=1 runs are
+            # bit-identical to the pre-fold behaviour). _train_client uses
+            # the same fold, keeping the engines pinned at epochs > 1 — the
+            # old restart-from-the-same-key form replayed identical masks
+            # every epoch in BOTH paths.
+            for e in range(epochs):
+                ek = rng if e == 0 else jax.random.fold_in(rng, e)
                 (flat, opt, _), (losses, lives) = jax.lax.scan(
-                    step, (flat, opt, rng), (xb, vb))
+                    step, (flat, opt, ek), (xb, vb))
             return flat, jnp.sum(losses) / jnp.maximum(jnp.sum(lives), 1.0)
 
         # Client-axis strategy: vmap on accelerators; on XLA:CPU batched

@@ -85,7 +85,6 @@ class SemiAsyncScheduler:
             t, _, run = heapq.heappop(st.runs)
             st.time = max(st.time, t)
             arrivals.append(run)
-        t_start_prev = st.time
         participants = arrivals
         round_idx = st.round
 

@@ -156,6 +156,17 @@ class SparseComm:
     see the module docstring. ``capacity=None`` derives the per-row payload
     capacity from the keep fraction; an explicit int pins it.
 
+    Error-feedback residuals and forced restarts: a residual is delta mass
+    accumulated against the base the client held when it last uploaded.
+    When the scheduler force-restarts a deprecated client (version gap >
+    tau) its in-flight trajectory is discarded and it starts over from the
+    new global model — the trainer therefore RESETS that client's residual
+    to zero at the forced restart (pinned in tests/test_error_feedback.py).
+    Re-offering the stale residual against a base the client no longer has
+    would inject drift that EF exists to prevent; fresh base, fresh
+    residual. (Residuals of ordinary participants persist across rounds as
+    usual — that carry-over is the whole point of EF.)
+
     Byte counters: ``dense_bytes`` is host-computable (4 bytes/param/message)
     and kept as a plain int; payload bytes need the on-device nnz count, so
     each message appends one device scalar to ``_pending_payload`` and the
@@ -306,16 +317,43 @@ class SparseComm:
         self.dense_bytes += params_per_message * n_messages * 4
         self.messages += n_messages
 
+    def account_payload(self, payload_bytes_dev, params_per_message,
+                        n_messages, *, row_ptr_rows=0):
+        """Record ``n_messages`` messages whose total payload bytes were
+        already computed on device (one scalar). Used by the versioned base
+        store's broadcast accounting, which folds its chain-suffix byte sum
+        into a single jitted reduction instead of handing nnz vectors back
+        for re-summing (every eager op on the replicated stage outputs
+        costs a multi-device dispatch). ``row_ptr_rows`` adds the CSR
+        framing (4 * (rows + 1)) when the payloads are CSR rows. No host
+        sync."""
+        self._pending_payload.append(payload_bytes_dev)
+        if row_ptr_rows:
+            self.row_ptr_bytes += 4 * (row_ptr_rows + 1)
+        self.dense_bytes += params_per_message * n_messages * 4
+        self.messages += n_messages
+
     def wire_breakdown(self):
-        """Cumulative bytes-on-wire by CSR component (values / indices /
-        row_ptr). Materializes pending device scalars (one transfer).
-        Meaningful under the CSR format (stored elements are exactly one
-        fp32 value + one int32 index each); with sparsification disabled
-        the whole dense payload is reported under values/indices."""
+        """Cumulative bytes-on-wire by component. Materializes pending
+        device scalars (one transfer). Under the CSR format every stored
+        element is exactly one fp32 value + one int32 index, so the payload
+        splits evenly between ``values_bytes`` and ``indices_bytes`` plus
+        the host-tracked ``row_ptr_bytes`` framing. With sparsification
+        disabled messages are plain dense vectors — no values/indices
+        structure exists, so the whole payload is reported as
+        ``dense_payload_bytes`` instead of being mislabelled as CSR
+        components."""
         self._materialize()
+        if not self.enabled:
+            return {"values_bytes": 0.0,
+                    "indices_bytes": 0.0,
+                    "row_ptr_bytes": 0.0,
+                    "dense_payload_bytes": self._payload_host,
+                    "payload_bytes": self._payload_host + self.row_ptr_bytes}
         return {"values_bytes": self._payload_host / 2,
                 "indices_bytes": self._payload_host / 2,
                 "row_ptr_bytes": float(self.row_ptr_bytes),
+                "dense_payload_bytes": 0.0,
                 "payload_bytes": self._payload_host + self.row_ptr_bytes}
 
     # -- single-message path (reference implementation) --------------------

@@ -147,6 +147,14 @@ REPLICATED_SPEC = P()
 # packs/decodes only its local client rows, so compaction adds no collective
 CLIENT_PAYLOAD_SPECS = (CLIENT_STACK_SPEC, CLIENT_STACK_SPEC,
                         CLIENT_VEC_SPEC)
+# versioned base store (staleness-windowed delta chain): the (tau+2, N)
+# reconstruction ring is tiny and REPLICATED on every device, while the
+# per-client ring-slot index vector shards like any other per-client scalar
+# — so the version-indexed base gather ``ring[slots]`` runs shard-local
+# inside the round stages with no collective, replacing the dense (M, N)
+# per-client row gather the legacy base store needed
+RING_SPEC = P(None, None)
+RING_SLOT_SPEC = CLIENT_VEC_SPEC
 
 
 def client_mesh(num_devices=None) -> Mesh:

@@ -123,6 +123,29 @@ def test_csr_reported_bytes_equal_actual_payload(rng):
     assert comm.aco < 0.5
 
 
+def test_wire_breakdown_disabled_reports_dense_component(rng):
+    """With sparsification disabled messages are plain dense vectors: the
+    breakdown must report them under ``dense_payload_bytes``, not smear
+    them across the CSR values/indices components that do not exist."""
+    comm = SparseComm("p0.2", use_kernel=False, enabled=False)
+    new = _tree(rng)
+    base = jax.tree.map(jnp.zeros_like, new)
+    _ = comm.encode(new, base)
+    n = sum(int(np.prod(v.shape)) for v in jax.tree.leaves(new))
+    wb = comm.wire_breakdown()
+    assert wb["values_bytes"] == 0.0
+    assert wb["indices_bytes"] == 0.0
+    assert wb["row_ptr_bytes"] == 0.0
+    assert wb["dense_payload_bytes"] == n * 4
+    assert wb["payload_bytes"] == n * 4
+    # enabled CSR channels report zero dense component
+    comm2 = SparseComm("p0.2", use_kernel=False)
+    comm2.encode(new, base)
+    wb2 = comm2.wire_breakdown()
+    assert wb2["dense_payload_bytes"] == 0.0
+    assert wb2["values_bytes"] == wb2["indices_bytes"] > 0
+
+
 def test_csr_weighted_scatter_matches_dense_decode(rng):
     from repro.kernels import ref as R
     x = jax.random.normal(rng, (4, 700))

@@ -1,0 +1,199 @@
+"""Versioned base store invariants (staleness-windowed delta chain).
+
+The store replaces every dense per-client base layout with a ring of
+``tau + 2`` canonical reconstructions plus one chain delta per round
+transition; these tests pin its three contracts:
+
+* same-version clients hold the bit-identical base (a ring lookup, not
+  per-client state);
+* ``sparse_comm=False`` reproduces the dense store exactly (every chain
+  delta is an exact dense copy, so the two stores cannot diverge);
+* ring eviction can never drop a version still referenced by an in-flight
+  or forced client (the scheduler's tau-forcing invariant guarantees it;
+  the store hard-errors if it is ever violated).
+
+Plus the fleet-scale claims: O(tau * N + M) server memory and per-version
+broadcast distribution (fewer messages and bytes than the per-target dense
+store).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.feds3a_cnn import CNNConfig
+from repro.core import FedS3AConfig, FedS3ATrainer
+from repro.core.base_store import VersionedBaseStore
+from repro.core.sparse_comm import SparseComm, flatten_tree
+from repro.data import make_dataset
+
+TEST_CNN = CNNConfig(name="feds3a-cnn-store", conv_filters=(8, 8), hidden=16)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("basic", scale=0.0015, seed=0)
+
+
+# --- store unit behaviour ---------------------------------------------------
+def test_ring_slots_and_window():
+    flat = jnp.arange(8, dtype=jnp.float32)
+    st = VersionedBaseStore(flat, M=4, tau=1)
+    assert st.depth == 3
+    assert st.version == 0
+    np.testing.assert_array_equal(np.asarray(st.gather([0, 2])),
+                                  np.asarray(jnp.stack([flat, flat])))
+    # advance twice: ring holds versions 0..2 in slots v % 3
+    for v in (1, 2):
+        st.client_version[:] = max(v - 1, 0)      # everyone keeps up
+        st.advance(flat + v, {"stored": 4}, v)
+    assert st.version == 2
+    assert sorted(st.slot_version.tolist()) == [0, 1, 2]
+    np.testing.assert_array_equal(np.asarray(st.latest()),
+                                  np.asarray(flat + 2))
+    # non-sequential advance is rejected
+    with pytest.raises(ValueError):
+        st.advance(flat, {"stored": 4}, 4)
+
+
+def test_ring_eviction_refuses_referenced_version():
+    """Advancing over a slot whose version a client still references is a
+    staleness-window violation and must hard-error, not corrupt bases."""
+    flat = jnp.zeros(4, jnp.float32)
+    st = VersionedBaseStore(flat, M=2, tau=0)       # depth 2: slots {0, 1}
+    st.client_version[:] = 0                        # both clients at v0
+    st.advance(flat + 1, {"stored": 4}, 1)          # slot 1, evicts nothing
+    # version 2 would overwrite slot 0 = version 0, still referenced
+    with pytest.raises(RuntimeError):
+        st.advance(flat + 2, {"stored": 4}, 2)
+    # once the stragglers move up, the same advance succeeds
+    st.client_version[:] = 1
+    st.advance(flat + 2, {"stored": 4}, 2)
+    assert st.version == 2
+
+
+def test_trainer_never_trips_eviction_across_tau(data):
+    """End to end, the scheduler's tau-forcing keeps every client inside
+    the ring window, so eviction never fires — including tau=0 where every
+    round forces all stragglers."""
+    for tau in (0, 1, 2):
+        tr = FedS3ATrainer(data, FedS3AConfig(
+            rounds=5, seed=0, tau=tau, cnn=TEST_CNN))
+        for _ in range(5):
+            tr.run_round()                          # raises on violation
+        assert (tr.store.version - tr.base_versions <= tau).all()
+        assert (tr.base_versions >= 0).all()
+        # exactly the re-broadcastable suffix window stays retained
+        assert len(tr.store._chain) == min(tau + 1, tr.store.version)
+
+
+# --- same-version clients share the identical base --------------------------
+@pytest.mark.parametrize("engine", ["sequential", "batched", "sharded"])
+def test_same_version_clients_share_bitwise_base(data, engine):
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=3, seed=0, engine=engine, cnn=TEST_CNN))
+    for _ in range(3):
+        tr.run_round()
+    bases = np.asarray(tr.store.gather(list(range(tr.M))))
+    vers = tr.base_versions
+    assert len(set(vers)) >= 1
+    for v in set(vers):
+        rows = bases[vers == v]
+        assert (rows == rows[0]).all(), f"version {v} bases diverge"
+    # distinct versions hold distinct reconstructions (training moved them)
+    if len(set(vers)) > 1:
+        v1, v2 = sorted(set(vers))[:2]
+        assert not (bases[vers == v1][0] == bases[vers == v2][0]).all()
+
+
+# --- sparse_comm=False reproduces the dense store exactly --------------------
+@pytest.mark.parametrize("engine", ["sequential", "batched", "sharded"])
+def test_disabled_sparsification_matches_dense_store_exactly(data, engine):
+    """With sparsification off every chain delta is an exact dense copy, so
+    R_v == G_v bit-for-bit and the versioned store cannot diverge from the
+    dense store — the runs are identical to the last bit."""
+    flats = {}
+    for store in ("versioned", "dense"):
+        tr = FedS3ATrainer(data, FedS3AConfig(
+            rounds=3, seed=0, engine=engine, sparse_comm=False,
+            base_store=store, cnn=TEST_CNN))
+        tr.train()
+        flats[store] = np.asarray(flatten_tree(tr.global_params))
+    assert np.array_equal(flats["versioned"], flats["dense"])
+
+
+# --- fleet-scale claims ------------------------------------------------------
+def test_base_store_bytes_sublinear_in_fleet(data):
+    """Versioned server memory is O(tau * N + M): bounded by the ring +
+    retained chain payloads + the version array — nowhere near the
+    O(M * N) dense layouts."""
+    tr = FedS3ATrainer(data, FedS3AConfig(rounds=2, seed=0, cnn=TEST_CNN))
+    tr.run_round()
+    n = int(tr._global_flat.shape[0])
+    tau = tr.cfg.tau
+    cap = tr.comm.payload_capacity(n)
+    bound = (tau + 2) * n * 4 + (tau + 1) * (cap * 8 + 4) + 8 * tr.M + 64
+    assert tr.base_store_bytes() <= bound
+    dense = FedS3ATrainer(data, FedS3AConfig(
+        rounds=2, seed=0, base_store="dense", cnn=TEST_CNN))
+    dense.run_round()
+    assert tr.base_store_bytes() < dense.base_store_bytes()
+    assert dense.base_store_bytes() >= tr.M * n * 4
+
+
+def test_versioned_distribution_fewer_messages_and_bytes(data):
+    """Distribution is a chain-delta broadcast (each transition payload on
+    the wire once per round, ≤ tau + 1 of them) instead of one encode per
+    target: strictly fewer messages and bytes-on-wire than the dense store
+    on the same schedule."""
+    runs = {}
+    for store in ("versioned", "dense"):
+        tr = FedS3ATrainer(data, FedS3AConfig(
+            rounds=4, seed=0, base_store=store, cnn=TEST_CNN))
+        tr.train()
+        runs[store] = tr
+    v, d = runs["versioned"], runs["dense"]
+    # identical schedules -> identical upload accounting; the delta is all
+    # distribution
+    assert np.array_equal(v.participation, d.participation)
+    assert v.comm.messages < d.comm.messages
+    assert v.comm.payload_bytes < d.comm.payload_bytes
+    # the store's own ledger counts only the broadcasts
+    assert 0 < v.store.dist_payload_bytes() < v.comm.payload_bytes
+
+
+def test_broadcast_counts_each_transition_once():
+    """Targets at several distinct stale versions share one broadcast: the
+    round transmits each needed transition payload exactly once (the
+    suffix from the stalest target), never once per version group — so the
+    payload count is bounded by tau + 1 regardless of target spread."""
+    flat = jnp.zeros(16, jnp.float32)
+    st = VersionedBaseStore(flat, M=3, tau=2)
+    for v in (1, 2, 3):
+        st.client_version[:] = v - 1            # keep everyone in-window
+        st.advance(flat + v, {"stored": jnp.int32(4)}, v)
+    # clients parked at versions 0, 1, 2 with the store at version 3
+    st.client_version[:] = np.array([0, 1, 2])
+    comm = SparseComm("p0.5", use_kernel=False)
+    st.account_distribution(comm, [0, 1, 2])
+    # union of suffixes {1,2,3} | {2,3} | {3} = transitions {1, 2, 3}
+    assert comm.messages == 3
+    assert comm.messages <= st.tau + 1
+    assert comm.payload_bytes == 3 * 4 * 8 + 4 * (3 + 1)   # + row_ptr
+    assert (st.client_version == 3).all()
+
+
+def test_versioned_store_rejects_unknown():
+    data = make_dataset("basic", scale=0.0015, seed=0)
+    with pytest.raises(ValueError):
+        FedS3ATrainer(data, FedS3AConfig(base_store="ringbuffer",
+                                         cnn=TEST_CNN))
+
+
+def test_account_distribution_rejects_fresh_target():
+    flat = jnp.zeros(4, jnp.float32)
+    st = VersionedBaseStore(flat, M=2, tau=1)
+    st.advance(flat + 1, {"stored": 4}, 1)
+    st.client_version[0] = 1
+    comm = SparseComm("p0.5", use_kernel=False, enabled=False)
+    with pytest.raises(ValueError):
+        st.account_distribution(comm, [0])          # already at version 1

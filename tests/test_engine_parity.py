@@ -40,6 +40,17 @@ MATRIX = [
     # stays pinned across all three engines, including its EF path
     ("noniid-wire-dense-k6", "basic",
      dict(C=0.6, tau=2, wire_format="dense_masked", error_feedback=True)),
+    # legacy dense base store (per-client base rows/matrix, per-target
+    # distribution encodes): the sequential reference cell here IS the
+    # pre-versioned reference implementation, so this row pins the dense
+    # store's engines to it exactly as before the versioned default
+    ("noniid-dense-store-k6", "basic",
+     dict(C=0.6, tau=2, base_store="dense")),
+    # epochs > 1: every epoch folds its index into the client RNG key in
+    # both the sequential loop and the batched lax.scan, so the fixed
+    # paths stay pinned to each other (the old shared-key replay bug hid
+    # here because both paths shared it)
+    ("noniid-epochs2-k6", "basic", dict(C=0.6, tau=2, epochs=2)),
 ]
 
 
@@ -112,8 +123,14 @@ def test_sharded_pads_indivisible_k(matrix_runs):
 def test_sharded_base_versions_track_sequential(matrix_runs):
     ref, _ = matrix_runs["noniid-tau1-k8", "sequential"]
     tr, _ = matrix_runs["noniid-tau1-k8", "sharded"]
-    seq_versions = np.array([c["base_version"] for c in ref.clients])
-    assert np.array_equal(seq_versions, tr._base_version)
+    assert np.array_equal(ref.base_versions, tr.base_versions)
+
+
+def test_dense_store_base_versions_track_sequential(matrix_runs):
+    """The legacy dense store keeps its per-engine version bookkeeping."""
+    ref, _ = matrix_runs["noniid-dense-store-k6", "sequential"]
+    tr, _ = matrix_runs["noniid-dense-store-k6", "sharded"]
+    assert np.array_equal(ref.base_versions, tr.base_versions)
 
 
 def test_padded_rows_helper():

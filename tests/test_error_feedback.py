@@ -3,6 +3,7 @@ carried forward instead of lost (fixes the paper's lossy §IV-F scheme)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.sparse_comm import SparseComm
 
@@ -98,6 +99,46 @@ def test_trainer_error_feedback_mode_runs():
     res = tr.train()
     assert res["metrics"]["accuracy"] > 0.8
     assert res["aco"] < 0.6
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched", "sharded"])
+def test_forced_restart_resets_residual(engine):
+    """Pinned contract (see the SparseComm docstring): a deprecated
+    client's forced restart discards its EF residual along with its
+    in-flight trajectory — the residual was accumulated against a base the
+    client no longer holds, so re-offering it would inject stale drift.
+    tau=0 forces every straggler each round, so the scenario is hit
+    immediately; at least one forced client must have participated before
+    (i.e. actually carried a residual) for the test to mean anything."""
+    import jax as _jax
+    if engine == "sharded" and len(_jax.devices()) < 2:
+        pytest.skip("needs a client mesh")
+    from repro.configs.feds3a_cnn import CNNConfig
+    from repro.core import FedS3AConfig, FedS3ATrainer
+    from repro.data import make_dataset
+    cnn = CNNConfig(name="feds3a-cnn-forced", conv_filters=(8, 8), hidden=16)
+    data = make_dataset("basic", scale=0.0015, seed=0)
+    # C=0.8, tau=0: wide rounds force recent participants quickly (measured:
+    # a previously-participating client is forced within 10 rounds)
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=10, seed=0, engine=engine, tau=0, C=0.8, error_feedback=True,
+        cnn=cnn))
+    participated, reset_checked = set(), 0
+    for _ in range(10):
+        if reset_checked:
+            break
+        log = tr.run_round()
+        for i in log.forced:
+            if engine == "sequential":
+                assert tr.clients[i].get("residual") is None
+            elif engine == "batched":
+                assert float(jnp.abs(tr._residual_rows[i]).sum()) == 0.0
+            else:
+                assert float(jnp.abs(tr._res_vals[i]).sum()) == 0.0
+            if i in participated:
+                reset_checked += 1      # had a real residual before reset
+        participated.update(log.participants)
+    assert reset_checked > 0
 
 
 def test_sharded_ef_uses_sparse_residual_store():

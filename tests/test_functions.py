@@ -38,6 +38,32 @@ def test_staleness_fn_properties(name):
         assert b > 0
 
 
+@pytest.mark.parametrize("b", [1, 2, 5])
+def test_hinge_staleness_continuous_at_b(b):
+    """FedAsync-style hinge: flat at 1 until s = b, then 1/(a(s-b)+1) —
+    continuous at the hinge point for any b. (The former 1/(a(s+b)+1)
+    form jumped from 1 to 1/(2ab+1) at s = b whenever b > 0.)"""
+    a = 0.7
+    g = staleness_fn("hinge", a=a, b=b)
+    assert g(b) == 1.0
+    eps = 1e-9
+    assert abs(g(b + eps) - 1.0) < 1e-6          # continuity at s = b
+    # decay restarts AT the hinge: g(b + d) depends on d only, not on b
+    for d in (1, 2, 3):
+        assert abs(g(b + d) - 1.0 / (a * d + 1.0)) < 1e-12
+    # monotone decreasing past the hinge, flat before it
+    assert g(b - 1) == 1.0
+    assert g(b + 2) < g(b + 1) < 1.0
+
+
+def test_hinge_staleness_default_b0_unchanged():
+    """b = 0 (the default) was never affected by the s+b bug."""
+    g = staleness_fn("hinge")
+    assert g(0) == 1.0
+    for s in (1, 2, 3):
+        assert abs(g(s) - 1.0 / (s + 1.0)) < 1e-12
+
+
 @pytest.mark.parametrize("name", ["constant", "logarithmic", "polynomial",
                                   "exponential_smoothing", "exponential"])
 def test_round_weight_nonneg_monotone(name):
