@@ -22,7 +22,12 @@ cell pins the versioned base store's two wins: server base memory
 — each transition payload once a round, at most tau+1 — vs one encode per
 target;
 the versioned cells also report the broadcast-only ledger as
-``dist_payload_bytes_per_round``).
+``dist_payload_bytes_per_round``). A final ``--faults`` cell per K runs the
+REFERENCE_CHURN traffic model (crash 10%, upload loss 5%, churn) with a
+round deadline and quorum floor, reporting fleet-health aggregates
+(``degraded_rounds``, ``mean_quorum_frac``, ``resyncs``, ``crashes``,
+``lost_uploads``) so the regression gate can bound round-efficiency
+degradation.
 
   PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
   PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: K<=64,
@@ -52,13 +57,14 @@ SMOKE_DEVICES = (1, 4)
 
 
 def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
-               base_store="versioned"):
+               base_store="versioned", faults=False):
     """One (K, current-device-count) measurement. Import jax lazily so the
     driver process never initializes an XLA client."""
     import jax
 
     from repro.configs.feds3a_cnn import CNNConfig
-    from repro.core import FedS3AConfig, FedS3ATrainer
+    from repro.core import REFERENCE_CHURN, FedS3AConfig, FedS3ATrainer
+    from repro.core.metrics import fleet_health
     from repro.data import make_fleet_dataset
 
     warmup = 3                             # distinct distribution-target
@@ -67,7 +73,13 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     tr = FedS3ATrainer(data, FedS3AConfig(
         rounds=rounds + warmup, seed=seed, engine="sharded", cnn=cnn,
         C=0.5, batch_size=50, error_feedback=error_feedback,
-        base_store=base_store))
+        base_store=base_store,
+        # fault cell: the reference churn profile with a round deadline, so
+        # the report carries a round-efficiency number (mean_quorum_frac)
+        # the regression gate can bound
+        traffic=REFERENCE_CHURN if faults else None,
+        round_deadline=700.0 if faults else None,
+        quorum_floor=2 if faults else 1))
 
     for _ in range(warmup):                # shapes retrace the first rounds
         tr.run_round()
@@ -85,11 +97,20 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     dist1 = tr.store.dist_payload_bytes() if base_store == "versioned" else 0
 
     n_params = int(tr._global_flat.shape[0])
+    fleet = fleet_health(tr.logs)
     return {
         "clients": num_clients,
         "devices": len(jax.devices()),
         "error_feedback": error_feedback,
         "base_store": base_store,
+        "faults": faults,
+        # fleet-health aggregates over the whole run (warmup + timed):
+        # deterministic for a fixed seed, so the gate can pin them
+        "degraded_rounds": fleet["degraded_rounds"],
+        "mean_quorum_frac": fleet["mean_quorum_frac"],
+        "resyncs": fleet["resyncs"],
+        "crashes": fleet["crashes"],
+        "lost_uploads": fleet["lost_uploads"],
         # server-side base-model state: the versioned ring + chain is
         # O(tau*N + M); the dense equivalent is the (M, N) matrix
         "base_store_bytes": tr.base_store_bytes(),
@@ -122,22 +143,27 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
 
 def worker(args):
     results = [bench_cell(k, rounds=args.rounds, seed=args.seed,
-                          error_feedback=args.ef, base_store=args.base_store)
+                          error_feedback=args.ef, base_store=args.base_store,
+                          faults=args.faults)
                for k in args.clients]
     with open(args.out, "w") as f:
         json.dump(results, f)
 
 
 def _cells(args):
-    """(devices, clients, error_feedback, base_store) cells: the plain
-    sweep (versioned store, the default) plus — at the highest device count
-    — one EF cell per K (the residual-store story) and one dense-base-store
-    cell per K (the versioned-store memory + distribution-bytes story)."""
+    """(devices, clients, error_feedback, base_store, faults) cells: the
+    plain sweep (versioned store, the default) plus — at the highest device
+    count — one EF cell per K (the residual-store story), one
+    dense-base-store cell per K (the versioned-store memory +
+    distribution-bytes story), and one fault-injected cell per K
+    (REFERENCE_CHURN + round deadline: the graceful-degradation story,
+    gated on round efficiency)."""
     dmax = max(args.devices)
-    cells = [(d, k, False, "versioned") for d in args.devices
+    cells = [(d, k, False, "versioned", False) for d in args.devices
              for k in args.clients]
-    cells += [(dmax, k, True, "versioned") for k in args.clients]
-    cells += [(dmax, k, False, "dense") for k in args.clients]
+    cells += [(dmax, k, True, "versioned", False) for k in args.clients]
+    cells += [(dmax, k, False, "dense", False) for k in args.clients]
+    cells += [(dmax, k, False, "versioned", True) for k in args.clients]
     return cells
 
 
@@ -147,21 +173,24 @@ def driver(args):
     # (measured 4-5x on the later cell — lingering executables and
     # allocator state), so every cell gets a pristine runtime
     results = []
-    for d, k, ef, store in _cells(args):
+    for d, k, ef, store, faults in _cells(args):
         env = dict(os.environ)
         flags = [f for f in env.get("XLA_FLAGS", "").split()
                  if "--xla_force_host_platform_device_count" not in f]
         env["XLA_FLAGS"] = " ".join(
             flags + [f"--xla_force_host_platform_device_count={d}"])
-        out = f".bench_fleet_worker_{d}_{k}_{int(ef)}_{store}.json"
+        out = f".bench_fleet_worker_{d}_{k}_{int(ef)}_{store}_{int(faults)}" \
+              ".json"
         cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
                "--worker", "--out", out, "--rounds", str(args.rounds),
                "--seed", str(args.seed), "--clients", str(k),
                "--base-store", store]
         if ef:
             cmd.append("--ef")
-        print(f"[bench_fleet] K={k} devices={d} ef={ef} store={store}",
-              flush=True)
+        if faults:
+            cmd.append("--faults")
+        print(f"[bench_fleet] K={k} devices={d} ef={ef} store={store} "
+              f"faults={faults}", flush=True)
         subprocess.run(cmd, env=env, check=True)
         with open(out) as f:
             results.extend(json.load(f))
@@ -169,7 +198,8 @@ def driver(args):
 
     for r in results:
         tag = " ef" if r["error_feedback"] else \
-            (" db" if r.get("base_store") == "dense" else "")
+            (" fx" if r.get("faults") else
+             (" db" if r.get("base_store") == "dense" else ""))
         print(f"  K={r['clients']:5d} D={r['devices']}{tag:3s} "
               f"{r['rounds_per_sec']:7.3f} rounds/s "
               f"({r['s_per_round']*1e3:8.1f} ms/round)  "
@@ -179,10 +209,16 @@ def driver(args):
         if r["error_feedback"]:
             print(f"        residual store {r['residual_store_bytes']/1e6:.2f}"
                   f" MB vs {r['residual_dense_equiv_bytes']/1e6:.2f} MB dense")
+        if r.get("faults"):
+            print(f"        quorum {r['mean_quorum_frac']:.3f} "
+                  f"degraded {r['degraded_rounds']} "
+                  f"crashes {r['crashes']} lost {r['lost_uploads']} "
+                  f"resyncs {r['resyncs']}")
     # scaling summary: rounds/sec at each K, normalized to the 1-device run
     summary = {}
     for r in results:
-        if not r["error_feedback"] and r.get("base_store") != "dense":
+        if not r["error_feedback"] and r.get("base_store") != "dense" \
+                and not r.get("faults"):
             summary.setdefault(r["clients"], {})[r["devices"]] = \
                 r["rounds_per_sec"]
     scaling = {
@@ -209,6 +245,7 @@ def main():
     ap.add_argument("--base-store", default="versioned",
                     choices=("versioned", "dense"), help=argparse.SUPPRESS)
     ap.add_argument("--ef", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--faults", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()

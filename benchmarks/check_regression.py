@@ -2,7 +2,8 @@
 
 Diffs a fresh smoke run of ``benchmarks.bench_fleet`` against the committed
 baseline (BENCH_fleet.json) cell by cell — cells are keyed by
-(clients, devices, error_feedback) — and fails the job when:
+(clients, devices, error_feedback, base_store, faults) — and fails the job
+when:
 
 * throughput regresses by more than ``--max-slowdown`` (default 30%) on
   the GEOMETRIC MEAN across cells, or by more than twice that on any
@@ -24,7 +25,13 @@ baseline (BENCH_fleet.json) cell by cell — cells are keyed by
   equivalent at every committed fleet size, and wherever a (K, D) pair has
   both a versioned and a ``base_store="dense"`` cell, the versioned cell
   must also put strictly fewer bytes on the wire (its distribution is a
-  chain-delta broadcast instead of per-target encodes).
+  chain-delta broadcast instead of per-target encodes), or
+* the round-efficiency gate fails on a fault-injected cell: under the
+  committed churn profile (crash/loss/churn + deadline), the mean quorum
+  fraction — uploads aggregated per round over the participation target k
+  — must not drop more than ``--quorum-tol`` (absolute, default 0.05)
+  below the committed baseline. The fault trace is seed-deterministic, so
+  a drop means a scheduler change made degraded rounds worse, not noise.
 
 The throughput comparison is absolute rounds/sec against a baseline
 measured on whatever machine last ran the full sweep — a systematically
@@ -54,18 +61,19 @@ def _cells(path):
     out = {}
     for r in results:
         key = (r["clients"], r["devices"], bool(r.get("error_feedback")),
-               r.get("base_store", "versioned"))
+               r.get("base_store", "versioned"), bool(r.get("faults")))
         out[key] = r
     return out
 
 
-def compare(baseline, candidate, *, max_slowdown, bytes_tol):
+def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
     failures, skipped, rows, speeds = [], [], [], []
     for key, cand in sorted(candidate.items()):
         base = baseline.get(key)
-        k, d, ef, store = key
+        k, d, ef, store, faults = key
         name = f"K={k} D={d}{' ef' if ef else ''}" + \
-            (f" {store}" if store != "versioned" else "")
+            (f" {store}" if store != "versioned" else "") + \
+            (" faults" if faults else "")
         # base-store memory gate: the versioned store must stay sublinear —
         # strictly below the dense (M, N) equivalent — at every committed
         # fleet size (candidate-only check, no baseline cell needed)
@@ -77,7 +85,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol):
                     f"{cand['base_store_bytes']} B is not smaller than the "
                     f"dense equivalent "
                     f"{cand['base_store_dense_equiv_bytes']} B")
-            dense_twin = candidate.get((k, d, ef, "dense"))
+            dense_twin = candidate.get((k, d, ef, "dense", faults))
             if dense_twin is not None:
                 if cand["base_store_bytes"] >= \
                         dense_twin.get("base_store_bytes", float("inf")):
@@ -113,6 +121,19 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol):
                 f"/round exceed baseline "
                 f"{base['payload_bytes_per_round']:.0f} by "
                 f"{(wire - 1) * 100:.1f}% (gate: {bytes_tol:.0%})")
+        if faults:
+            # round-efficiency gate: same seed → same fault trace, so any
+            # quorum drop is a real scheduler/degradation regression
+            bq = base.get("mean_quorum_frac")
+            cq = cand.get("mean_quorum_frac")
+            if bq is not None and cq is not None:
+                rows.append(f"  {name:16s} quorum {cq:.3f} "
+                            f"(baseline {bq:.3f})")
+                if cq < bq - quorum_tol:
+                    failures.append(
+                        f"{name}: mean quorum fraction {cq:.3f} dropped "
+                        f"more than {quorum_tol:.2f} below baseline "
+                        f"{bq:.3f} — degraded rounds got worse")
         if ef and cand.get("residual_store_bytes", 0) >= \
                 cand.get("residual_dense_equiv_bytes", float("inf")):
             failures.append(
@@ -140,6 +161,9 @@ def main():
     ap.add_argument("--bytes-tol", type=float, default=0.02,
                     help="fail when bytes-on-wire/round grow by more than "
                          "this fraction (default 0.02)")
+    ap.add_argument("--quorum-tol", type=float, default=0.05,
+                    help="fail when a fault cell's mean quorum fraction "
+                         "drops by more than this (absolute, default 0.05)")
     args = ap.parse_args()
 
     try:
@@ -155,7 +179,7 @@ def main():
 
     failures, skipped, rows = compare(
         baseline, candidate, max_slowdown=args.max_slowdown,
-        bytes_tol=args.bytes_tol)
+        bytes_tol=args.bytes_tol, quorum_tol=args.quorum_tol)
     print(f"[check_regression] {args.candidate} vs {args.baseline}")
     for row in rows:
         print(row)

@@ -94,6 +94,47 @@ are equally faithful to the paper, which specifies the threshold rule but
 not server-side bookkeeping. The cross-engine parity matrix therefore pins
 each store against its own sequential reference.
 
+Fault injection & degraded rounds
+---------------------------------
+Real IoT fleets crash mid-run, drop uploads, and churn. Attach a traffic
+model to simulate that (requires ``base_store="versioned"``)::
+
+    from repro.core import FedS3AConfig, TrafficModel, REFERENCE_CHURN
+
+    cfg = FedS3AConfig(
+        rounds=50,
+        traffic=REFERENCE_CHURN,     # crash 10%, upload loss 5%, churn
+        round_deadline=700.0,        # wall-clock cap per round (sim secs)
+        quorum_floor=2,              # aggregate >=2 uploads at deadline
+    )
+
+``TrafficModel`` draws, per client run, from a dedicated fault RNG
+(separate stream from latency jitter, so the fault trace is identical
+across engines): heavy-tailed lognormal latency multipliers
+(``tail_sigma``), crash-mid-run (the client retries from its persisted
+base — staleness emerges naturally), upload loss (the update vanishes
+after compute; the server redistributes at the next boundary and the
+bytes ledger never books the lost payload), and exponential online/
+offline churn (``mean_online`` / ``mean_offline``) plus ``late_join_frac``
+clients that start offline.
+
+The scheduler degrades gracefully instead of hanging: when the
+participation target ``k = ceil(C*M)`` cannot be met by
+``round_deadline``, the server aggregates whatever quorum it has (down to
+``quorum_floor``) and marks the round degraded; if the whole fleet is
+gone and the floor is unreachable it raises ``FleetStalledError`` with a
+diagnosis rather than spinning on an empty heap. A client that rejoins
+after its ``base_version`` was evicted from the versioned ring gets an
+explicit full-model resync (booked as a dense unicast); recent rejoiners
+are served the cheap chain-delta suffix instead.
+
+Per-round degradation lands on the ``RoundLog`` (``degraded``,
+``deadline_hit``, ``quorum``/``target_k``, ``crashes``, ``lost``,
+``departed``, ``rejoined``, ``resynced``) and ``train()`` returns an
+aggregate ``fleet`` health dict (``degraded_rounds``,
+``mean_quorum_frac``, ``resyncs``, ...) — bit-identical across all three
+engines for the same seed (pinned in tests/test_chaos.py).
+
 CI runs ``benchmarks/check_regression.py`` against the committed
 BENCH_fleet.json on every PR, failing on >30% rounds/sec regression or any
 bytes-on-wire increase — if you touch the comm path, refresh the baseline

@@ -1,6 +1,8 @@
 """FedS3A — the paper's primary contribution: federated semi-supervised +
 semi-asynchronous learning (scheduler, aggregation, pseudo-labeling,
-staleness control, sparse-diff communication, baselines)."""
+staleness control, sparse-diff communication, fault injection, baselines)."""
 from repro.core.feds3a import FedS3AConfig, FedS3ATrainer  # noqa: F401
 from repro.core.base_store import VersionedBaseStore  # noqa: F401
+from repro.core.scheduler import FleetStalledError  # noqa: F401
+from repro.core.traffic import REFERENCE_CHURN, TrafficModel  # noqa: F401
 from repro.core.baselines import FedAvgSSL, FedAsyncSSL, LocalSSL  # noqa: F401

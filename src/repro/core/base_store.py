@@ -102,6 +102,11 @@ class VersionedBaseStore:
         self.slot_version = np.full(self.depth, -1, np.int64)
         self.slot_version[0] = 0
         self.client_version = np.zeros(self.M, np.int64)
+        # offline (churned-out) clients: their parked version no longer
+        # constrains ring eviction — on rejoin they are either served the
+        # chain suffix (version still in-window) or an explicit full-model
+        # resync (version evicted while they were away)
+        self.detached = np.zeros(self.M, bool)
         self.version = 0
         # version v -> payload of transition v-1 -> v:
         #   {"stored": device-scalar-or-int[, "vals": (cap,), "idx": (cap,)]}
@@ -147,11 +152,12 @@ class VersionedBaseStore:
                              f"{self.version}, got {new_version}")
         slot = self.slot(new_version)
         evicted = self.slot_version[slot]
-        if evicted >= 0 and bool((self.client_version == evicted).any()):
+        if evicted >= 0 and bool(
+                ((self.client_version == evicted) & ~self.detached).any()):
             raise RuntimeError(
                 f"ring eviction would drop version {evicted} still "
-                f"referenced by a client (window depth {self.depth}, "
-                f"new version {new_version})")
+                f"referenced by an attached client (window depth "
+                f"{self.depth}, new version {new_version})")
         self.ring = _set_row(self.ring, slot, new_recon)
         self._latest = new_recon
         self.slot_version[slot] = new_version
@@ -163,6 +169,48 @@ class VersionedBaseStore:
         # new - tau — so exactly tau + 1 chain entries stay live
         for v in [v for v in self._chain if v < new_version - self.tau]:
             del self._chain[v]
+
+    # -- churn -------------------------------------------------------------
+    def detach(self, client_ids):
+        """Park departed clients: their version stays recorded (a rejoiner
+        inside the staleness window is served the chain suffix it missed)
+        but stops constraining ring eviction — an offline client must never
+        wedge the fleet's window."""
+        ids = np.asarray(sorted(set(int(i) for i in client_ids)), np.int64)
+        if ids.size:
+            self.detached[ids] = True
+
+    def split_rejoined(self, client_ids, new_version):
+        """Partition rejoining clients by how they can be re-based at the
+        ``new_version`` boundary: ``(chain_ids, resync_ids)``.
+
+        A rejoiner parked at version ``v`` needs the transition suffix
+        ``v+1 .. new_version``; the chain retains transitions
+        ``>= new_version - tau`` after :meth:`advance` prunes, so the
+        suffix exists iff ``v >= new_version - tau - 1``. Anyone staler
+        was evicted from the ring while away and needs the full model.
+        """
+        chain, resync = [], []
+        for i in sorted(set(int(c) for c in client_ids)):
+            if self.client_version[i] >= new_version - self.tau - 1:
+                chain.append(i)
+            else:
+                resync.append(i)
+        return chain, resync
+
+    def resync(self, comm, client_ids):
+        """Serve rejoiners whose parked version left the ring an explicit
+        full-model payload — ``n * 4`` bytes on the wire per client (a
+        dense unicast; the chain broadcast cannot reach them), never
+        silently free — and re-attach them at the current version."""
+        ids = np.asarray(sorted(set(int(i) for i in client_ids)), np.int64)
+        if ids.size == 0:
+            return
+        comm.account_payload(float(ids.size) * self.n * 4, self.n,
+                             int(ids.size))
+        self._dist_host += float(ids.size) * self.n * 4
+        self.client_version[ids] = self.version
+        self.detached[ids] = False
 
     def account_distribution(self, comm, targets):
         """Book this round's chain-delta broadcast onto ``comm``.
@@ -200,6 +248,7 @@ class VersionedBaseStore:
                 if csr:
                     self._dist_host += 4 * (len(stored) + 1)
             self.client_version[targets] = self.version
+            self.detached[targets] = False
 
     # -- reporting ---------------------------------------------------------
     def dist_payload_bytes(self):
@@ -216,7 +265,8 @@ class VersionedBaseStore:
         (O(tau * N)), the retained chain payloads (O(tau * cap)) and the
         per-client version array (O(M)) — the ``O(M * N)`` dense base state
         this store replaces appears nowhere."""
-        total = self.ring.size * 4 + self.client_version.nbytes
+        total = (self.ring.size * 4 + self.client_version.nbytes
+                 + self.detached.nbytes)
         for p in self._chain.values():
             total += 4                                   # stored count
             if "vals" in p:

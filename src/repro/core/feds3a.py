@@ -70,7 +70,7 @@ from repro.core.base_store import VersionedBaseStore
 from repro.core.functions import (adaptive_learning_rates, staleness_fn,
                                   supervised_weight)
 from repro.core.grouping import group_clients, init_index, kmeans_device
-from repro.core.metrics import weighted_metrics
+from repro.core.metrics import fleet_health, weighted_metrics
 from repro.core.pseudo_label import (class_histogram, class_histogram_batch,
                                      make_batched_client_epoch,
                                      make_client_epoch, make_server_epoch,
@@ -180,6 +180,24 @@ class FedS3AConfig:
     cnn: object = None                  # CNNConfig override (None: paper §V-B)
     seed: int = 0
     latency_jitter: float = 0.05
+    traffic: object = None              # fault profile (core.traffic.
+                                        # TrafficModel): crash-mid-run,
+                                        # upload loss, heavy-tailed latency,
+                                        # leave/rejoin churn, late joins.
+                                        # None = the happy path (exactly the
+                                        # pre-fault behaviour, draw for
+                                        # draw). Requires the versioned base
+                                        # store (rejoin resync is a ring
+                                        # concept)
+    round_deadline: object = None       # seconds of simulated time per
+                                        # round: when k uploads can't arrive
+                                        # in time the server aggregates a
+                                        # degraded quorum (>= quorum_floor)
+                                        # instead of waiting. None = wait
+                                        # for k forever
+    quorum_floor: int = 1               # minimum uploads a degraded round
+                                        # may aggregate; below it the
+                                        # scheduler raises FleetStalledError
 
 
 @dataclass
@@ -191,6 +209,19 @@ class RoundLog:
     stalenesses: dict
     forced: list
     metrics: dict = field(default_factory=dict)
+    # fault-layer fields (defaults = the happy path, so fault-free logs are
+    # unchanged semantically)
+    degraded: bool = False       # aggregated fewer than target_k uploads
+    deadline_hit: bool = False   # the round deadline forced the aggregation
+    quorum: int = 0              # uploads actually aggregated
+    target_k: int = 0            # the participation threshold k
+    crashes: int = 0             # crash-mid-run events during the round
+    lost: list = field(default_factory=list)      # uploads lost in transit
+    departed: list = field(default_factory=list)  # clients that churned out
+    rejoined: list = field(default_factory=list)  # clients back online
+    resynced: list = field(default_factory=list)  # rejoiners needing the
+                                                  # full-model resync (ring
+                                                  # version evicted)
 
 
 class FedS3ATrainer:
@@ -239,9 +270,16 @@ class FedS3ATrainer:
         ref_total = 453004  # Table III basic total
         f = ref_total / max(sum(sizes), 1)
         self.latencies = [paper_latency(int(s * f)) for s in sizes]
+        if self.cfg.traffic is not None and self.base_store != "versioned":
+            raise ValueError(
+                "fault injection (traffic=) requires base_store='versioned':"
+                " rejoin re-basing (chain suffix vs full-model resync) is "
+                "defined against the reconstruction ring")
         self.scheduler = SemiAsyncScheduler(
             self.latencies, C=self.cfg.C, tau=self.cfg.tau,
-            jitter=self.cfg.latency_jitter, seed=self.cfg.seed)
+            jitter=self.cfg.latency_jitter, seed=self.cfg.seed,
+            traffic=self.cfg.traffic, deadline=self.cfg.round_deadline,
+            quorum_floor=self.cfg.quorum_floor)
 
         self.comm = SparseComm(self.cfg.sparse_threshold,
                                use_kernel=self.cfg.use_kernels,
@@ -337,6 +375,12 @@ class FedS3ATrainer:
             # the ring row its base_version indexes.
             self.store = VersionedBaseStore(self._global_flat, self.M,
                                             cfg.tau)
+            # late-join clients start offline: parked at version 0 and
+            # detached, so their stale version never wedges ring eviction;
+            # they re-attach through the rejoin path (chain suffix or full
+            # resync) at their first online boundary
+            if self.scheduler.initial_offline:
+                self.store.detach(self.scheduler.initial_offline)
             self._advance_jit = None
         if self.batched:
             # server Adam state carries over from the warmup, flattened once
@@ -507,19 +551,68 @@ class FedS3ATrainer:
             return {"stored": payload[0]}
         return {"stored": self._global_flat.shape[0]}
 
-    def _advance_versioned(self, recon, payload, targets, forced):
-        """Install the new reconstruction + chain delta, book the
-        chain-delta broadcast, bump the targets, reset forced residuals."""
+    def _distribution_plan(self, part_ids, ev):
+        """Who restarts from the new global model at this boundary, and how.
+
+        Returns ``(targets, resync)``: ``targets`` receive the chain-delta
+        broadcast (or a per-target encode under the dense store) — online
+        participants, tau-forced clients, lost-upload clients (their run
+        finished but the payload evaporated, so they rebase like any other
+        listener) and in-window rejoiners; ``resync`` are rejoiners whose
+        parked version was evicted from the ring while they were away and
+        need the explicit full-model payload instead. Participants that
+        churned out after uploading stay aggregated but get nothing — there
+        is nobody to send to. Fault-free this reduces exactly to the old
+        ``participants | forced`` set. ``ev.resynced`` is filled as a side
+        effect so the round log records the resync path firing.
+        """
+        online = self.scheduler.state.online
+        chain, resync = [], []
+        if ev.rejoined:
+            chain, resync = self.store.split_rejoined(
+                ev.rejoined, self.global_version)
+        targets = sorted(set(i for i in part_ids if online[i])
+                         | set(ev.forced) | set(ev.lost) | set(chain))
+        ev.resynced = resync
+        return targets, resync
+
+    def _retired_ids(self, ev):
+        """Clients whose server-side EF residual must be retired at this
+        boundary: tau-forced restarts (the pre-fault behaviour), lost
+        uploads and rejoiners (they restart from the new global model —
+        fresh base, fresh residual) and departures (their trajectory is
+        gone; keeping mass accumulated against an abandoned base would be
+        re-offered as drift on rejoin). Retiring happens in the
+        distribution phase — AFTER the upload encode — because a departed
+        participant's encode this round legitimately consumed its
+        then-current residual."""
+        return sorted(set(ev.forced) | set(ev.lost) | set(ev.departed)
+                      | set(ev.rejoined))
+
+    def _advance_versioned(self, recon, payload, ev, part_ids):
+        """Install the new reconstruction + chain delta, detach departures,
+        book the chain-delta broadcast (and any full-model resyncs), bump
+        the targets, retire dead residuals."""
+        targets, resync = self._distribution_plan(part_ids, ev)
+        if ev.departed:
+            # departures park (version kept for a possible in-window
+            # rejoin) but stop constraining ring eviction — detach BEFORE
+            # advance so an offline straggler can't wedge the window
+            self.store.detach(ev.departed)
         self.store.advance(recon, self._chain_entry(payload),
                            self.global_version)
         self.store.account_distribution(self.comm, targets)
-        self._reset_forced_residuals(forced)
+        if resync:
+            self.store.resync(self.comm, resync)
+        self._reset_forced_residuals(self._retired_ids(ev))
 
     def _reset_forced_residuals(self, forced):
         """A deprecated client's forced restart discards its in-flight
         trajectory AND its error-feedback residual — the residual was
         accumulated against a base the client no longer holds (see the
-        SparseComm docstring; pinned in tests/test_error_feedback.py)."""
+        SparseComm docstring; pinned in tests/test_error_feedback.py).
+        Under faults the same retirement applies to lost-upload clients,
+        departures and rejoiners (see ``_retired_ids``)."""
         if not self.cfg.error_feedback or not forced:
             return
         ids = sorted(set(forced))
@@ -553,23 +646,32 @@ class FedS3ATrainer:
         return self._run_round_sequential()
 
     def _round_prologue(self):
+        """Advance the scheduler one boundary. Returns ``(prev_time, ev,
+        lrs)`` with ``ev`` the scheduler's RoundResult — participants /
+        staleness / forced restarts plus the fault-layer consequences
+        (lost uploads, churn, degradation) every engine threads through
+        the same distribution plan."""
         prev_time = self.scheduler.state.time
-        participants, stale, forced, t = self.scheduler.next_round()
+        ev = self.scheduler.next_round()
         lrs = adaptive_learning_rates(
             self.participation, base_lr=self.cfg.lr,
             round_weight=self.cfg.round_weight_function,
             adaptive=self.cfg.adaptive_lr)
-        return prev_time, participants, stale, forced, t, lrs
+        return prev_time, ev, lrs
 
-    def _round_epilogue(self, prev_time, participants, stale, forced, t):
-        part_ids = [run.client for run in participants]
+    def _round_epilogue(self, prev_time, ev):
+        part_ids = [run.client for run in ev.participants]
         row = np.zeros((1, self.M))
         row[0, part_ids] = 1
         self.participation = np.concatenate([self.participation, row])
-        log = RoundLog(round=self.global_version - 1, time=t,
-                       art=t - prev_time, participants=part_ids,
-                       stalenesses={i: stale[i] for i in part_ids},
-                       forced=forced)
+        log = RoundLog(round=self.global_version - 1, time=ev.time,
+                       art=ev.time - prev_time, participants=part_ids,
+                       stalenesses={i: ev.stale[i] for i in part_ids},
+                       forced=ev.forced, degraded=ev.degraded,
+                       deadline_hit=ev.deadline_hit, quorum=ev.quorum,
+                       target_k=ev.target_k, crashes=ev.crashes,
+                       lost=ev.lost, departed=ev.departed,
+                       rejoined=ev.rejoined, resynced=ev.resynced)
         self.logs.append(log)
         return log
 
@@ -584,7 +686,8 @@ class FedS3ATrainer:
 
     def _run_round_sequential(self):
         cfg = self.cfg
-        prev_time, participants, stale, forced, t, lrs = self._round_prologue()
+        prev_time, ev, lrs = self._round_prologue()
+        participants, stale, forced, t = ev
         r = self.global_version
 
         # participating clients train and upload sparse diffs
@@ -625,7 +728,6 @@ class FedS3ATrainer:
 
         # distribution: latest + deprecated clients get the new model
         part_ids = [run.client for run in participants]
-        targets = sorted(set(part_ids) | set(forced))
         if self.base_store == "versioned":
             # one chain-transition encode + chain-delta broadcast (each
             # transition payload once per round) instead of one encode per
@@ -634,13 +736,14 @@ class FedS3ATrainer:
                 self._advance_jit = jax.jit(self._advance_encode_body())
             new_flat = flatten_tree(self.global_params)
             recon, payload = self._advance_jit(new_flat, self.store.latest())
-            self._advance_versioned(recon, payload, targets, forced)
+            self._advance_versioned(recon, payload, ev, part_ids)
         else:
+            targets, _ = self._distribution_plan(part_ids, ev)
             for i in targets:
                 self._distribute(i)
             self._reset_forced_residuals(forced)
 
-        return self._round_epilogue(prev_time, participants, stale, forced, t)
+        return self._round_epilogue(prev_time, ev)
 
     # ------------------------------------------------------------------
     # jitted round stages (built lazily; retrace per participant count)
@@ -804,7 +907,8 @@ class FedS3ATrainer:
         call. Zero per-message host syncs; one host transfer per round (the
         pseudo-label histograms feeding k-means grouping)."""
         cfg = self.cfg
-        prev_time, participants, stale, forced, t, lrs = self._round_prologue()
+        prev_time, ev, lrs = self._round_prologue()
+        participants, stale, forced, t = ev
         r = self.global_version
         part_ids = [run.client for run in participants]
         K = len(part_ids)
@@ -882,8 +986,7 @@ class FedS3ATrainer:
         self.global_version += 1
         # distribution: latest + deprecated clients get the new model. All
         # participants are stale by construction (their base predates the
-        # version bump), so the target set is never empty.
-        targets = sorted(set(part_ids) | set(forced))
+        # version bump), so fault-free the target set is never empty.
         if self.base_store == "versioned":
             # chain-delta broadcast: the finalize jit encodes ONE chain
             # transition against R_r; the store books the suffix from the
@@ -898,8 +1001,9 @@ class FedS3ATrainer:
                     sp_flat, uploaded_flat, jnp.asarray(w, jnp.float32),
                     jnp.float32(fw), prev)
             new_flat, recon, payload = out[0], out[1], out[2:]
-            self._advance_versioned(recon, payload, targets, forced)
+            self._advance_versioned(recon, payload, ev, part_ids)
         else:
+            targets, _ = self._distribution_plan(part_ids, ev)
             dist_base = jnp.stack([self._base_rows[i] for i in targets])
             if self.wire_fmt == "csr":
                 new_flat, new_base, nnz_d = self._finalize_fn()(
@@ -918,7 +1022,7 @@ class FedS3ATrainer:
         self._global_flat = new_flat
         self._gp_tree = None      # materialized lazily on demand
 
-        return self._round_epilogue(prev_time, participants, stale, forced, t)
+        return self._round_epilogue(prev_time, ev)
 
     # ------------------------------------------------------------------
     # sharded fleet engine: shard_map over the ``clients`` mesh axis
@@ -1121,7 +1225,8 @@ class FedS3ATrainer:
         ACO read excepted); K is padded to the device count with
         zero-weight rows that are sliced off before accounting."""
         cfg = self.cfg
-        prev_time, participants, stale, forced, t, lrs = self._round_prologue()
+        prev_time, ev, lrs = self._round_prologue()
+        participants, stale, forced, t = ev
         r = self.global_version
         part_ids = [run.client for run in participants]
         K = len(part_ids)
@@ -1209,7 +1314,6 @@ class FedS3ATrainer:
                                mode=cfg.supervised_weight_mode)
         self.global_version += 1
         # distribution: latest + deprecated clients get the new model
-        targets = sorted(set(part_ids) | set(forced))
         if self.base_store == "versioned":
             # chain-delta broadcast: one replicated chain-transition encode
             # in the stage; the store books the suffix from the stalest
@@ -1224,8 +1328,9 @@ class FedS3ATrainer:
                 out = self._stage2_sharded()(
                     sp_flat, uploaded, w_pad, jnp.float32(fw), prev)
             new_flat, recon, payload = out[0], out[1], out[2:]
-            self._advance_versioned(recon, payload, targets, forced)
+            self._advance_versioned(recon, payload, ev, part_ids)
         else:
+            targets, _ = self._distribution_plan(part_ids, ev)
             T = len(targets)
             Tp = padded_rows(T, D)
             tidx = jnp.asarray(targets + targets[:1] * (Tp - T))
@@ -1246,7 +1351,7 @@ class FedS3ATrainer:
         self._global_flat = new_flat
         self._gp_tree = None      # materialized lazily on demand
 
-        return self._round_epilogue(prev_time, participants, stale, forced, t)
+        return self._round_epilogue(prev_time, ev)
 
     # ------------------------------------------------------------------
     def base_store_bytes(self):
@@ -1302,4 +1407,5 @@ class FedS3ATrainer:
         final = self.evaluate()
         art = float(np.mean([l.art for l in self.logs]))
         return {"metrics": final, "art": art, "aco": self.comm.aco,
-                "rounds": len(self.logs)}
+                "rounds": len(self.logs),
+                "fleet": fleet_health(self.logs)}

@@ -356,9 +356,35 @@ class SparseComm:
                 "dense_payload_bytes": 0.0,
                 "payload_bytes": self._payload_host + self.row_ptr_bytes}
 
+    def deliver(self, stats):
+        """Book a payload's bytes-on-wire at DELIVERY time.
+
+        ``stats`` is the dict returned by :meth:`encode` /
+        :meth:`encode_batch` called with ``deliver=False``: encoding is the
+        client-side act of building the payload; *this* is the upload
+        actually arriving at the server. A lost upload's stats are simply
+        never delivered, so its bytes never inflate ACO — the ledger counts
+        what crossed the wire, not what was produced. Booking is
+        byte-identical to the inline (``deliver=True``) accounting of the
+        path that produced ``stats``. No host sync.
+        """
+        K, n = stats["rows"], stats["total"]
+        if not self.enabled:
+            self._payload_host += K * n * 4
+            self.dense_bytes += K * n * 4
+            self.messages += K
+        elif "values" in stats:                       # CSR wire format
+            self.account_batch_csr(stats["nnz"], n, K)
+        else:                                         # dense_masked
+            self._account(jnp.sum(stats["nnz"]), n * K, K)
+
     # -- single-message path (reference implementation) --------------------
-    def encode(self, new_params, base_params, residual=None):
-        """Returns (sparse_delta_tree, stats[, residual']). ACO accounted.
+    def encode(self, new_params, base_params, residual=None, *,
+               deliver=True):
+        """Returns (sparse_delta_tree, stats[, residual']). ACO accounted
+        at once when ``deliver=True``; with ``deliver=False`` nothing is
+        booked until the caller passes ``stats`` to :meth:`deliver` (or
+        drops them — a lost upload).
 
         ``residual``: error-feedback state (beyond-paper): the masked-out
         part of every previous delta is carried forward and re-offered next
@@ -378,10 +404,10 @@ class SparseComm:
         flat = flatten_tree(delta)
         n = flat.shape[0]
         if not self.enabled:
-            self._payload_host += n * 4
-            self.dense_bytes += n * 4
-            self.messages += 1
-            out = (delta, {"nnz": n, "total": n})
+            stats = {"nnz": n, "total": n, "rows": 1}
+            if deliver:
+                self.deliver(stats)
+            out = (delta, stats)
             return out + (jax.tree.map(jnp.zeros_like, delta),) \
                 if residual is not None else out
         if self.wire_format == "csr":
@@ -394,10 +420,11 @@ class SparseComm:
             else:
                 vals, idx, stored, decoded = self.csr_core(False)(
                     flat[None], zero)
-            self.account_batch_csr(stored, n, 1)
             sparse_tree = unflatten_like(decoded[0], delta)
-            stats = {"nnz": stored[0], "total": n,
+            stats = {"nnz": stored[0], "total": n, "rows": 1,
                      "values": vals[0], "indices": idx[0]}
+            if deliver:
+                self.deliver(stats)
             if residual is not None:
                 return sparse_tree, stats, unflatten_like(res_dense[0], delta)
             return sparse_tree, stats
@@ -407,12 +434,14 @@ class SparseComm:
             nnz = jnp.sum(nnz_blocks)
         else:
             masked, nnz = _mask_count(flat, thr)
-        self._account(nnz, n, 1)
+        stats = {"nnz": nnz, "total": n, "rows": 1}
+        if deliver:
+            self.deliver(stats)
         sparse_tree = unflatten_like(masked, delta)
         if residual is not None:
             new_residual = unflatten_like(flat - masked, delta)
-            return sparse_tree, {"nnz": nnz, "total": n}, new_residual
-        return sparse_tree, {"nnz": nnz, "total": n}
+            return sparse_tree, stats, new_residual
+        return sparse_tree, stats
 
     # -- batched path ------------------------------------------------------
     def _batch_core(self, with_residual):
@@ -458,8 +487,12 @@ class SparseComm:
         self._batch_cores[key] = core
         return core
 
-    def encode_batch(self, new_flat, base_flat, residual_flat=None):
+    def encode_batch(self, new_flat, base_flat, residual_flat=None, *,
+                     deliver=True):
         """Encode K client deltas at once from (K, N) flat stacks.
+        ``deliver=False`` skips the inline accounting — the caller books
+        the returned ``stats`` via :meth:`deliver` when (and only if) the
+        payload actually arrives.
 
         Returns (masked (K, N), stats[, residual' (K, N)]) where
         ``stats["nnz"]`` is the per-client (K,) device nnz vector. Per-client
@@ -477,10 +510,10 @@ class SparseComm:
             delta = new_flat - base_flat
             if residual_flat is not None:
                 delta = delta + residual_flat
-            self._payload_host += K * n * 4
-            self.dense_bytes += K * n * 4
-            self.messages += K
-            out = (delta, {"nnz": jnp.full((K,), n), "total": n})
+            stats = {"nnz": jnp.full((K,), n), "total": n, "rows": K}
+            if deliver:
+                self.deliver(stats)
+            out = (delta, stats)
             return out + (jnp.zeros_like(delta),) \
                 if residual_flat is not None else out
         if self.wire_format == "csr":
@@ -490,9 +523,10 @@ class SparseComm:
             else:
                 vals, idx, stored, decoded = self.csr_core(False)(
                     new_flat, base_flat)
-            self.account_batch_csr(stored, n, K)
-            stats = {"nnz": stored, "total": n, "values": vals,
+            stats = {"nnz": stored, "total": n, "rows": K, "values": vals,
                      "indices": idx}
+            if deliver:
+                self.deliver(stats)
             if residual_flat is not None:
                 return decoded, stats, res_dense
             return decoded, stats
@@ -501,10 +535,12 @@ class SparseComm:
                 new_flat, base_flat, residual_flat)
         else:
             masked, nnz = self._batch_core(False)(new_flat, base_flat)
-        self._account(jnp.sum(nnz), n * K, K)
+        stats = {"nnz": nnz, "total": n, "rows": K}
+        if deliver:
+            self.deliver(stats)
         if residual_flat is not None:
-            return masked, {"nnz": nnz, "total": n}, new_residual
-        return masked, {"nnz": nnz, "total": n}
+            return masked, stats, new_residual
+        return masked, stats
 
     def apply(self, base_params, sparse_delta_tree):
         return tree_add(base_params, sparse_delta_tree)

@@ -123,6 +123,46 @@ def test_csr_reported_bytes_equal_actual_payload(rng):
     assert comm.aco < 0.5
 
 
+def test_deliver_books_at_delivery_not_encode(rng):
+    """deliver=False encodes without touching the ledger; passing the
+    stats to ``deliver`` later books byte-identically to the inline path,
+    and stats that are never delivered (a lost upload) never inflate
+    bytes-on-wire."""
+    for kwargs in ({"wire_format": "csr"},
+                   {"wire_format": "dense_masked"},
+                   {"wire_format": "csr", "enabled": False}):
+        inline = SparseComm("p0.2", use_kernel=False, **kwargs)
+        deferred = SparseComm("p0.2", use_kernel=False, **kwargs)
+        new = jax.random.normal(rng, (4, 2000))
+        inline.encode_batch(new, jnp.zeros_like(new))
+        _, stats = deferred.encode_batch(new, jnp.zeros_like(new),
+                                         deliver=False)
+        # nothing booked until delivery
+        assert deferred.payload_bytes == 0
+        assert deferred.messages == 0 and deferred.dense_bytes == 0
+        deferred.deliver(stats)
+        assert deferred.payload_bytes == inline.payload_bytes
+        assert deferred.messages == inline.messages
+        assert deferred.dense_bytes == inline.dense_bytes
+        assert deferred.row_ptr_bytes == inline.row_ptr_bytes
+        # a second encode whose upload is lost: dropped stats, ledger flat
+        before = deferred.payload_bytes
+        deferred.encode_batch(new, jnp.zeros_like(new), deliver=False)
+        assert deferred.payload_bytes == before
+
+    # the single-message reference path agrees with itself too
+    comm = SparseComm("p0.2", use_kernel=False)
+    tree = {"w": jax.random.normal(rng, (500,))}
+    base = {"w": jnp.zeros(500)}
+    _, stats = comm.encode(tree, base, deliver=False)
+    assert comm.payload_bytes == 0
+    comm.deliver(stats)
+    ref = SparseComm("p0.2", use_kernel=False)
+    ref.encode(tree, base)
+    assert comm.payload_bytes == ref.payload_bytes
+    assert comm.messages == ref.messages == 1
+
+
 def test_wire_breakdown_disabled_reports_dense_component(rng):
     """With sparsification disabled messages are plain dense vectors: the
     breakdown must report them under ``dense_payload_bytes``, not smear

@@ -131,7 +131,8 @@ def test_base_store_bytes_sublinear_in_fleet(data):
     n = int(tr._global_flat.shape[0])
     tau = tr.cfg.tau
     cap = tr.comm.payload_capacity(n)
-    bound = (tau + 2) * n * 4 + (tau + 1) * (cap * 8 + 4) + 8 * tr.M + 64
+    # 8 bytes/client version + 1 byte/client detached mask
+    bound = (tau + 2) * n * 4 + (tau + 1) * (cap * 8 + 4) + 9 * tr.M + 64
     assert tr.base_store_bytes() <= bound
     dense = FedS3ATrainer(data, FedS3AConfig(
         rounds=2, seed=0, base_store="dense", cnn=TEST_CNN))

@@ -1,0 +1,310 @@
+"""Chaos harness: random fault schedules against the fleet (ISSUE 6).
+
+Four layers of assertion, cheapest first:
+
+* **scheduler liveness** — under hypothesis-drawn fault profiles every
+  ``next_round`` either terminates with a legal quorum or raises the clear
+  :class:`FleetStalledError`; never a hang, never a bare heap error;
+* **ring-eviction safety under churn** — the versioned store driven by raw
+  scheduler fault traces never trips its eviction hard-error: departures
+  detach, in-window rejoiners ride the chain suffix, evicted rejoiners take
+  the accounted full-model resync;
+* **residual hygiene** — after every faulted round, the EF residuals of
+  forced / lost / departed / rejoined clients are retired (their mass was
+  accumulated against a base that no longer exists for them);
+* **the acceptance scenario** — 50 rounds at crash 10% / loss 5% with churn
+  on EVERY engine: no hang or exception, the fault trace and all
+  trace-derived round metrics bit-identical across engines, the ring-resync
+  path exercised at least once, model metrics within the parity harness's
+  float tolerances.
+
+``CHAOS_SEED`` (env) shifts every fault stream — CI sweeps a small seed set
+so the suite never ossifies around one lucky trace.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs.feds3a_cnn import CNNConfig
+from repro.core import (REFERENCE_CHURN, FedS3AConfig, FedS3ATrainer,
+                        FleetStalledError, TrafficModel, VersionedBaseStore)
+from repro.core.scheduler import SemiAsyncScheduler
+from repro.core.sparse_comm import SparseComm
+from repro.data import make_dataset
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+TEST_CNN = CNNConfig(name="feds3a-cnn-chaos", conv_filters=(8, 8), hidden=16)
+ENGINES = ("sequential", "batched", "sharded")
+
+# the paper's measured 166..317 s client latency band
+LATS_10 = list(np.linspace(160.0, 320.0, 10))
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("basic", scale=0.0015, seed=0)
+
+
+def _trace(trainer):
+    """The schedule-derived portion of a run's logs — everything that must
+    be BIT-identical across engines replaying the same fault trace."""
+    return [(l.participants, dict(l.stalenesses), l.forced, l.lost,
+             l.departed, l.rejoined, l.resynced, l.quorum, l.target_k,
+             l.degraded, l.deadline_hit, l.crashes, round(l.time, 9))
+            for l in trainer.logs]
+
+
+# --- scheduler liveness under random fault schedules -------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    crash=st.floats(min_value=0.0, max_value=0.5),
+    loss=st.floats(min_value=0.0, max_value=0.4),
+    sigma=st.floats(min_value=0.0, max_value=1.2),
+    mean_online=st.floats(min_value=300.0, max_value=5000.0),
+    mean_offline=st.floats(min_value=100.0, max_value=1500.0),
+    late=st.floats(min_value=0.0, max_value=0.5),
+    seed=st.integers(min_value=0, max_value=9999),
+)
+def test_liveness_random_fault_schedules(crash, loss, sigma, mean_online,
+                                         mean_offline, late, seed):
+    """Every round under an arbitrary fault profile either terminates with
+    quorum_floor <= quorum <= k, or raises the explicit FleetStalledError —
+    never an IndexError, never an unbounded spin."""
+    traffic = TrafficModel(crash_rate=crash, upload_loss=loss,
+                           tail_sigma=sigma, mean_online=mean_online,
+                           mean_offline=mean_offline, late_join_frac=late)
+    sch = SemiAsyncScheduler(LATS_10, C=0.6, tau=2, jitter=0.05,
+                             seed=seed + 131 * CHAOS_SEED, traffic=traffic,
+                             deadline=900.0, quorum_floor=1)
+    prev_t = 0.0
+    for _ in range(30):
+        try:
+            ev = sch.next_round()
+        except FleetStalledError:
+            break                       # a legal, clearly-reported outcome
+        assert 1 <= ev.quorum <= sch.k
+        assert ev.quorum == len(ev.participants)
+        if ev.quorum < sch.k:
+            assert ev.degraded
+        assert ev.time >= prev_t
+        prev_t = ev.time
+        # the staleness window survives every fault: no kept in-flight run
+        # exceeds tau versions behind
+        for (_, seq, run) in sch.state.runs:
+            if seq not in sch.state.cancelled:
+                assert sch.state.round - run.base_version <= sch.tau
+
+
+# --- ring-eviction safety + resync accounting under churn --------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    crash=st.floats(min_value=0.0, max_value=0.3),
+    loss=st.floats(min_value=0.0, max_value=0.2),
+    mean_online=st.floats(min_value=400.0, max_value=3000.0),
+    mean_offline=st.floats(min_value=200.0, max_value=2500.0),
+    late=st.floats(min_value=0.0, max_value=0.4),
+    tau=st.integers(min_value=0, max_value=3),
+    seed=st.integers(min_value=0, max_value=9999),
+)
+def test_ring_eviction_safe_under_churn(crash, loss, mean_online,
+                                        mean_offline, late, tau, seed):
+    """Drive a VersionedBaseStore with raw scheduler fault traces (the same
+    detach / advance / broadcast / resync sequence the trainers run, minus
+    the learning): the eviction hard-error must never fire, attached clients
+    stay inside the staleness window, and every rejoiner lands at the
+    current version through exactly one of the two re-base paths."""
+    traffic = TrafficModel(crash_rate=crash, upload_loss=loss,
+                           mean_online=mean_online,
+                           mean_offline=mean_offline, late_join_frac=late)
+    sch = SemiAsyncScheduler(LATS_10, C=0.6, tau=tau,
+                             seed=seed + 131 * CHAOS_SEED, traffic=traffic,
+                             deadline=900.0, quorum_floor=1)
+    import jax.numpy as jnp
+    flat = jnp.zeros(8, jnp.float32)
+    store = VersionedBaseStore(flat, M=len(LATS_10), tau=tau)
+    store.detach(sch.initial_offline)
+    comm = SparseComm("p0.5", use_kernel=False, enabled=False)
+    resyncs = 0
+    for _ in range(25):
+        try:
+            ev = sch.next_round()
+        except FleetStalledError:
+            break
+        online = sch.state.online
+        new_version = store.version + 1
+        chain, resync = store.split_rejoined(ev.rejoined, new_version)
+        targets = sorted({r.client for r in ev.participants
+                          if online[r.client]}
+                         | set(ev.forced) | set(ev.lost) | set(chain))
+        store.detach(ev.departed)
+        store.advance(flat + new_version, {"stored": 4}, new_version)
+        store.account_distribution(comm, targets)
+        store.resync(comm, resync)
+        resyncs += len(resync)
+        attached = ~store.detached
+        assert (store.version - store.client_version[attached]
+                <= tau + 1).all()
+        for c in ev.rejoined:
+            assert store.client_version[c] == store.version
+            assert not store.detached[c]
+    # resyncs are never free: the dense unicast is on both ledgers
+    if resyncs:
+        assert store.dist_payload_bytes() >= resyncs * store.n * 4
+
+
+# --- stall + degradation edges ----------------------------------------------
+def test_fleet_stalled_error_not_heap_error():
+    """A fleet that churns out below the quorum floor raises the explicit
+    FleetStalledError — not a bare IndexError, not an infinite loop."""
+    traffic = TrafficModel(mean_online=1e-6, mean_offline=1e12)
+    sch = SemiAsyncScheduler([10.0, 12.0, 14.0], C=1.0, tau=2,
+                             seed=CHAOS_SEED, traffic=traffic)
+    with pytest.raises(FleetStalledError, match="quorum floor"):
+        for _ in range(5):
+            sch.next_round()
+
+
+def test_degraded_round_at_deadline():
+    """k unreachable by the deadline -> aggregate the partial quorum at the
+    deadline instant and report the degradation; the straggler's upload is
+    not consumed by the cut-short round."""
+    sch = SemiAsyncScheduler([10.0, 11.0, 12.0, 13.0, 900.0], C=1.0, tau=2,
+                             jitter=0.0, deadline=50.0, quorum_floor=2)
+    ev = sch.next_round()
+    assert ev.degraded and ev.deadline_hit
+    assert ev.quorum == 4 and ev.target_k == 5
+    assert sorted(r.client for r in ev.participants) == [0, 1, 2, 3]
+    assert ev.time == 50.0
+    # the slow client is still in flight, not dropped
+    live = {run.client for (_, seq, run) in sch.state.runs
+            if seq not in sch.state.cancelled}
+    assert 4 in live
+
+
+def test_quorum_floor_validation():
+    with pytest.raises(ValueError):
+        SemiAsyncScheduler([10.0, 20.0], C=1.0, quorum_floor=0)
+    with pytest.raises(ValueError):
+        SemiAsyncScheduler([10.0, 20.0], C=1.0, quorum_floor=3)
+    with pytest.raises(ValueError):
+        SemiAsyncScheduler([10.0, 20.0], C=1.0, deadline=0.0)
+
+
+def test_traffic_model_validation():
+    with pytest.raises(ValueError):
+        TrafficModel(crash_rate=0.99)       # starves the fleet
+    with pytest.raises(ValueError):
+        TrafficModel(upload_loss=-0.1)
+    with pytest.raises(ValueError):
+        TrafficModel(late_join_frac=1.5)
+    with pytest.raises(ValueError):
+        TrafficModel(mean_online=0.0)
+
+
+def test_fault_free_trace_unchanged_by_fault_plumbing():
+    """traffic=None reproduces the pre-fault scheduler draw-for-draw: the
+    fault RNG is a separate stream and the legacy 4-tuple unpacking still
+    works."""
+    a = SemiAsyncScheduler(LATS_10, C=0.6, tau=2, jitter=0.05, seed=7)
+    b = SemiAsyncScheduler(LATS_10, C=0.6, tau=2, jitter=0.05, seed=7,
+                           deadline=1e9, quorum_floor=1)
+    for _ in range(6):
+        parts_a, stale_a, forced_a, t_a = a.next_round()
+        ev = b.next_round()
+        assert [r.client for r in parts_a] == \
+            [r.client for r in ev.participants]
+        assert stale_a == ev.stale and forced_a == ev.forced
+        assert t_a == ev.time
+        assert not ev.degraded and not ev.lost and not ev.rejoined
+
+
+def test_dense_store_rejects_traffic(data):
+    with pytest.raises(ValueError, match="versioned"):
+        FedS3ATrainer(data, FedS3AConfig(
+            base_store="dense", traffic=REFERENCE_CHURN, cnn=TEST_CNN))
+
+
+# --- trainer-level fault accounting ------------------------------------------
+def test_bytes_ledger_counts_only_delivered_uploads(data):
+    """With sparsification disabled every message is exactly n*4 bytes, so
+    the whole wire ledger is an exact arithmetic identity of the fault
+    trace: one upload per DELIVERED participant (lost uploads absent), one
+    dense broadcast per round with targets, one dense unicast per resync."""
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=15, seed=CHAOS_SEED, engine="batched", cnn=TEST_CNN,
+        sparse_comm=False, traffic=REFERENCE_CHURN, round_deadline=700.0))
+    tr.train()
+    n = int(tr._global_flat.shape[0])
+    uploads = rounds_with_targets = resyncs = lost = 0
+    for l in tr.logs:
+        uploads += len(l.participants)
+        resyncs += len(l.resynced)
+        lost += len(l.lost)
+        online_parts = set(l.participants) - (set(l.departed)
+                                              - set(l.rejoined))
+        chain = set(l.rejoined) - set(l.resynced)
+        if online_parts | set(l.forced) | set(l.lost) | chain:
+            rounds_with_targets += 1
+    assert lost > 0, "profile produced no lost uploads; weak test"
+    expected = 4 * n * (uploads + rounds_with_targets + resyncs)
+    assert tr.comm.payload_bytes == expected
+    assert tr.comm.messages == uploads + rounds_with_targets + resyncs
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_residual_hygiene_under_faults(data, engine):
+    """After every faulted round, the EF residuals of forced / lost /
+    departed / rejoined clients are retired — their mass was accumulated
+    against a base those clients no longer hold."""
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=10, seed=CHAOS_SEED, engine=engine, cnn=TEST_CNN,
+        error_feedback=True, traffic=REFERENCE_CHURN, round_deadline=700.0))
+    retired_any = 0
+    for _ in range(10):
+        log = tr.run_round()
+        retired = (set(log.forced) | set(log.lost) | set(log.departed)
+                   | set(log.rejoined))
+        retired_any += len(retired)
+        for i in retired:
+            if engine == "sequential":
+                assert "residual" not in tr.clients[i]
+            else:
+                assert not np.asarray(tr._residual_rows[i]).any()
+    assert retired_any > 0, "profile produced no retirements; weak test"
+
+
+# --- the acceptance scenario -------------------------------------------------
+def test_acceptance_50_rounds_all_engines_bit_identical(data):
+    """ISSUE 6 acceptance: crash 10% / loss 5% / churn on, 50 rounds on
+    every engine — no hang or exception, bit-identical fault trace and
+    trace-derived metrics across engines, the ring-resync path exercised at
+    least once, model metrics inside the parity tolerances."""
+    runs = {}
+    for engine in ENGINES:
+        tr = FedS3ATrainer(data, FedS3AConfig(
+            rounds=50, seed=CHAOS_SEED, engine=engine, cnn=TEST_CNN,
+            error_feedback=True, traffic=REFERENCE_CHURN,
+            round_deadline=700.0, quorum_floor=1))
+        out = tr.train()
+        runs[engine] = (tr, out)
+        assert out["rounds"] == 50
+
+    ref_tr, ref_out = runs["sequential"]
+    assert ref_out["fleet"]["resyncs"] >= 1, "ring-resync path never fired"
+    assert ref_out["fleet"]["crashes"] > 0
+    assert ref_out["fleet"]["lost_uploads"] > 0
+    assert ref_out["fleet"]["departures"] > 0
+    ref_trace = _trace(ref_tr)
+    for engine in ENGINES[1:]:
+        tr, out = runs[engine]
+        # schedule-derived state: EXACT equality, field for field
+        assert _trace(tr) == ref_trace, f"{engine} fault trace diverged"
+        assert out["fleet"] == ref_out["fleet"]
+        assert out["art"] == ref_out["art"]
+        # model metrics: engines differ only by reduction order
+        for key in ("accuracy", "f1"):
+            assert abs(out["metrics"][key] - ref_out["metrics"][key]) < 1e-4
+        assert abs(out["aco"] - ref_out["aco"]) < 2e-2

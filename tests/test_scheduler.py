@@ -65,6 +65,60 @@ def test_scheduler_invariants(lats, C, tau):
             assert sch.state.versions[c] == new_version
 
 
+def test_tau_zero_with_jitter():
+    """tau=0: zero staleness tolerance — every straggler is forced at every
+    boundary, and latency jitter cannot push an in-flight run outside the
+    (empty) window."""
+    sch = SemiAsyncScheduler([10.0, 15.0, 20.0, 25.0, 30.0, 35.0],
+                             C=0.5, tau=0, jitter=0.3, seed=3)
+    for _ in range(10):
+        parts, stale, forced, _ = sch.next_round()
+        assert len(parts) == 3
+        # with tau=0 a participant's base can only be the previous round
+        # if it arrived without surviving a boundary; any survivor would
+        # have been forced — so staleness is always 0
+        assert all(s == 0 for s in stale.values())
+        new_version = sch.state.round
+        for (_, _, run) in sch.state.runs:
+            assert new_version - run.base_version == 0
+        for c in forced:
+            assert sch.state.versions[c] == new_version
+
+
+def test_full_participation_c_one():
+    """C=1.0: the server waits for the whole fleet, so every round is a
+    synchronous FedAvg-style round — all M participate, nobody is ever
+    stale or forced, and the round time is the slowest client's latency."""
+    lats = [10.0, 20.0, 30.0, 40.0]
+    sch = SemiAsyncScheduler(lats, C=1.0, tau=2, jitter=0.0)
+    prev_t = 0.0
+    for _ in range(5):
+        parts, stale, forced, t = sch.next_round()
+        assert sorted(r.client for r in parts) == [0, 1, 2, 3]
+        assert all(s == 0 for s in stale.values())
+        assert forced == []
+        assert t - prev_t == 40.0       # slowest client paces the round
+        prev_t = t
+
+
+def test_perma_forced_straggler():
+    """A client whose latency exceeds tau rounds of fleet progress is
+    forced at every boundary it survives to and NEVER participates — the
+    paper's §IV-C2 deprecated-client regime as a permanent state."""
+    lats = [10.0, 11.0, 1000.0]
+    sch = SemiAsyncScheduler(lats, C=0.5, tau=2, jitter=0.0)
+    forced_rounds = 0
+    for r in range(12):
+        parts, _, forced, _ = sch.next_round()
+        assert 2 not in {run.client for run in parts}
+        if 2 in forced:
+            forced_rounds += 1
+            assert sch.state.versions[2] == sch.state.round
+    # forced at the first boundary where its gap exceeds tau, then again
+    # every tau+1 rounds forever
+    assert forced_rounds >= 3
+
+
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=99))
 def test_all_clients_eventually_participate(seed):
