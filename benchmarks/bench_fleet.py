@@ -22,12 +22,16 @@ cell pins the versioned base store's two wins: server base memory
 — each transition payload once a round, at most tau+1 — vs one encode per
 target;
 the versioned cells also report the broadcast-only ledger as
-``dist_payload_bytes_per_round``). A final ``--faults`` cell per K runs the
+``dist_payload_bytes_per_round``). A ``--faults`` cell per K runs the
 REFERENCE_CHURN traffic model (crash 10%, upload loss 5%, churn) with a
 round deadline and quorum floor, reporting fleet-health aggregates
 (``degraded_rounds``, ``mean_quorum_frac``, ``resyncs``, ``crashes``,
 ``lost_uploads``) so the regression gate can bound round-efficiency
-degradation.
+degradation. A final ``wire_format="csr_q"`` cell per K (with EF, so the
+dequantization error is re-offered) measures the int8-quantized wire
+format against its f32 CSR twin at the same (K, D): the gate pins its
+payload at <=0.4x the twin's, rounds/sec at >=0.9x, and final accuracy
+within 1e-2.
 
   PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
   PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: K<=64,
@@ -57,7 +61,7 @@ SMOKE_DEVICES = (1, 4)
 
 
 def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
-               base_store="versioned", faults=False):
+               base_store="versioned", faults=False, wire_format="csr"):
     """One (K, current-device-count) measurement. Import jax lazily so the
     driver process never initializes an XLA client."""
     import jax
@@ -73,7 +77,7 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     tr = FedS3ATrainer(data, FedS3AConfig(
         rounds=rounds + warmup, seed=seed, engine="sharded", cnn=cnn,
         C=0.5, batch_size=50, error_feedback=error_feedback,
-        base_store=base_store,
+        base_store=base_store, wire_format=wire_format,
         # fault cell: the reference churn profile with a round deadline, so
         # the report carries a round-efficiency number (mean_quorum_frac)
         # the regression gate can bound
@@ -104,6 +108,7 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
         "error_feedback": error_feedback,
         "base_store": base_store,
         "faults": faults,
+        "wire_format": wire_format,
         # fleet-health aggregates over the whole run (warmup + timed):
         # deterministic for a fixed seed, so the gate can pin them
         "degraded_rounds": fleet["degraded_rounds"],
@@ -131,6 +136,8 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
             (wire1["indices_bytes"] - wire0["indices_bytes"]) / rounds,
         "wire_row_ptr_bytes_per_round":
             (wire1["row_ptr_bytes"] - wire0["row_ptr_bytes"]) / rounds,
+        "wire_scales_bytes_per_round":
+            (wire1["scales_bytes"] - wire0["scales_bytes"]) / rounds,
         "aco": tr.comm.aco,
         # per-client EF residual state: sparse CSR store vs the dense (M, N)
         # matrix it replaced (0 when EF is off)
@@ -144,26 +151,34 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
 def worker(args):
     results = [bench_cell(k, rounds=args.rounds, seed=args.seed,
                           error_feedback=args.ef, base_store=args.base_store,
-                          faults=args.faults)
+                          faults=args.faults, wire_format=args.wire_format)
                for k in args.clients]
     with open(args.out, "w") as f:
         json.dump(results, f)
 
 
 def _cells(args):
-    """(devices, clients, error_feedback, base_store, faults) cells: the
-    plain sweep (versioned store, the default) plus — at the highest device
-    count — one EF cell per K (the residual-store story), one
-    dense-base-store cell per K (the versioned-store memory +
-    distribution-bytes story), and one fault-injected cell per K
+    """(devices, clients, error_feedback, base_store, faults, wire_format)
+    cells: the plain sweep (versioned store, f32 CSR, the defaults) plus —
+    at the highest device count — one EF cell per K (the residual-store
+    story), one dense-base-store cell per K (the versioned-store memory +
+    distribution-bytes story), one fault-injected cell per K
     (REFERENCE_CHURN + round deadline: the graceful-degradation story,
-    gated on round efficiency)."""
+    gated on round efficiency), and one quantized-wire (csr_q + EF) cell
+    per K (the int8 payload story, gated against its f32 CSR twin)."""
     dmax = max(args.devices)
-    cells = [(d, k, False, "versioned", False) for d in args.devices
+    cells = [(d, k, False, "versioned", False, "csr") for d in args.devices
              for k in args.clients]
-    cells += [(dmax, k, True, "versioned", False) for k in args.clients]
-    cells += [(dmax, k, False, "dense", False) for k in args.clients]
-    cells += [(dmax, k, False, "versioned", True) for k in args.clients]
+    cells += [(dmax, k, True, "versioned", False, "csr")
+              for k in args.clients]
+    cells += [(dmax, k, False, "dense", False, "csr") for k in args.clients]
+    cells += [(dmax, k, False, "versioned", True, "csr")
+              for k in args.clients]
+    # csr_q rides with EF so the dequantization error is re-offered instead
+    # of dropped — the configuration the accuracy gate compares to its EF
+    # f32 twin
+    cells += [(dmax, k, True, "versioned", False, "csr_q")
+              for k in args.clients]
     return cells
 
 
@@ -173,33 +188,34 @@ def driver(args):
     # (measured 4-5x on the later cell — lingering executables and
     # allocator state), so every cell gets a pristine runtime
     results = []
-    for d, k, ef, store, faults in _cells(args):
+    for d, k, ef, store, faults, wire in _cells(args):
         env = dict(os.environ)
         flags = [f for f in env.get("XLA_FLAGS", "").split()
                  if "--xla_force_host_platform_device_count" not in f]
         env["XLA_FLAGS"] = " ".join(
             flags + [f"--xla_force_host_platform_device_count={d}"])
         out = f".bench_fleet_worker_{d}_{k}_{int(ef)}_{store}_{int(faults)}" \
-              ".json"
+              f"_{wire}.json"
         cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
                "--worker", "--out", out, "--rounds", str(args.rounds),
                "--seed", str(args.seed), "--clients", str(k),
-               "--base-store", store]
+               "--base-store", store, "--wire-format", wire]
         if ef:
             cmd.append("--ef")
         if faults:
             cmd.append("--faults")
         print(f"[bench_fleet] K={k} devices={d} ef={ef} store={store} "
-              f"faults={faults}", flush=True)
+              f"faults={faults} wire={wire}", flush=True)
         subprocess.run(cmd, env=env, check=True)
         with open(out) as f:
             results.extend(json.load(f))
         os.remove(out)
 
     for r in results:
-        tag = " ef" if r["error_feedback"] else \
-            (" fx" if r.get("faults") else
-             (" db" if r.get("base_store") == "dense" else ""))
+        tag = " q8" if r.get("wire_format", "csr") == "csr_q" else \
+            (" ef" if r["error_feedback"] else
+             (" fx" if r.get("faults") else
+              (" db" if r.get("base_store") == "dense" else "")))
         print(f"  K={r['clients']:5d} D={r['devices']}{tag:3s} "
               f"{r['rounds_per_sec']:7.3f} rounds/s "
               f"({r['s_per_round']*1e3:8.1f} ms/round)  "
@@ -218,7 +234,8 @@ def driver(args):
     summary = {}
     for r in results:
         if not r["error_feedback"] and r.get("base_store") != "dense" \
-                and not r.get("faults"):
+                and not r.get("faults") \
+                and r.get("wire_format", "csr") == "csr":
             summary.setdefault(r["clients"], {})[r["devices"]] = \
                 r["rounds_per_sec"]
     scaling = {
@@ -246,6 +263,9 @@ def main():
                     choices=("versioned", "dense"), help=argparse.SUPPRESS)
     ap.add_argument("--ef", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--faults", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--wire-format", dest="wire_format", default="csr",
+                    choices=("csr", "csr_q", "dense_masked"),
+                    help=argparse.SUPPRESS)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()

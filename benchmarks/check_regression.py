@@ -2,8 +2,8 @@
 
 Diffs a fresh smoke run of ``benchmarks.bench_fleet`` against the committed
 baseline (BENCH_fleet.json) cell by cell — cells are keyed by
-(clients, devices, error_feedback, base_store, faults) — and fails the job
-when:
+(clients, devices, error_feedback, base_store, faults, wire_format) — and
+fails the job when:
 
 * throughput regresses by more than ``--max-slowdown`` (default 30%) on
   the GEOMETRIC MEAN across cells, or by more than twice that on any
@@ -31,7 +31,18 @@ when:
   fraction — uploads aggregated per round over the participation target k
   — must not drop more than ``--quorum-tol`` (absolute, default 0.05)
   below the committed baseline. The fault trace is seed-deterministic, so
-  a drop means a scheduler change made degraded rounds worse, not noise.
+  a drop means a scheduler change made degraded rounds worse, not noise, or
+* the quantized-wire gate fails: wherever a (K, D) pair has both a
+  ``wire_format="csr_q"`` cell and its f32 ``"csr"`` twin (same EF /
+  store / faults), the csr_q cell must put on the wire at most 0.4x the
+  twin's payload bytes per round (int8 values + packed int16 offsets are
+  3 bytes per stored element vs the twin's 8), keep at least 0.9x the
+  twin's rounds/sec (the dequantizing scatter must stay fused, not a
+  separate pass), and land within 1e-2 of the twin's final accuracy (the
+  EF residual absorbs the rounding error; a larger gap means the
+  quantization stopped being error-compensated). Both cells come from the
+  same run on the same host, so the throughput ratio is insulated from
+  runner drift.
 
 The throughput comparison is absolute rounds/sec against a baseline
 measured on whatever machine last ran the full sweep — a systematically
@@ -61,7 +72,8 @@ def _cells(path):
     out = {}
     for r in results:
         key = (r["clients"], r["devices"], bool(r.get("error_feedback")),
-               r.get("base_store", "versioned"), bool(r.get("faults")))
+               r.get("base_store", "versioned"), bool(r.get("faults")),
+               r.get("wire_format", "csr"))
         out[key] = r
     return out
 
@@ -70,10 +82,11 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
     failures, skipped, rows, speeds = [], [], [], []
     for key, cand in sorted(candidate.items()):
         base = baseline.get(key)
-        k, d, ef, store, faults = key
+        k, d, ef, store, faults, wire = key
         name = f"K={k} D={d}{' ef' if ef else ''}" + \
             (f" {store}" if store != "versioned" else "") + \
-            (" faults" if faults else "")
+            (" faults" if faults else "") + \
+            (f" {wire}" if wire != "csr" else "")
         # base-store memory gate: the versioned store must stay sublinear —
         # strictly below the dense (M, N) equivalent — at every committed
         # fleet size (candidate-only check, no baseline cell needed)
@@ -85,7 +98,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                     f"{cand['base_store_bytes']} B is not smaller than the "
                     f"dense equivalent "
                     f"{cand['base_store_dense_equiv_bytes']} B")
-            dense_twin = candidate.get((k, d, ef, "dense", faults))
+            dense_twin = candidate.get((k, d, ef, "dense", faults, wire))
             if dense_twin is not None:
                 if cand["base_store_bytes"] >= \
                         dense_twin.get("base_store_bytes", float("inf")):
@@ -100,6 +113,35 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                         f"{cand['payload_bytes_per_round']:.0f}/round vs "
                         f"{dense_twin['payload_bytes_per_round']:.0f} with "
                         f"the dense store")
+        # quantized-wire gate: a csr_q cell is judged against its f32 CSR
+        # twin from the SAME run (same K/D/EF/store/faults, same host), so
+        # the byte ratio is deterministic and the throughput ratio is
+        # insulated from runner drift (candidate-only, no baseline needed)
+        if wire == "csr_q":
+            twin = candidate.get((k, d, ef, store, faults, "csr"))
+            if twin is None:
+                skipped.append(f"{name} (no f32 csr twin cell)")
+            else:
+                qwire = cand["payload_bytes_per_round"] / \
+                    max(twin["payload_bytes_per_round"], 1e-9)
+                qspeed = cand["rounds_per_sec"] / twin["rounds_per_sec"]
+                qacc = abs(cand["final_accuracy"] - twin["final_accuracy"])
+                rows.append(f"  {name:16s} vs f32 twin: bytes x{qwire:5.3f} "
+                            f"rounds/s x{qspeed:5.2f} |d-acc| {qacc:.4f}")
+                if qwire > 0.4:
+                    failures.append(
+                        f"{name}: quantized payload is x{qwire:.3f} of the "
+                        f"f32 csr twin (gate: <=0.4 — int8+packed offsets "
+                        f"should be ~3/8 of the f32 bytes)")
+                if qspeed < 0.9:
+                    failures.append(
+                        f"{name}: quantized wire throughput is x{qspeed:.2f} "
+                        f"of the f32 csr twin (gate: >=0.9)")
+                if qacc > 1e-2:
+                    failures.append(
+                        f"{name}: final accuracy {cand['final_accuracy']:.4f}"
+                        f" is {qacc:.4f} from the f32 csr twin's "
+                        f"{twin['final_accuracy']:.4f} (gate: <=0.01)")
         if base is None:
             skipped.append(name)
             continue

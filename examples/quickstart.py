@@ -56,6 +56,23 @@ Wire format
   ``residual_frac=1.0`` recovers lossless EF) — which is what lets the
   sharded engine carry fleet-scale per-client state without a dense
   (M, N) residual matrix.
+* ``"csr_q"`` — the quantized + packed format, layered on the same
+  compaction: values travel as int8 with one f32 absmax scale per row
+  (``scale = absmax / 127``), and column indices as int16 offsets within
+  their 512-column block plus a per-row int16 block-count table —
+  3 bytes per stored element instead of 8, so the same kept fraction
+  moves at ~0.375x the f32 CSR payload (~2.7x fewer bytes; the CI gate
+  pins <=0.4x at K in {512, 2048}). The server aggregates by a
+  dequantizing scatter-add fused into the weighted client sum, and the
+  versioned base store keeps its chain deltas in the quantized wire form
+  while the ring reconstructions every client rebuilds stay canonical
+  f32. Quantization is lossy by design: with ``error_feedback=True`` the
+  rounding error (at most half a quantization step per element) spills
+  into the same EF residual as the sparsification overflow and is
+  re-offered next round; without EF it is dropped like any other
+  sub-threshold mass. ``q_dtype="fp16"`` selects a half-precision
+  fallback (5 bytes/element, scales become identity and are not shipped)
+  for deltas whose dynamic range genuinely exceeds int8.
 * ``"dense_masked"`` — the pre-compaction reference: masked dense deltas
   move between engines and ACO counts 8 bytes per threshold survivor
   without materializing a payload. Kept for debugging and as the parity

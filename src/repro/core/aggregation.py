@@ -170,6 +170,78 @@ def blend_flat_sharded_csr(server_flat, base_local, values_local,
         (1.0 - f_weight) * unsup
 
 
+def csr_q_weighted_scatter(qvals, qoffs, qcnt, scales, w, n):
+    """Fused server-side decode of K quantized csr_q payload rows into the
+    weighted client sum — the csr_q twin of :func:`csr_weighted_scatter`.
+
+    qvals: (K, cap) int8 (or f16) quantized values; qoffs: (K, cap) int16
+    in-block column offsets; qcnt: (K, nblk) int16 per-block counts (the
+    index decoder's side information); scales: (K,) f32 per-row absmax
+    scales (all-ones for fp16 payloads); w: (K,) combined Eq. 9/10 weights.
+
+    Absolute columns are reconstructed exactly as a receiver would —
+    block id per slot via a vmapped binary search over the cumulative
+    block counts (ref.csr_unpack_indices_ref inlined so the whole decode
+    jits into the blend), then ``block * 512 + offset`` — and
+    dequantization FUSES into the weight multiply: the contribution of row
+    k is ``(w_k * scale_k) * qvals_k``, so the f32 payload is never
+    materialized. Padding slots carry value 0 at a clamped index and
+    scatter nothing. Returns sum_k w_k * dequant(decode(payload_k)) as an
+    (n,) fp32 vector via one flat scatter-add.
+    """
+    K, cap = qoffs.shape
+    nblk = qcnt.shape[1]
+    cum = jnp.cumsum(qcnt.astype(jnp.int32), axis=1)
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    blk = jax.vmap(lambda c: jnp.searchsorted(c, slots, side="right"))(cum)
+    idx = jnp.minimum(blk, nblk - 1).astype(jnp.int32) * 512 + \
+        qoffs.astype(jnp.int32)
+    idx = jnp.minimum(idx, n - 1)
+    contrib = (w.astype(jnp.float32) *
+               scales.astype(jnp.float32))[:, None] * \
+        qvals.astype(jnp.float32)
+    return jnp.zeros((n,), jnp.float32).at[idx.reshape(-1)].add(
+        contrib.reshape(-1))
+
+
+def blend_flat_csr_q(server_flat, base_flat, qvals, qoffs, qcnt, scales, w,
+                     f_weight, *, use_kernel=False):
+    """FedS3A global update from quantized csr_q upload payloads:
+    uploaded_k = base_k + dequant(decode(payload_k)), so the weighted
+    client sum splits into the dense base sum plus one fused
+    dequantizing weighted scatter-add of the quantized payloads."""
+    w = w.astype(jnp.float32)
+    if use_kernel:
+        base_sum = kops.staleness_agg(base_flat, w)
+    else:
+        base_sum = jnp.einsum("k,kn->n", w, base_flat.astype(jnp.float32))
+    unsup = base_sum + csr_q_weighted_scatter(qvals, qoffs, qcnt, scales, w,
+                                              server_flat.shape[0])
+    return f_weight * server_flat.astype(jnp.float32) + \
+        (1.0 - f_weight) * unsup
+
+
+def blend_flat_sharded_csr_q(server_flat, base_local, qvals_local,
+                             qoffs_local, qcnt_local, scales_local, w_local,
+                             f_weight, *, axis_name, use_kernel=False):
+    """``blend_flat_csr_q`` inside a ``shard_map`` over the client axis:
+    each shard folds its local base rows and quantized payload rows (pad
+    rows carry weight 0 and zero-valued payload slots, so they vanish),
+    and one psum produces the replicated weighted client sum."""
+    w_local = w_local.astype(jnp.float32)
+    if use_kernel:
+        base_sum = kops.staleness_agg(base_local, w_local)
+    else:
+        base_sum = jnp.einsum("k,kn->n", w_local,
+                              base_local.astype(jnp.float32))
+    partial = base_sum + csr_q_weighted_scatter(
+        qvals_local, qoffs_local, qcnt_local, scales_local, w_local,
+        server_flat.shape[0])
+    unsup = jax.lax.psum(partial, axis_name)
+    return f_weight * server_flat.astype(jnp.float32) + \
+        (1.0 - f_weight) * unsup
+
+
 def aggregate_flat_csr(server_flat, base_flat, values, indices, *,
                        data_sizes, stalenesses, g_fn, f_weight, groups=None,
                        use_kernel=False):

@@ -67,16 +67,17 @@ _totals = {}
 
 
 def _payload_total(scalars):
-    """sum(stored) * 8 bytes over a round's chain-suffix payloads in ONE
-    jitted dispatch (cached per arity). The stored counts come out of the
-    sharded stages fully replicated, and every eager op on a replicated
-    array costs ~1.5 ms of multi-device dispatch on CPU — folding the
-    stack/sum/scale into one call keeps the per-round broadcast accounting
-    at a single dispatch."""
+    """sum(stored) element count over a round's chain-suffix payloads in
+    ONE jitted dispatch (cached per arity) — the comm channel converts the
+    count to bytes at its wire format's per-element widths. The stored
+    counts come out of the sharded stages fully replicated, and every
+    eager op on a replicated array costs ~1.5 ms of multi-device dispatch
+    on CPU — folding the stack/sum into one call keeps the per-round
+    broadcast accounting at a single dispatch."""
     n = len(scalars)
     fn = _totals.get(n)
     if fn is None:
-        fn = jax.jit(lambda *s: jnp.sum(jnp.stack(s)) * 8)
+        fn = jax.jit(lambda *s: jnp.sum(jnp.stack(s)))
         _totals[n] = fn
     return fn(*scalars)
 
@@ -110,8 +111,12 @@ class VersionedBaseStore:
         self.version = 0
         # version v -> payload of transition v-1 -> v:
         #   {"stored": device-scalar-or-int[, "vals": (cap,), "idx": (cap,)]}
+        # (csr_q: the quantized wire arrays instead —
+        #   {"stored", "qvals" int8|f16, "qoffs" int16, "qcnt" int16,
+        #    "scale" f32} — the ring reconstruction already folded in the
+        # dequantized decode, so replaying the chain stays canonical f32)
         self._chain = {}
-        self._dist_pending = []      # device scalars, bytes per broadcast
+        self._dist_pending = []      # (count device scalar, bytes/element)
         self._dist_host = 0.0
 
     # -- lookups -----------------------------------------------------------
@@ -206,8 +211,8 @@ class VersionedBaseStore:
         ids = np.asarray(sorted(set(int(i) for i in client_ids)), np.int64)
         if ids.size == 0:
             return
-        comm.account_payload(float(ids.size) * self.n * 4, self.n,
-                             int(ids.size))
+        comm.account_dense_payload(float(ids.size) * self.n * 4, self.n,
+                                   int(ids.size))
         self._dist_host += float(ids.size) * self.n * 4
         self.client_version[ids] = self.version
         self.detached[ids] = False
@@ -240,13 +245,15 @@ class VersionedBaseStore:
                           for t in range(int(vers.min()) + 1,
                                          self.version + 1)]
                 total = _payload_total(stored)       # one dispatch
-                self._dist_pending.append(total)
-                csr = comm.wire_format == "csr"
+                self._dist_pending.append((total, sum(comm.elem_bytes())))
+                csr = comm.wire_format in ("csr", "csr_q")
                 comm.account_payload(
                     total, self.n, len(stored),
                     row_ptr_rows=len(stored) if csr else 0)
                 if csr:
-                    self._dist_host += 4 * (len(stored) + 1)
+                    sb, bb = comm.row_overhead_bytes(self.n)
+                    self._dist_host += 4 * (len(stored) + 1) + \
+                        (sb + bb) * len(stored)
             self.client_version[targets] = self.version
             self.detached[targets] = False
 
@@ -255,8 +262,10 @@ class VersionedBaseStore:
         """Cumulative distribution bytes-on-wire (broadcast payloads only,
         uploads excluded). Materializes pending device scalars on read."""
         if self._dist_pending:
-            self._dist_host += float(np.asarray(
-                jnp.stack(self._dist_pending), np.float64).sum())
+            counts = np.asarray(jnp.stack(
+                [c for c, _ in self._dist_pending]), np.float64)
+            for cnt, (_, eb) in zip(counts, self._dist_pending):
+                self._dist_host += float(cnt) * eb
             self._dist_pending = []
         return self._dist_host
 
@@ -268,7 +277,9 @@ class VersionedBaseStore:
         total = (self.ring.size * 4 + self.client_version.nbytes
                  + self.detached.nbytes)
         for p in self._chain.values():
-            total += 4                                   # stored count
-            if "vals" in p:
-                total += int(p["vals"].size) * 4 + int(p["idx"].size) * 4
+            for k, arr in p.items():
+                if k == "stored":
+                    total += 4                           # stored count
+                else:   # payload arrays at their actual dtype widths
+                    total += int(arr.size) * arr.dtype.itemsize
         return int(total)

@@ -69,8 +69,13 @@ class _Base:
         self.rng, k = jax.random.split(self.rng)
         x = self.data["clients"][i]["x"]
         opt = adam_init(params)
-        for _ in range(self.cfg.epochs):
-            params, opt, _ = self.client_epoch(params, opt, x, lr, k)
+        for e in range(self.cfg.epochs):
+            # every epoch gets its own derived key (epoch 0 keeps the raw
+            # split so single-epoch runs are bit-identical to before);
+            # reusing one key replays the same batch shuffle and dropout
+            # mask each epoch — the multi-epoch bug FedS3A's engines fixed
+            ke = k if e == 0 else jax.random.fold_in(k, e)
+            params, opt, _ = self.client_epoch(params, opt, x, lr, ke)
         return params
 
     def _server_step(self):
@@ -87,7 +92,9 @@ class _Base:
 
     @property
     def aco(self):
-        return self.comm_bytes / self.dense_bytes if self.dense_bytes else 1.0
+        # empty ledger reads 0.0, matching SparseComm.aco: nothing crossed
+        # the wire, so the overhead ratio is zero (not a free full model)
+        return self.comm_bytes / self.dense_bytes if self.dense_bytes else 0.0
 
 
 class FedAvgSSL(_Base):
@@ -126,6 +133,7 @@ class FedAsyncSSL(_Base):
         self.alpha = alpha
         self.a = a
         self.max_stale = max_stale
+        self.forced_syncs = 0
 
     def train(self, rounds=None):
         rounds = rounds or self.cfg.rounds
@@ -139,21 +147,36 @@ class FedAsyncSSL(_Base):
         times = []
         g_version = 0
         prev_t = 0.0
-        for r in range(rounds):
+        r = 0
+        while r < rounds:
             t, i = heapq.heappop(heap)
-            newp = self._train_client(i, base[i], self.cfg.lr)
             s = g_version - version[i]
+            if s > self.max_stale:
+                # forced sync (the paper's staleness guard): the run this
+                # client would report is too stale to blend. The old code
+                # trained anyway, silently dropped the upload, yet booked a
+                # full round-trip, advanced g_version and consumed a round
+                # — inflating ACO with bytes that bought nothing and
+                # recording an aggregation that never happened. Only the
+                # fresh model actually crosses the wire (one downlink); the
+                # client restarts from it and the round is not consumed.
+                version[i] = g_version
+                base[i] = self.global_params
+                self._count_comm(1)
+                self.forced_syncs += 1
+                heapq.heappush(heap, (t + self.latencies[i], i))
+                continue
+            newp = self._train_client(i, base[i], self.cfg.lr)
             sp = self._server_step()
             fw = supervised_weight(r, C=1 / self.M, M=self.M,
                                    mode=self.cfg.supervised_weight_mode)
-            if s <= self.max_stale:
-                blended = agg.fedasync_blend(self.global_params, newp,
-                                             staleness=s, alpha=self.alpha,
-                                             a=self.a)
-                self.global_params = jax.tree.map(
-                    lambda spv, bv: (fw * spv.astype(jnp.float32) +
-                                     (1 - fw) * bv.astype(jnp.float32)
-                                     ).astype(spv.dtype), sp, blended)
+            blended = agg.fedasync_blend(self.global_params, newp,
+                                         staleness=s, alpha=self.alpha,
+                                         a=self.a)
+            self.global_params = jax.tree.map(
+                lambda spv, bv: (fw * spv.astype(jnp.float32) +
+                                 (1 - fw) * bv.astype(jnp.float32)
+                                 ).astype(spv.dtype), sp, blended)
             g_version += 1
             version[i] = g_version
             base[i] = self.global_params
@@ -161,8 +184,10 @@ class FedAsyncSSL(_Base):
             heapq.heappush(heap, (t + self.latencies[i], i))
             times.append(t - prev_t)
             prev_t = t
+            r += 1
         return {"metrics": self.evaluate(), "art": float(np.mean(times)),
-                "aco": self.aco, "rounds": rounds}
+                "aco": self.aco, "rounds": rounds,
+                "forced_syncs": self.forced_syncs}
 
 
 class LocalSSL(_Base):

@@ -76,11 +76,13 @@ from repro.core.pseudo_label import (class_histogram, class_histogram_batch,
                                      make_client_epoch, make_server_epoch,
                                      make_server_epoch_flat, predict_fn)
 from repro.core.scheduler import SemiAsyncScheduler, paper_latency
-from repro.core.sparse_comm import SparseComm, flatten_tree, unflatten_like
+from repro.core.sparse_comm import (CSR_FORMATS, SparseComm, flatten_tree,
+                                    unflatten_like)
 from repro.distributed.sharding import (CLIENT_AXIS, CLIENT_PAYLOAD_SPECS,
                                         CLIENT_STACK_SPEC, CLIENT_VEC_SPEC,
                                         REPLICATED_SPEC, RING_SLOT_SPEC,
-                                        RING_SPEC, client_mesh, padded_rows)
+                                        RING_SPEC, client_mesh, padded_rows,
+                                        payload_specs)
 from repro.kernels.ops import csr_decode
 from repro.models.cnn import cnn_param_count, init_cnn
 from repro.optimizer import adam_init
@@ -150,8 +152,17 @@ class FedS3AConfig:
                                          # + indices + row_ptr actually
                                          # materialized; bytes-on-wire is
                                          # the real payload size) |
-                                         # "dense_masked": legacy reference
+                                         # "csr_q": quantized + packed CSR
+                                         # (int8 values + per-row absmax
+                                         # scale, int16 in-block index
+                                         # offsets + block-count table;
+                                         # ~3 bytes/element vs 8; rounding
+                                         # error folds into the EF residual)
+                                         # | "dense_masked": legacy reference
                                          # (masked dense deltas, counted nnz)
+    q_dtype: str = "int8"                # csr_q value dtype: "int8" (per-row
+                                         # absmax scale) | "fp16" (wide
+                                         # dynamic-range fallback, no scale)
     wire_capacity: object = None         # per-row payload capacity override
                                          # (None: auto from the keep frac)
     residual_frac: float = 0.25          # EF residual store: top fraction of
@@ -286,12 +297,20 @@ class FedS3ATrainer:
                                enabled=self.cfg.sparse_comm,
                                wire_format=self.cfg.wire_format,
                                capacity=self.cfg.wire_capacity,
-                               residual_frac=self.cfg.residual_frac)
+                               residual_frac=self.cfg.residual_frac,
+                               q_dtype=self.cfg.q_dtype)
         # the engines branch on the *effective* wire format: disabled
-        # sparsification always moves dense payloads
-        self.wire_fmt = "csr" if (self.comm.enabled
-                                  and self.comm.wire_format == "csr") \
+        # sparsification always moves dense payloads. Both CSR formats
+        # share the engine plumbing (payload tuples thread through the
+        # stages opaquely); ``_csr_wire`` gates the shared paths and
+        # ``wire_fmt`` picks the format-specific blend/specs.
+        self.wire_fmt = self.comm.wire_format \
+            if (self.comm.enabled and self.comm.wire_format in CSR_FORMATS) \
             else "dense"
+        self._csr_wire = self.wire_fmt != "dense"
+        # payload tuple arity (excl. stored): (vals, idx) vs the quantized
+        # (qvals, qoffs, qcnt, scales) quadruple
+        self._payload_arity = {"csr": 2, "csr_q": 4}.get(self.wire_fmt, 0)
 
         self.g_fn = staleness_fn(self.cfg.staleness_function)
         self.participation = np.zeros((0, self.M))
@@ -410,7 +429,7 @@ class FedS3ATrainer:
                     self._base_rows = [self._global_flat] * self.M
             if cfg.error_feedback:
                 if self.engine == "sharded":
-                    if self.wire_fmt == "csr":
+                    if self._csr_wire:
                         # sparse residual store: per-client residuals live in
                         # capacity-bounded CSR rows — O(M * rcap) instead of
                         # the dense (M, N) matrix that blocked >100k-client
@@ -519,16 +538,21 @@ class FedS3ATrainer:
         """Traced body shared by every engine's finalize stage: ONE chain-
         transition encode of the new global model against the previous
         canonical reconstruction R_r. Returns (R_{r+1}, payload) where the
-        payload tuple is (values, indices, stored) under the CSR format,
-        (nnz,) under dense_masked, and () with sparsification disabled —
-        there R_{r+1} is the new global model bit-for-bit, which is what
-        makes the versioned store reproduce the dense store exactly."""
-        if self.wire_fmt == "csr":
+        payload tuple is the wire tuple + stored count under the CSR family
+        — (values, indices, stored) for f32 csr, (qvals, qoffs, qcnt,
+        scales, stored) for csr_q, where the reconstruction folds in the
+        DEQUANTIZED decode so the ring stays the canonical f32 model every
+        receiver of the quantized chain rebuilds — (nnz,) under
+        dense_masked, and () with sparsification disabled — there R_{r+1}
+        is the new global model bit-for-bit, which is what makes the
+        versioned store reproduce the dense store exactly."""
+        if self._csr_wire:
             core = self.comm.csr_core(False)
 
             def body(new_flat, prev):
-                vals, idx, stored, decoded = core(new_flat[None], prev[None])
-                return prev + decoded[0], (vals[0], idx[0], stored[0])
+                payload, stored, decoded = core(new_flat[None], prev[None])
+                return prev + decoded[0], \
+                    tuple(p[0] for p in payload) + (stored[0],)
 
             return body
         core = self.comm.batch_core(False) if self.comm.enabled else None
@@ -543,10 +567,16 @@ class FedS3ATrainer:
 
     def _chain_entry(self, payload):
         """Payload tuple from ``_advance_encode_body`` -> the store's chain
-        record ({"stored": count[, "vals", "idx"]})."""
+        record ({"stored": count[, "vals", "idx"]}; csr_q keeps the chain
+        in its quantized wire form — what actually broadcasts — so server
+        chain memory shrinks with the payloads)."""
         if self.wire_fmt == "csr":
             return {"vals": payload[0], "idx": payload[1],
                     "stored": payload[2]}
+        if self.wire_fmt == "csr_q":
+            return {"qvals": payload[0], "qoffs": payload[1],
+                    "qcnt": payload[2], "scale": payload[3],
+                    "stored": payload[4]}
         if self.comm.enabled:
             return {"stored": payload[0]}
         return {"stored": self._global_flat.shape[0]}
@@ -618,7 +648,7 @@ class FedS3ATrainer:
         ids = sorted(set(forced))
         if self.engine == "sharded":
             fidx = jnp.asarray(ids)
-            if self.wire_fmt == "csr":
+            if self._csr_wire:
                 shape = (len(ids), self._res_vals.shape[1])
                 self._res_vals = _scatter_rows(
                     self._res_vals, fidx, jnp.zeros(shape, jnp.float32))
@@ -768,28 +798,31 @@ class FedS3ATrainer:
         the local shard for sharded — the encode is per-row, so the same
         body serves both).
 
-        CSR wire format: compacts the deltas into real (values, indices)
-        payload rows, reconstructs the uploaded models from the payload (so
-        what feeds histograms/aggregation is exactly what crossed the wire),
-        and — under EF — spills sub-threshold mass plus capacity overflow
-        into the truncated residual. Returns (values, indices, stored,
-        hists|None, res_payload|None, res_dense|None).
+        CSR family ("csr" / "csr_q"): compacts the deltas into the real
+        wire payload rows, reconstructs the uploaded models from the
+        payload (so what feeds histograms/aggregation is exactly what
+        crossed the wire — csr_q reconstructs from the DEQUANTIZED decode),
+        and — under EF — spills sub-threshold mass, capacity overflow and
+        (csr_q) quantization error into the truncated residual. Returns
+        (payload_tuple, stored, hists|None, res_payload|None,
+        res_dense|None) where the payload tuple has ``self._payload_arity``
+        components.
 
         Legacy dense-masked format returns (uploaded, nnz, hists|None,
         new_res|None) as before."""
         hist = self.histogram_batch
-        if self.wire_fmt == "csr":
+        if self._csr_wire:
             core = self.comm.csr_core(with_residual)
 
             def body(trained, base, xs, vs, residual=None):
                 if with_residual:
-                    vals, idx, stored, decoded, res_payload, res_dense = \
+                    payload, stored, decoded, res_payload, res_dense = \
                         core(trained, base, residual)
                 else:
-                    vals, idx, stored, decoded = core(trained, base)
+                    payload, stored, decoded = core(trained, base)
                     res_payload = res_dense = None
                 hists = hist(base + decoded, xs, vs) if with_hist else None
-                return vals, idx, stored, hists, res_payload, res_dense
+                return payload, stored, hists, res_payload, res_dense
 
             return body
         core = self.comm.batch_core(with_residual) if self.comm.enabled \
@@ -821,12 +854,12 @@ class FedS3ATrainer:
         Returns (new_base, nnz) — under the CSR format the new base is the
         decode of the actual compacted payload and ``nnz`` is the stored
         (on-wire) count."""
-        if self.wire_fmt == "csr":
+        if self._csr_wire:
             core = self.comm.csr_core(False)
 
             def body(new_flat, dist_base):
                 g = jnp.broadcast_to(new_flat, dist_base.shape)
-                _vals, _idx, stored, decoded = core(g, dist_base)
+                _payload, stored, decoded = core(g, dist_base)
                 return dist_base + decoded, stored
 
             return body
@@ -872,12 +905,19 @@ class FedS3ATrainer:
         distribute = self._advance_encode_body() if versioned \
             else self._distribute_encode_body()
 
-        if self.wire_fmt == "csr":
+        if self._csr_wire:
+            if self.wire_fmt == "csr_q":
+                def blend(s, b, p, w, fw):
+                    return agg.blend_flat_csr_q(s, b, *p, w, fw,
+                                                use_kernel=use_kernel)
+            else:
+                def blend(s, b, p, w, fw):
+                    return agg.blend_flat_csr(s, b, p[0], p[1], w, fw,
+                                              use_kernel=use_kernel)
+
             @jax.jit
-            def fn(server_flat, base_flat, vals, idx, w, fw, dist_base):
-                new_flat = agg.blend_flat_csr(
-                    server_flat, base_flat, vals, idx, w, fw,
-                    use_kernel=use_kernel)
+            def fn(server_flat, base_flat, payload, w, fw, dist_base):
+                new_flat = blend(server_flat, base_flat, payload, w, fw)
                 if versioned:
                     recon, payload = distribute(new_flat, dist_base)
                     return (new_flat, recon) + payload
@@ -936,20 +976,20 @@ class FedS3ATrainer:
 
         with_hist = cfg.group_based and K > 1
         n = trained_flat.shape[1]
-        if self.wire_fmt == "csr":
+        if self._csr_wire:
             # the upload stage emits the compacted payload; the dense
             # uploaded stack never leaves the jit (histograms consume it
             # in-graph, aggregation takes base + payload)
             if cfg.error_feedback:
                 residual = jnp.stack(
                     [self._residual_rows[i] for i in part_ids])
-                vals, pidx, nnz, hists_dev, _, res_dense = self._upload_fn(
+                payload, nnz, hists_dev, _, res_dense = self._upload_fn(
                     True, with_hist)(trained_flat, base_flat, xs, vs,
                                      residual)
                 for row, i in enumerate(part_ids):
                     self._residual_rows[i] = res_dense[row]
             else:
-                vals, pidx, nnz, hists_dev, _, _ = self._upload_fn(
+                payload, nnz, hists_dev, _, _ = self._upload_fn(
                     False, with_hist)(trained_flat, base_flat, xs, vs)
             self.comm.account_batch_csr(nnz, n, K)
         elif cfg.error_feedback:
@@ -992,22 +1032,22 @@ class FedS3ATrainer:
             # transition against R_r; the store books the suffix from the
             # stalest target's version, each transition payload once
             prev = self.store.latest()
-            if self.wire_fmt == "csr":
+            if self._csr_wire:
                 out = self._finalize_fn()(
-                    sp_flat, base_flat, vals, pidx,
+                    sp_flat, base_flat, payload,
                     jnp.asarray(w, jnp.float32), jnp.float32(fw), prev)
             else:
                 out = self._finalize_fn()(
                     sp_flat, uploaded_flat, jnp.asarray(w, jnp.float32),
                     jnp.float32(fw), prev)
-            new_flat, recon, payload = out[0], out[1], out[2:]
-            self._advance_versioned(recon, payload, ev, part_ids)
+            new_flat, recon, chain = out[0], out[1], out[2:]
+            self._advance_versioned(recon, chain, ev, part_ids)
         else:
             targets, _ = self._distribution_plan(part_ids, ev)
             dist_base = jnp.stack([self._base_rows[i] for i in targets])
-            if self.wire_fmt == "csr":
+            if self._csr_wire:
                 new_flat, new_base, nnz_d = self._finalize_fn()(
-                    sp_flat, base_flat, vals, pidx,
+                    sp_flat, base_flat, payload,
                     jnp.asarray(w, jnp.float32), jnp.float32(fw), dist_base)
                 self.comm.account_batch_csr(nnz_d, n, len(targets))
             else:
@@ -1051,8 +1091,12 @@ class FedS3ATrainer:
         versioned = self.base_store == "versioned"
         base_specs = (RING_SPEC, RING_SLOT_SPEC) if versioned else (_ROW2,)
 
-        if self.wire_fmt == "csr":
+        if self._csr_wire:
             n = self._global_flat.shape[0]
+            # wire payload specs vary by format (csr: 2, csr_q: 4); the EF
+            # residual store stays f32 CSR rows regardless of what's on the
+            # wire, so its specs are always the f32 pair
+            pspecs = payload_specs(self.wire_fmt)
 
             def shard_fn(*args):
                 if versioned:
@@ -1066,20 +1110,20 @@ class FedS3ATrainer:
                 # shard to dense only inside the stage (per-row scatter)
                 residual = csr_decode(rvals, ridx, n) if with_residual \
                     else None
-                vals, idx, stored, hists, res_payload, _ = encode_upload(
+                payload, stored, hists, res_payload, _ = encode_upload(
                     trained, base, xs, vs, residual)
                 rp = res_payload if with_residual else (placeholder,) * 2
-                return (vals, idx, stored,
-                        hists if with_hist else placeholder,
-                        rp[0], rp[1])
+                return payload + (stored,
+                                  hists if with_hist else placeholder,
+                                  rp[0], rp[1])
 
             in_specs = base_specs + (_ROW3, _ROW2, _ROW, _ROW2,
                                      _PV if with_residual else _REP,
                                      _PI if with_residual else _REP)
-            out_specs = (_PV, _PI, _PC,
-                         _ROW2 if with_hist else _REP,
-                         _PV if with_residual else _REP,
-                         _PI if with_residual else _REP)
+            out_specs = pspecs + (_PC,
+                                  _ROW2 if with_hist else _REP,
+                                  _PV if with_residual else _REP,
+                                  _PI if with_residual else _REP)
             fn = jax.jit(shard_map(
                 shard_fn, mesh=mesh, in_specs=in_specs,
                 out_specs=out_specs, check_rep=False))
@@ -1147,42 +1191,49 @@ class FedS3ATrainer:
         versioned = self.base_store == "versioned"
         distribute = self._advance_encode_body() if versioned \
             else self._distribute_encode_body()
-        # payload arity of the advance encode (csr triple / nnz / exact)
-        n_payload = 3 if self.wire_fmt == "csr" else \
+        # payload arity of the advance encode (CSR-family wire tuple +
+        # stored / nnz / exact)
+        n_payload = self._payload_arity + 1 if self._csr_wire else \
             (1 if self.comm.enabled else 0)
 
-        if self.wire_fmt == "csr":
-            _PV, _PI, _ = CLIENT_PAYLOAD_SPECS
+        if self._csr_wire:
+            pspecs = payload_specs(self.wire_fmt)
+            if self.wire_fmt == "csr_q":
+                def blend(s, b, p, w, fw):
+                    return agg.blend_flat_sharded_csr_q(
+                        s, b, *p, w, fw,
+                        axis_name=CLIENT_AXIS, use_kernel=use_kernel)
+            else:
+                def blend(s, b, p, w, fw):
+                    return agg.blend_flat_sharded_csr(
+                        s, b, p[0], p[1], w, fw,
+                        axis_name=CLIENT_AXIS, use_kernel=use_kernel)
 
             if versioned:
-                def shard_fn(server_flat, ring, slots, vals, idx, w, fw,
+                def shard_fn(server_flat, ring, slots, payload, w, fw,
                              prev):
                     base = ring[slots]
-                    new_flat = agg.blend_flat_sharded_csr(
-                        server_flat, base, vals, idx, w, fw,
-                        axis_name=CLIENT_AXIS, use_kernel=use_kernel)
-                    recon, payload = distribute(new_flat, prev)
-                    return (new_flat, recon) + payload
+                    new_flat = blend(server_flat, base, payload, w, fw)
+                    recon, chain = distribute(new_flat, prev)
+                    return (new_flat, recon) + chain
 
                 fn = jax.jit(shard_map(
                     shard_fn, mesh=mesh,
-                    in_specs=(_REP, RING_SPEC, RING_SLOT_SPEC, _PV, _PI,
+                    in_specs=(_REP, RING_SPEC, RING_SLOT_SPEC, pspecs,
                               _ROW, _REP, _REP),
                     out_specs=(_REP, _REP) + (_REP,) * n_payload,
                     check_rep=False))
                 self._stage2_jits["finalize"] = fn
                 return fn
 
-            def shard_fn(server_flat, base, vals, idx, w, fw, dist_base):
-                new_flat = agg.blend_flat_sharded_csr(
-                    server_flat, base, vals, idx, w, fw,
-                    axis_name=CLIENT_AXIS, use_kernel=use_kernel)
+            def shard_fn(server_flat, base, payload, w, fw, dist_base):
+                new_flat = blend(server_flat, base, payload, w, fw)
                 new_base, nnz = distribute(new_flat, dist_base)
                 return new_flat, new_base, nnz
 
             fn = jax.jit(shard_map(
                 shard_fn, mesh=mesh,
-                in_specs=(_REP, _ROW2, _PV, _PI, _ROW, _REP, _ROW2),
+                in_specs=(_REP, _ROW2, pspecs, _ROW, _REP, _ROW2),
                 out_specs=(_REP, _ROW2, _ROW), check_rep=False))
             self._stage2_jits["finalize"] = fn
             return fn
@@ -1261,22 +1312,24 @@ class FedS3ATrainer:
 
         with_hist = cfg.group_based and K > 1
         stage1 = self._stage1_sharded(cfg.error_feedback, with_hist)
-        if self.wire_fmt == "csr":
+        if self._csr_wire:
+            arity = self._payload_arity
             if cfg.error_feedback:
                 # residual rows travel as CSR (values, indices) — the dense
                 # (M, N) residual matrix no longer exists
                 rvals = _gather_rows(self._res_vals, idx)
                 ridx = _gather_rows(self._res_idx, idx)
-                vals, pidx, nnz, hists_dev, nrv, nri = stage1(
-                    *base_args, xs, vs, lrs_p, keys, rvals, ridx)
+                out = stage1(*base_args, xs, vs, lrs_p, keys, rvals, ridx)
+                nrv, nri = out[arity + 2], out[arity + 3]
                 self._res_vals = _scatter_rows(self._res_vals, idx[:K],
                                                nrv[:K])
                 self._res_idx = _scatter_rows(self._res_idx, idx[:K],
                                               nri[:K])
             else:
                 z = jnp.zeros((), jnp.float32)
-                vals, pidx, nnz, hists_dev, _, _ = stage1(
-                    *base_args, xs, vs, lrs_p, keys, z, z)
+                out = stage1(*base_args, xs, vs, lrs_p, keys, z, z)
+            payload, nnz, hists_dev = \
+                tuple(out[:arity]), out[arity], out[arity + 1]
             self.comm.account_batch_csr(nnz[:K], n, K)
         elif cfg.error_feedback:
             residual = _gather_rows(self._residual_mat, idx)
@@ -1320,24 +1373,24 @@ class FedS3ATrainer:
             # target's version (each transition payload once) — no
             # per-target rows, gathers or retraces on the target count
             prev = self.store.latest()
-            if self.wire_fmt == "csr":
+            if self._csr_wire:
                 out = self._stage2_sharded()(
-                    sp_flat, self.store.ring, slots, vals, pidx, w_pad,
+                    sp_flat, self.store.ring, slots, payload, w_pad,
                     jnp.float32(fw), prev)
             else:
                 out = self._stage2_sharded()(
                     sp_flat, uploaded, w_pad, jnp.float32(fw), prev)
-            new_flat, recon, payload = out[0], out[1], out[2:]
-            self._advance_versioned(recon, payload, ev, part_ids)
+            new_flat, recon, chain = out[0], out[1], out[2:]
+            self._advance_versioned(recon, chain, ev, part_ids)
         else:
             targets, _ = self._distribution_plan(part_ids, ev)
             T = len(targets)
             Tp = padded_rows(T, D)
             tidx = jnp.asarray(targets + targets[:1] * (Tp - T))
             dist_base = _gather_rows(self._base_mat, tidx)
-            if self.wire_fmt == "csr":
+            if self._csr_wire:
                 new_flat, new_base, nnz_d = self._stage2_sharded()(
-                    sp_flat, base_args[0], vals, pidx, w_pad,
+                    sp_flat, base_args[0], payload, w_pad,
                     jnp.float32(fw), dist_base)
                 self.comm.account_batch_csr(nnz_d[:T], n, T)
             else:
@@ -1383,7 +1436,7 @@ class FedS3ATrainer:
         if not self.cfg.error_feedback:
             return 0
         if self.engine == "sharded":
-            if self.wire_fmt == "csr":
+            if self._csr_wire:
                 return int((self._res_vals.size + self._res_idx.size) * 4)
             return int(self._residual_mat.size * 4)
         if self.engine == "batched":

@@ -18,7 +18,6 @@ def weighted_metrics(y_true, y_pred, num_classes):
     rec = np.zeros(num_classes)
     f1 = np.zeros(num_classes)
     fpr = np.zeros(num_classes)
-    acc_c = np.zeros(num_classes)
     for c in range(num_classes):
         tp = np.sum((y_pred == c) & (y_true == c))
         fp = np.sum((y_pred == c) & (y_true != c))
@@ -28,7 +27,6 @@ def weighted_metrics(y_true, y_pred, num_classes):
         rec[c] = tp / max(tp + fn, 1)
         f1[c] = 2 * tp / max(2 * tp + fn + fp, 1)
         fpr[c] = fp / max(fp + tn, 1)
-        acc_c[c] = (tp + tn) / max(n, 1)
 
     return {
         "accuracy": float(np.mean(y_true == y_pred)),

@@ -21,6 +21,22 @@ Wire formats (``wire_format=``):
   capacity-bounded CSR row (top ``residual_frac`` of N by magnitude via a
   per-row sampled quantile, then the same column-order capacity rule) — the
   store is O(cap), not O(N), and ``residual_frac=1.0`` recovers lossless EF.
+* ``"csr_q"`` — the quantized + packed CSR format: same compaction pipeline,
+  but values ship as int8 with a per-row absmax scale (``q_dtype="fp16"``
+  falls back to float16 for deltas whose dynamic range int8 cannot hold) and
+  column indices ship as int16 in-block offsets plus a per-row
+  ``ceil(n/512)``-entry int16 block-count table (csr_compact's stage-1
+  per-block nnz, reused as the index decoder's side information). Bytes per
+  stored element drop 8 -> 3 (int8: 1 value + 2 offset; fp16: 4), plus
+  4 bytes/row of scale and ``2 * ceil(n/512)`` bytes/row of block table.
+  Quantization is LOSSY; the encode core computes everything downstream —
+  the server decode, the distribution chain, and crucially the
+  error-feedback residual — from the dequantized payload, so the rounding
+  error folds into the same residual that already absorbs sparsification
+  overflow and is re-offered next round instead of accumulating into drift.
+  Without EF the rounding error is dropped, exactly like sub-threshold mass
+  in the paper's lossy scheme. The f32 ``"csr"`` format stays the
+  parity-pinned reference.
 * ``"dense_masked"`` — the pre-compaction reference format: the masked dense
   delta moves between engines and ACO counts value+index per threshold
   survivor (8 bytes vs 4 dense) without materializing a payload.
@@ -132,7 +148,9 @@ def unflatten_stacked(flat, template_tree):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-WIRE_FORMATS = ("csr", "dense_masked")
+WIRE_FORMATS = ("csr", "csr_q", "dense_masked")
+CSR_FORMATS = ("csr", "csr_q")
+Q_DTYPES = ("int8", "fp16")
 CAP_FACTOR = 2.5          # payload capacity slack over the target keep_frac:
                           # near-tied delta magnitudes (e.g. sign-like early
                           # Adam steps) push the kept fraction past the
@@ -169,19 +187,26 @@ class SparseComm:
 
     Byte counters: ``dense_bytes`` is host-computable (4 bytes/param/message)
     and kept as a plain int; payload bytes need the on-device nnz count, so
-    each message appends one device scalar to ``_pending_payload`` and the
-    ``aco`` / ``payload_bytes`` properties fold the list into
-    ``_payload_host`` with a single stacked transfer on read. Under the CSR
-    format the host-computable row_ptr framing accumulates separately in
-    ``row_ptr_bytes``.
+    each message appends one ``(stored_count, value_bytes_per_element,
+    index_bytes_per_element)`` entry to ``_pending_payload`` — the count is
+    a device scalar, the per-element widths are the format's — and the
+    ``aco`` / ``payload_bytes`` / ``wire_breakdown`` readers fold the list
+    into per-component host totals with a single stacked transfer. The
+    host-computable framing accumulates separately as plain ints: row_ptr
+    (``4 * (rows + 1)`` per CSR batch), per-row scales and block-count
+    tables (csr_q), and dense payloads (disabled channel, full-model
+    resyncs) in ``_dense_payload_host``.
     """
 
     def __init__(self, threshold="p0.2", *, use_kernel=True, enabled=True,
                  wire_format="csr", capacity=None, cap_factor=CAP_FACTOR,
-                 residual_frac=RESIDUAL_FRAC):
+                 residual_frac=RESIDUAL_FRAC, q_dtype="int8"):
         if wire_format not in WIRE_FORMATS:
             raise ValueError(f"wire_format must be one of {WIRE_FORMATS}, "
                              f"got {wire_format!r}")
+        if q_dtype not in Q_DTYPES:
+            raise ValueError(f"q_dtype must be one of {Q_DTYPES}, "
+                             f"got {q_dtype!r}")
         self.threshold = threshold
         self.use_kernel = use_kernel
         self.enabled = enabled
@@ -189,13 +214,45 @@ class SparseComm:
         self.capacity = capacity
         self.cap_factor = cap_factor
         self.residual_frac = residual_frac
-        self._payload_host = 0.0        # materialized payload bytes
-        self._pending_payload = []      # device scalars, bytes per message/batch
+        self.q_dtype = q_dtype
+        self._values_host = 0.0         # materialized per-component bytes
+        self._indices_host = 0.0
+        self._dense_payload_host = 0.0  # dense payloads (disabled / resync)
+        self._pending_payload = []      # (count_dev, val_bytes, idx_bytes)
         self._batch_cores = {}          # residual? -> jitted encode pipeline
         self._csr_cores = {}            # residual? -> jitted CSR pipeline
         self.dense_bytes = 0
         self.row_ptr_bytes = 0
+        self.scales_bytes = 0           # csr_q per-row scale framing
+        self.block_table_bytes = 0      # csr_q per-row block-count framing
         self.messages = 0
+
+    @property
+    def _payload_host(self):
+        """Materialized variable-size payload bytes (back-compat view of
+        the per-component ledger; excludes host-tracked framing, exactly as
+        before the split)."""
+        return self._values_host + self._indices_host + \
+            self._dense_payload_host
+
+    def elem_bytes(self):
+        """(value_bytes, index_bytes) per stored element on this channel's
+        wire format: f32+int32 for ``csr``/``dense_masked``, int8+int16
+        offset for ``csr_q`` (fp16 fallback: 2+2)."""
+        if self.wire_format == "csr_q":
+            return (2, 2) if self.q_dtype == "fp16" else (1, 2)
+        return (4, 4)
+
+    def row_overhead_bytes(self, n):
+        """Host-computable per-row framing beyond the shared row_ptr:
+        (scale_bytes, block_table_bytes) for one n-param csr_q row — the
+        f32 absmax scale (omitted in fp16 mode, where scales are the
+        constant 1) and the int16 per-block count table. Zero under f32
+        CSR, whose indices are self-describing absolute columns."""
+        if self.wire_format != "csr_q":
+            return 0, 0
+        scale = 0 if self.q_dtype == "fp16" else 4
+        return scale, 2 * max((n + 511) // 512, 1)
 
     # -- threshold ---------------------------------------------------------
     def _quantile_frac(self):
@@ -247,23 +304,41 @@ class SparseComm:
             return kops.csr_compact(delta, thr, cap)
         return kref.csr_compact2d_ref(delta, thr, cap)
 
+    def _quantize(self, vals, idx, stored, n):
+        """Packed f32 payload -> the csr_q quadruple
+        (qvals, offsets, block_counts, scales)."""
+        if self.use_kernel:
+            return kops.csr_quantize(vals, idx, stored, n,
+                                     q_dtype=self.q_dtype)
+        qvals, scales = kref.csr_quantize2d_ref(vals, stored,
+                                                q_dtype=self.q_dtype)
+        offs, counts = kref.csr_pack_indices_ref(idx, stored, n)
+        return qvals, offs, counts, scales
+
     def csr_core(self, with_residual=False):
-        """Jitted CSR encode pipeline on (K, n) flat stacks, built once per
-        (instance, residual?). Per-row ops only, so calling it inside a
-        ``shard_map`` over the client axis matches the unsharded result.
+        """Jitted CSR-family encode pipeline on (K, n) flat stacks, built
+        once per (instance, residual?). Per-row ops only, so calling it
+        inside a ``shard_map`` over the client axis matches the unsharded
+        result.
 
-        Without residual: (new, base) -> (values, indices, stored, decoded)
-        where ``stored = min(nnz, cap)`` is the on-wire count and
-        ``decoded`` is the server-side scatter-add reconstruction (equal to
-        the masked-dense delta whenever nothing overflowed the capacity).
+        Without residual: (new, base) -> (payload, stored, decoded) where
+        ``payload`` is the wire tuple — ``(values, indices)`` under f32
+        ``csr``, ``(qvals, offsets, block_counts, scales)`` under
+        ``csr_q`` — ``stored = min(nnz, cap)`` is the on-wire count and
+        ``decoded`` is the server-side reconstruction of the payload
+        (under ``csr_q`` the DEQUANTIZED decode: what the server actually
+        recovers, rounding loss included).
 
-        With residual: (new, base, residual) ->
-        (values, indices, stored, decoded, (rvalues, rindices, rstored),
-        residual_dense) — the new residual is ``delta + residual - decoded``
-        (sub-threshold mass AND capacity overflow spill back), truncated to
-        the residual store's capacity; ``residual_dense`` is its dense
-        expansion for engines that keep dense per-client rows. The caller
-        owns accounting (``account_batch_csr`` with the stored counts).
+        With residual: (new, base, residual) -> (payload, stored, decoded,
+        (rvalues, rindices, rstored), residual_dense) — the new residual is
+        ``delta + residual - decoded`` (sub-threshold mass, capacity
+        overflow, AND — under csr_q — quantization rounding error all spill
+        back), truncated to the residual store's capacity;
+        ``residual_dense`` is its dense expansion for engines that keep
+        dense per-client rows. The residual store is local client state and
+        never crosses the wire, so it stays f32 CSR under every format.
+        The caller owns accounting (``account_batch_csr`` with the stored
+        counts).
         """
         key = bool(with_residual)
         core = self._csr_cores.get(key)
@@ -272,89 +347,119 @@ class SparseComm:
         compact, row_thr = self._compact, self._row_thresholds
         pay_cap, res_cap = self.payload_capacity, self.residual_capacity
         residual_frac = self.residual_frac
+        quantized, q_dtype = self.wire_format == "csr_q", self.q_dtype
+        quantize = self._quantize
         # dense reconstructions use the scatter-free capped-mask twin of the
         # compact->decode round-trip (identical output; XLA:CPU scatters are
         # serial, and on paths that only read the stored counts the
-        # compaction sort dead-code-eliminates entirely)
+        # compaction sort dead-code-eliminates entirely). Under csr_q the
+        # twin extends through quantization: the absmax over the packed
+        # prefix equals the absmax over the capped-mask rows, so the
+        # elementwise quantize->dequantize round-trip of the dense rows is
+        # bit-identical to scattering the dequantized payload.
         capped = kref.csr_capped_mask_ref
+
+        def encode_payload(delta, n):
+            thr = row_thr(delta)
+            vals, idx, _ = compact(delta, thr, pay_cap(n))
+            dense, stored = capped(delta, thr, pay_cap(n))
+            if not quantized:
+                return (vals, idx), stored, dense
+            qvals, offs, counts, scales = quantize(vals, idx, stored, n)
+            decoded = kref.quantize_dense_ref(dense, scales, q_dtype=q_dtype)
+            return (qvals, offs, counts, scales), stored, decoded
 
         if with_residual:
             @jax.jit
             def core(new_flat, base_flat, residual_flat):
                 n = new_flat.shape[1]
                 delta = new_flat - base_flat + residual_flat
-                thr = row_thr(delta)
-                vals, idx, _ = compact(delta, thr, pay_cap(n))
-                decoded, stored = capped(delta, thr, pay_cap(n))
-                res = delta - decoded            # sub-threshold + overflow
+                payload, stored, decoded = encode_payload(delta, n)
+                res = delta - decoded   # sub-threshold + overflow (+ csr_q
+                                        # quantization error: EF absorption)
                 r_thr = local_quantile_thresholds(res, residual_frac)
                 rvals, ridx, _ = compact(res, r_thr, res_cap(n))
                 res_dense, rstored = capped(res, r_thr, res_cap(n))
-                return (vals, idx, stored, decoded,
+                return (payload, stored, decoded,
                         (rvals, ridx, rstored), res_dense)
         else:
             @jax.jit
             def core(new_flat, base_flat):
                 n = new_flat.shape[1]
                 delta = new_flat - base_flat
-                thr = row_thr(delta)
-                vals, idx, _ = compact(delta, thr, pay_cap(n))
-                decoded, stored = capped(delta, thr, pay_cap(n))
-                return vals, idx, stored, decoded
+                return encode_payload(delta, n)
 
         self._csr_cores[key] = core
         return core
 
     def account_batch_csr(self, stored_nnz, params_per_message, n_messages):
-        """Record an n_messages-row CSR batch whose on-device stored counts
-        are ``stored_nnz``: value + index per stored element, one shared
-        row_ptr per batch. No host sync."""
+        """Record an n_messages-row CSR-family batch whose on-device stored
+        counts are ``stored_nnz``: one value + one index per stored element
+        at this format's widths, one shared row_ptr per batch, plus — under
+        csr_q — the per-row scale and block-count framing. No host sync."""
         if not self.enabled:
             self.account_batch(stored_nnz, params_per_message, n_messages)
             return
-        self._pending_payload.append(jnp.sum(stored_nnz) * 8)
+        vb, ib = self.elem_bytes()
+        self._pending_payload.append((jnp.sum(stored_nnz), vb, ib))
         self.row_ptr_bytes += 4 * (n_messages + 1)
+        sb, bb = self.row_overhead_bytes(params_per_message)
+        self.scales_bytes += sb * n_messages
+        self.block_table_bytes += bb * n_messages
         self.dense_bytes += params_per_message * n_messages * 4
         self.messages += n_messages
 
-    def account_payload(self, payload_bytes_dev, params_per_message,
+    def account_payload(self, stored_total_dev, params_per_message,
                         n_messages, *, row_ptr_rows=0):
-        """Record ``n_messages`` messages whose total payload bytes were
-        already computed on device (one scalar). Used by the versioned base
-        store's broadcast accounting, which folds its chain-suffix byte sum
-        into a single jitted reduction instead of handing nnz vectors back
-        for re-summing (every eager op on the replicated stage outputs
-        costs a multi-device dispatch). ``row_ptr_rows`` adds the CSR
-        framing (4 * (rows + 1)) when the payloads are CSR rows. No host
-        sync."""
-        self._pending_payload.append(payload_bytes_dev)
+        """Record ``n_messages`` CSR-family messages whose total STORED
+        ELEMENT COUNT was already reduced on device (one scalar). Used by
+        the versioned base store's broadcast accounting, which folds its
+        chain-suffix count sum into a single jitted reduction instead of
+        handing nnz vectors back for re-summing (every eager op on the
+        replicated stage outputs costs a multi-device dispatch). The
+        element count is converted to component bytes at this channel's
+        per-element widths; ``row_ptr_rows`` adds the CSR framing —
+        ``4 * (rows + 1)`` row_ptr plus the csr_q per-row scale/block-table
+        overhead. No host sync."""
+        vb, ib = self.elem_bytes()
+        self._pending_payload.append((stored_total_dev, vb, ib))
         if row_ptr_rows:
             self.row_ptr_bytes += 4 * (row_ptr_rows + 1)
+            sb, bb = self.row_overhead_bytes(params_per_message)
+            self.scales_bytes += sb * row_ptr_rows
+            self.block_table_bytes += bb * row_ptr_rows
+        self.dense_bytes += params_per_message * n_messages * 4
+        self.messages += n_messages
+
+    def account_dense_payload(self, total_bytes, params_per_message,
+                              n_messages):
+        """Record ``n_messages`` plain dense messages (full-model resync
+        unicasts): host-computable, booked straight into the dense payload
+        component."""
+        self._dense_payload_host += float(total_bytes)
         self.dense_bytes += params_per_message * n_messages * 4
         self.messages += n_messages
 
     def wire_breakdown(self):
         """Cumulative bytes-on-wire by component. Materializes pending
-        device scalars (one transfer). Under the CSR format every stored
-        element is exactly one fp32 value + one int32 index, so the payload
-        splits evenly between ``values_bytes`` and ``indices_bytes`` plus
-        the host-tracked ``row_ptr_bytes`` framing. With sparsification
-        disabled messages are plain dense vectors — no values/indices
-        structure exists, so the whole payload is reported as
-        ``dense_payload_bytes`` instead of being mislabelled as CSR
-        components."""
+        device scalars (one transfer). Every pending entry carries its
+        format's per-element widths, so the split is truthful under every
+        format: f32 CSR stores one fp32 value + one int32 index per element
+        (even split), csr_q stores int8 + int16 (values a third of
+        indices-plus-table), and messages on a disabled channel are plain
+        dense vectors reported as ``dense_payload_bytes`` instead of being
+        mislabelled as CSR components. The csr_q per-row block-count tables
+        are index-decoding side information and report under
+        ``indices_bytes``; the per-row absmax scales get their own
+        ``scales_bytes`` component. Components always sum to
+        ``payload_bytes``."""
         self._materialize()
-        if not self.enabled:
-            return {"values_bytes": 0.0,
-                    "indices_bytes": 0.0,
-                    "row_ptr_bytes": 0.0,
-                    "dense_payload_bytes": self._payload_host,
-                    "payload_bytes": self._payload_host + self.row_ptr_bytes}
-        return {"values_bytes": self._payload_host / 2,
-                "indices_bytes": self._payload_host / 2,
+        return {"values_bytes": self._values_host,
+                "indices_bytes": self._indices_host + self.block_table_bytes,
+                "scales_bytes": float(self.scales_bytes),
                 "row_ptr_bytes": float(self.row_ptr_bytes),
-                "dense_payload_bytes": 0.0,
-                "payload_bytes": self._payload_host + self.row_ptr_bytes}
+                "dense_payload_bytes": self._dense_payload_host,
+                "payload_bytes": self.payload_bytes}
 
     def deliver(self, stats):
         """Book a payload's bytes-on-wire at DELIVERY time.
@@ -370,13 +475,29 @@ class SparseComm:
         """
         K, n = stats["rows"], stats["total"]
         if not self.enabled:
-            self._payload_host += K * n * 4
+            self._dense_payload_host += K * n * 4
             self.dense_bytes += K * n * 4
             self.messages += K
-        elif "values" in stats:                       # CSR wire format
+        elif "values" in stats:               # CSR family (csr / csr_q)
             self.account_batch_csr(stats["nnz"], n, K)
         else:                                         # dense_masked
             self._account(jnp.sum(stats["nnz"]), n * K, K)
+
+    def _csr_stats(self, payload, stored, n, *, rows):
+        """Delivery stats for a CSR-family payload tuple. ``rows=None``
+        marks a 1-row stack from the single-message path (entries are
+        unstacked before packing the dict). The f32 ``csr`` contract —
+        ``values``/``indices`` carry the payload arrays — is unchanged;
+        ``csr_q`` reuses those keys for the quantized values / int16
+        offsets and adds ``blocks``/``scales``."""
+        if rows is None:
+            payload = tuple(p[0] for p in payload)
+            stored, rows = stored[0], 1
+        stats = {"nnz": stored, "total": n, "rows": rows,
+                 "values": payload[0], "indices": payload[1]}
+        if self.wire_format == "csr_q":
+            stats["blocks"], stats["scales"] = payload[2], payload[3]
+        return stats
 
     # -- single-message path (reference implementation) --------------------
     def encode(self, new_params, base_params, residual=None, *,
@@ -410,19 +531,18 @@ class SparseComm:
             out = (delta, stats)
             return out + (jax.tree.map(jnp.zeros_like, delta),) \
                 if residual is not None else out
-        if self.wire_format == "csr":
+        if self.wire_format in CSR_FORMATS:
             # the flat delta (incl. residual) goes through the shared CSR
             # core as a 1-row stack — identical math to the batched path
             zero = jnp.zeros_like(flat)[None]
             if residual is not None:
-                vals, idx, stored, decoded, _, res_dense = self.csr_core(
+                payload, stored, decoded, _, res_dense = self.csr_core(
                     True)(flat[None], zero, zero)
             else:
-                vals, idx, stored, decoded = self.csr_core(False)(
+                payload, stored, decoded = self.csr_core(False)(
                     flat[None], zero)
             sparse_tree = unflatten_like(decoded[0], delta)
-            stats = {"nnz": stored[0], "total": n, "rows": 1,
-                     "values": vals[0], "indices": idx[0]}
+            stats = self._csr_stats(payload, stored, n, rows=None)
             if deliver:
                 self.deliver(stats)
             if residual is not None:
@@ -516,15 +636,14 @@ class SparseComm:
             out = (delta, stats)
             return out + (jnp.zeros_like(delta),) \
                 if residual_flat is not None else out
-        if self.wire_format == "csr":
+        if self.wire_format in CSR_FORMATS:
             if residual_flat is not None:
-                vals, idx, stored, decoded, _, res_dense = self.csr_core(
+                payload, stored, decoded, _, res_dense = self.csr_core(
                     True)(new_flat, base_flat, residual_flat)
             else:
-                vals, idx, stored, decoded = self.csr_core(False)(
+                payload, stored, decoded = self.csr_core(False)(
                     new_flat, base_flat)
-            stats = {"nnz": stored, "total": n, "rows": K, "values": vals,
-                     "indices": idx}
+            stats = self._csr_stats(payload, stored, n, rows=K)
             if deliver:
                 self.deliver(stats)
             if residual_flat is not None:
@@ -563,7 +682,7 @@ class SparseComm:
         combined on-device nnz vector is ``nnz`` (ignored when sparsification
         is disabled — then every message is dense). No host sync."""
         if not self.enabled:
-            self._payload_host += n_messages * params_per_message * 4
+            self._dense_payload_host += n_messages * params_per_message * 4
             self.dense_bytes += n_messages * params_per_message * 4
             self.messages += n_messages
             return
@@ -572,20 +691,26 @@ class SparseComm:
 
     # -- deferred accounting -----------------------------------------------
     def _account(self, nnz_dev, total_params, n_messages):
-        self._pending_payload.append(nnz_dev * 8)  # fp32 value + int32 index
+        # dense_masked: fp32 value + int32 index per survivor
+        self._pending_payload.append((nnz_dev, 4, 4))
         self.dense_bytes += total_params * 4
         self.messages += n_messages
 
     def _materialize(self):
         if self._pending_payload:
-            self._payload_host += float(np.asarray(
-                jnp.stack(self._pending_payload), np.float64).sum())
+            counts = np.asarray(jnp.stack(
+                [c for c, _, _ in self._pending_payload]), np.float64)
+            for cnt, (_, vb, ib) in zip(counts, self._pending_payload):
+                self._values_host += float(cnt) * vb
+                self._indices_host += float(cnt) * ib
             self._pending_payload = []
 
     @property
     def payload_bytes(self) -> float:
         self._materialize()
-        return self._payload_host + self.row_ptr_bytes
+        return self._values_host + self._indices_host + \
+            self._dense_payload_host + self.row_ptr_bytes + \
+            self.scales_bytes + self.block_table_bytes
 
     @property
     def aco(self) -> float:

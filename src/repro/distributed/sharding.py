@@ -147,6 +147,21 @@ REPLICATED_SPEC = P()
 # packs/decodes only its local client rows, so compaction adds no collective
 CLIENT_PAYLOAD_SPECS = (CLIENT_STACK_SPEC, CLIENT_STACK_SPEC,
                         CLIENT_VEC_SPEC)
+
+
+def payload_specs(wire_format):
+    """PartitionSpec tuple for one wire payload (stored counts excluded):
+    every component is per-client rows, so each device quantizes/packs and
+    decodes only its local shard — neither CSR format adds a collective.
+
+    ``"csr"``  -> ((K, cap) values, (K, cap) column indices)
+    ``"csr_q"`` -> ((K, cap) int8 qvalues, (K, cap) int16 offsets,
+                    (K, nblk) int16 block counts, (K,) f32 scales)
+    """
+    if wire_format == "csr_q":
+        return (CLIENT_STACK_SPEC, CLIENT_STACK_SPEC, CLIENT_STACK_SPEC,
+                CLIENT_VEC_SPEC)
+    return (CLIENT_STACK_SPEC, CLIENT_STACK_SPEC)
 # versioned base store (staleness-windowed delta chain): the (tau+2, N)
 # reconstruction ring is tiny and REPLICATED on every device, while the
 # per-client ring-slot index vector shards like any other per-client scalar

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.csr_compact import csr_compact2d_pallas
+from repro.kernels.csr_quant import csr_quantize2d_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.masked_pseudo_ce import masked_pseudo_ce_pallas
 from repro.kernels.ref import csr_decode_ref
@@ -89,6 +90,16 @@ def csr_compact(x, thresholds, cap):
     (K,) int32) in one grid launch (per-block counts -> exclusive scan ->
     in-kernel scatter). Per-row op, so shard-safe under the client mesh."""
     return csr_compact2d_pallas(x, thresholds, cap, interpret=_interpret())
+
+
+def csr_quantize(values, indices, stored, n, *, q_dtype="int8"):
+    """Quantize + index-pack a compacted CSR payload (``csr_q`` format):
+    (values (K, cap) f32, indices (K, cap) int32, stored (K,) int32) ->
+    (qvals (K, cap) int8|f16, offsets (K, cap) int16,
+    block_counts (K, ceil(n/512)) int16, scales (K,) f32). Per-row op,
+    shard-safe under the client mesh."""
+    return csr_quantize2d_pallas(values, indices, stored, n,
+                                 q_dtype=q_dtype, interpret=_interpret())
 
 
 def csr_decode(values, indices, n):

@@ -132,6 +132,97 @@ def csr_decode_ref(values, indices, n):
         values.astype(jnp.float32))
 
 
+def csr_quantize2d_ref(values, stored, *, q_dtype="int8"):
+    """Per-row absmax quantization of packed CSR values (``csr_q`` format).
+
+    values: (K, cap) packed f32 payload values; stored: (K,) int32 valid
+    prefix lengths. Returns (qvals (K, cap), scales (K,) f32):
+
+    * ``q_dtype="int8"``: ``scale = absmax / 127`` over the stored prefix
+      (padding slots are already zero and cannot raise the absmax);
+      ``q = clip(round(v / scale), -127, 127)``. An all-zero row gets
+      scale 0 and an all-zero payload.
+    * ``q_dtype="fp16"`` (fallback for deltas whose dynamic range int8
+      cannot hold): values cast to float16, scales all-ones so the
+      dequantize path ``q * scale`` is format-agnostic.
+
+    Dequantization is intentionally lossy; the comm layer folds
+    ``delta - dequant(decode(payload))`` into the error-feedback residual,
+    so the loss is re-sent later rather than forgotten.
+    """
+    K, cap = values.shape
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < \
+        jnp.asarray(stored, jnp.int32)[:, None]
+    v = jnp.where(valid, values.astype(jnp.float32), 0.0)
+    if q_dtype == "fp16":
+        return v.astype(jnp.float16), jnp.ones((K,), jnp.float32)
+    absmax = jnp.max(jnp.abs(v), axis=1)
+    scale = absmax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(v * inv[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def csr_dequantize_ref(qvals, scales):
+    """(K, cap) quantized payload values -> f32. fp16 payloads carry
+    all-one scales, so one expression serves both value dtypes."""
+    return qvals.astype(jnp.float32) * \
+        jnp.asarray(scales, jnp.float32)[:, None]
+
+
+def quantize_dense_ref(dense, scales, *, q_dtype="int8"):
+    """Elementwise quantize->dequantize round-trip of a dense (K, n) row
+    stack under the given per-row scales — the scatter-free twin of
+    ``csr_decode_ref(csr_dequantize_ref(...))`` when ``dense`` is the
+    capped-mask decode and ``scales`` came from the packed payload (the
+    absmax over the stored prefix equals the absmax over the dense decode,
+    and both paths round the identical quotients)."""
+    if q_dtype == "fp16":
+        return dense.astype(jnp.float16).astype(jnp.float32)
+    s = jnp.asarray(scales, jnp.float32)[:, None]
+    inv = jnp.where(s > 0, 1.0 / jnp.where(s > 0, s, 1.0), 0.0)
+    q = jnp.clip(jnp.round(dense.astype(jnp.float32) * inv), -127, 127)
+    return q * s
+
+
+def csr_pack_indices_ref(indices, stored, n):
+    """Pack (K, cap) absolute int32 CSR columns as per-block int16 offsets.
+
+    Columns are ascending within each stored prefix (csr_compact contract),
+    so elements of one 512-block are contiguous and a per-row block-count
+    table recovers which block each slot belongs to. Returns
+    (offsets (K, cap) int16 = col % 512 with padding zeroed,
+    block_counts (K, nblk) int16 with nblk = ceil(n/512)).
+    """
+    blk = 512
+    K, cap = indices.shape
+    nblk = max((n + blk - 1) // blk, 1)
+    valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < \
+        jnp.asarray(stored, jnp.int32)[:, None]
+    offs = jnp.where(valid, indices % blk, 0).astype(jnp.int16)
+    blk_id = jnp.where(valid, indices // blk, nblk)   # pad -> out of range
+    counts = (blk_id[:, :, None] ==
+              jnp.arange(nblk, dtype=jnp.int32)[None, None, :]).sum(axis=1)
+    return offs, counts.astype(jnp.int16)
+
+
+def csr_unpack_indices_ref(offsets, block_counts):
+    """Reconstruct absolute int32 columns from the packed ``csr_q`` index
+    encoding: slot s lives in the first block whose cumulative count
+    exceeds s (vmapped binary search, same idiom as csr_compact2d_ref).
+    Padding slots resolve past the last block; they are clamped into range
+    (their values are zero, so the scatter-add they feed adds nothing).
+    """
+    K, cap = offsets.shape
+    nblk = block_counts.shape[1]
+    cum = jnp.cumsum(block_counts.astype(jnp.int32), axis=1)
+    slots = jnp.arange(cap, dtype=jnp.int32)
+    blk_id = jax.vmap(
+        lambda c: jnp.searchsorted(c, slots, side="right"))(cum)
+    blk_id = jnp.minimum(blk_id, nblk - 1)
+    return blk_id.astype(jnp.int32) * 512 + offsets.astype(jnp.int32)
+
+
 def csr_row_ptr_ref(nnz_stored):
     """(K,) stored per-row counts -> the (K+1,) CSR row pointer."""
     nnz_stored = jnp.asarray(nnz_stored, jnp.int32)

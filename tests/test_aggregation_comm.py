@@ -129,6 +129,8 @@ def test_deliver_books_at_delivery_not_encode(rng):
     and stats that are never delivered (a lost upload) never inflate
     bytes-on-wire."""
     for kwargs in ({"wire_format": "csr"},
+                   {"wire_format": "csr_q"},
+                   {"wire_format": "csr_q", "q_dtype": "fp16"},
                    {"wire_format": "dense_masked"},
                    {"wire_format": "csr", "enabled": False}):
         inline = SparseComm("p0.2", use_kernel=False, **kwargs)
@@ -186,6 +188,68 @@ def test_wire_breakdown_disabled_reports_dense_component(rng):
     assert wb2["values_bytes"] == wb2["indices_bytes"] > 0
 
 
+def test_wire_breakdown_components_sum_under_every_format(rng):
+    """The per-component ledger must be truthful, not a hardcoded split:
+    under every wire format the components sum exactly to payload_bytes,
+    and each format's structural facts hold (f32 CSR: even values/indices
+    split; csr_q int8: values are a third of index bytes and the per-row
+    scales appear; fp16: scales are identity and never shipped)."""
+    new = jax.random.normal(rng, (6, 3000))
+    base = jnp.zeros_like(new)
+
+    def breakdown(**kwargs):
+        comm = SparseComm("p0.2", use_kernel=False, **kwargs)
+        comm.encode_batch(new, base)
+        wb = comm.wire_breakdown()
+        comps = (wb["values_bytes"] + wb["indices_bytes"]
+                 + wb["scales_bytes"] + wb["row_ptr_bytes"]
+                 + wb["dense_payload_bytes"])
+        assert abs(comps - wb["payload_bytes"]) < 1e-6, kwargs
+        assert wb["payload_bytes"] == comm.payload_bytes
+        return comm, wb
+
+    _, wb = breakdown(wire_format="csr")
+    assert wb["values_bytes"] == wb["indices_bytes"] > 0
+    assert wb["scales_bytes"] == 0.0
+
+    comm_q, wb_q = breakdown(wire_format="csr_q")
+    stored = float(wb_q["values_bytes"])          # int8: 1 byte/elem
+    nblk = -(-3000 // 512)
+    assert wb_q["scales_bytes"] == 4 * 6          # one f32 absmax per row
+    # int16 offsets (2 bytes/elem) + the per-row int16 block-count table
+    assert wb_q["indices_bytes"] == 2 * stored + 2 * nblk * 6
+    assert wb_q["payload_bytes"] < 0.45 * wb["payload_bytes"]
+
+    _, wb_h = breakdown(wire_format="csr_q", q_dtype="fp16")
+    assert wb_h["scales_bytes"] == 0.0            # identity, never shipped
+    assert wb_h["values_bytes"] == wb_h["indices_bytes"] - 2 * nblk * 6
+
+    _, wb_d = breakdown(wire_format="dense_masked")
+    assert wb_d["values_bytes"] == wb_d["indices_bytes"] > 0
+
+    _, wb_off = breakdown(wire_format="csr", enabled=False)
+    assert wb_off["dense_payload_bytes"] == wb_off["payload_bytes"] > 0
+
+
+def test_csr_q_reported_bytes_equal_actual_payload(rng):
+    """csr_q acceptance contract: reported bytes-on-wire == the byte size
+    of the quantized arrays the encode actually produced (int8 values +
+    int16 offsets per stored element, int16 block table + f32 scale per
+    row, shared row_ptr)."""
+    comm = SparseComm("p0.2", use_kernel=False, wire_format="csr_q")
+    new = jax.random.normal(rng, (5, 3000))
+    _, stats = comm.encode_batch(new, jnp.zeros_like(new))
+    assert stats["values"].dtype == jnp.int8
+    assert stats["indices"].dtype == jnp.int16
+    assert stats["blocks"].dtype == jnp.int16
+    stored = int(np.asarray(stats["nnz"]).sum())
+    nblk = -(-3000 // 512)
+    actual = (stored * (1 + 2)              # int8 value + int16 offset
+              + 5 * (4 + 2 * nblk)          # per-row scale + block table
+              + 4 * (5 + 1))                # shared row_ptr
+    assert comm.payload_bytes == actual
+
+
 def test_csr_weighted_scatter_matches_dense_decode(rng):
     from repro.kernels import ref as R
     x = jax.random.normal(rng, (4, 700))
@@ -222,6 +286,39 @@ def test_blend_flat_csr_matches_dense_blend(rng):
     out_k = aggregation.blend_flat_csr(server, base, vals, idx, w, fw,
                                        use_kernel=True)
     np.testing.assert_allclose(np.asarray(out_k), expect, rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_blend_flat_csr_q_matches_dequantized_dense_blend(rng):
+    """The dequantizing scatter-add aggregation == blending the
+    dequantized decoded uploads through the dense path: the fused
+    (w * scale) fold introduces no extra error beyond float tolerance."""
+    from repro.core import aggregation
+    from repro.kernels import ref as R
+    K, N = 5, 1200
+    base = jax.random.normal(rng, (K, N))
+    delta = jax.random.normal(jax.random.fold_in(rng, 1), (K, N))
+    server = jax.random.normal(jax.random.fold_in(rng, 2), (N,))
+    thr = jnp.full((K,), 0.8, jnp.float32)
+    vals, idx, _ = R.csr_compact2d_ref(delta, thr, N)
+    _, stored = R.csr_capped_mask_ref(delta, thr, N)
+    qvals, scales = R.csr_quantize2d_ref(vals, stored)
+    qoffs, qcnt = R.csr_pack_indices_ref(idx, stored, N)
+    w = jax.random.uniform(jax.random.fold_in(rng, 3), (K,))
+    fw = jnp.float32(0.3)
+    out = aggregation.blend_flat_csr_q(server, base, qvals, qoffs, qcnt,
+                                       scales, w, fw)
+    deq = np.asarray(R.csr_dequantize_ref(qvals, scales))
+    abs_idx = np.asarray(R.csr_unpack_indices_ref(qoffs, qcnt))
+    decoded = np.zeros((K, N))
+    st_np = np.asarray(stored)
+    for k in range(K):
+        for s in range(st_np[k]):
+            decoded[k, abs_idx[k, s]] += deq[k, s]
+    uploaded = np.asarray(base) + decoded
+    expect = 0.3 * np.asarray(server) + 0.7 * np.einsum(
+        "k,kn->n", np.asarray(w), uploaded)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=2e-5,
                                atol=2e-5)
 
 

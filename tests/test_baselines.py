@@ -1,0 +1,98 @@
+"""Baseline trainers (§V-F1): per-epoch RNG derivation, the FedAsync
+staleness guard's forced-sync path (and its truthful wire accounting), and
+the empty-ledger ACO convention shared with SparseComm."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedS3AConfig
+from repro.core.baselines import FedAsyncSSL, FedAvgSSL
+from repro.core.metrics import weighted_metrics
+from repro.core.sparse_comm import SparseComm
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("basic", scale=0.0015, seed=0)
+
+
+def _model_floats(tr):
+    return sum(l.size for l in jax.tree.leaves(tr.global_params))
+
+
+def test_each_epoch_gets_its_own_key(data):
+    """epochs > 1 must fold the epoch index into the client key — one key
+    replayed across epochs repeats the same batch shuffle and dropout mask
+    every epoch (the bug FedS3A's engines fixed; this pins the baselines'
+    shared `_train_client` to the same derivation)."""
+    tr = FedAvgSSL(data, FedS3AConfig(rounds=1, seed=0, epochs=3))
+    seen = []
+    inner = tr.client_epoch
+
+    def spy(params, opt, x, lr, key):
+        seen.append(np.asarray(key))
+        return inner(params, opt, x, lr, key)
+
+    tr.client_epoch = spy
+    tr._train_client(0, tr.global_params, tr.cfg.lr)
+    assert len(seen) == 3
+    # epoch 0 keeps the raw split (single-epoch runs bit-identical to the
+    # old behaviour); later epochs derive fold_in(key, e) — all distinct
+    assert np.array_equal(seen[1], np.asarray(
+        jax.random.fold_in(seen[0], 1)))
+    assert np.array_equal(seen[2], np.asarray(
+        jax.random.fold_in(seen[0], 2)))
+    keys = {tuple(k.tolist()) for k in seen}
+    assert len(keys) == 3
+
+
+def test_fedasync_straggler_forced_sync_accounting(data):
+    """A straggler whose staleness exceeds max_stale is force-synced: it
+    gets the fresh model (ONE downlink message on the wire), is requeued,
+    and the event does NOT consume a round or advance the global version.
+    The old path trained it anyway, silently dropped the upload, yet booked
+    a full round-trip and burned the round."""
+    rounds = 12
+    tr = FedAsyncSSL(data, FedS3AConfig(rounds=rounds, seed=0), max_stale=2)
+    # two-speed fleet: client 0 laps the fleet (one arrival per tick) so
+    # by the stragglers' first arrival at t=5 the global version is
+    # already 4 versions ahead — past max_stale=2
+    tr.latencies = [1.0] + [5.0] * (tr.M - 1)
+    res = tr.train()
+    assert tr.forced_syncs > 0
+    assert res["forced_syncs"] == tr.forced_syncs
+    assert res["rounds"] == rounds
+    # every aggregated arrival books an up+down round-trip; every forced
+    # sync books exactly the one model that crossed the wire
+    n = _model_floats(tr)
+    assert tr.comm_bytes == (2 * rounds + tr.forced_syncs) * n * 4
+
+
+def test_fedasync_no_stale_upload_is_aggregated(data):
+    """With the guard at the arrival point, every blended upload has
+    staleness <= max_stale by construction: a max_stale=0 run still
+    completes its rounds (stragglers resync instead of wedging or being
+    silently dropped)."""
+    tr = FedAsyncSSL(data, FedS3AConfig(rounds=4, seed=0), max_stale=0)
+    tr.latencies = [1.0] + [2.5] * (tr.M - 1)
+    res = tr.train()
+    assert res["rounds"] == 4
+    assert tr.forced_syncs > 0
+
+
+def test_empty_ledger_aco_matches_sparse_comm(data):
+    """Before anything crosses the wire both ledgers must agree: ACO 0.0
+    (the `_Base` property used to read 1.0 while SparseComm read 0.0,
+    so 'no traffic yet' flipped meaning between trainers)."""
+    tr = FedAvgSSL(data, FedS3AConfig(rounds=1, seed=0))
+    comm = SparseComm(threshold=0.005)
+    assert tr.aco == comm.aco == 0.0
+
+
+def test_weighted_metrics_keys_unchanged():
+    y = np.array([0, 1, 2, 2, 1, 0])
+    p = np.array([0, 1, 1, 2, 1, 0])
+    m = weighted_metrics(y, p, 3)
+    assert set(m) == {"accuracy", "precision", "recall", "f1", "fpr"}
+    assert m["accuracy"] == pytest.approx(5 / 6)

@@ -254,6 +254,45 @@ def test_bytes_ledger_counts_only_delivered_uploads(data):
     assert tr.comm.messages == uploads + rounds_with_targets + resyncs
 
 
+def test_lost_quantized_uploads_book_zero_bytes(data):
+    """csr_q under faults: a lost upload's quantized payload never reaches
+    the ledger. One message per DELIVERED upload (lost absent) and per
+    resync, between 1 and tau+1 chain-suffix payloads per broadcast round,
+    the ledgers of the two CSR formats structurally identical over the
+    bit-identical fault trace, the dense-equivalent ledger an exact n*4
+    multiple of the message count — and the quantized run moves well under
+    half the payload bytes of the f32 CSR twin."""
+    runs = {}
+    for wf in ("csr", "csr_q"):
+        tr = FedS3ATrainer(data, FedS3AConfig(
+            rounds=15, seed=CHAOS_SEED, engine="batched", cnn=TEST_CNN,
+            wire_format=wf, traffic=REFERENCE_CHURN, round_deadline=700.0))
+        tr.train()
+        runs[wf] = tr
+    ref, tr = runs["csr"], runs["csr_q"]
+    assert _trace(ref) == _trace(tr)     # wire format never touches faults
+    n = int(tr._global_flat.shape[0])
+    uploads = rounds_with_targets = resyncs = lost = 0
+    for l in tr.logs:
+        uploads += len(l.participants)
+        resyncs += len(l.resynced)
+        lost += len(l.lost)
+        online_parts = set(l.participants) - (set(l.departed)
+                                              - set(l.rejoined))
+        chain = set(l.rejoined) - set(l.resynced)
+        if online_parts | set(l.forced) | set(l.lost) | chain:
+            rounds_with_targets += 1
+    assert lost > 0, "profile produced no lost uploads; weak test"
+    assert tr.comm.messages == ref.comm.messages
+    floor = uploads + rounds_with_targets + resyncs
+    cap = uploads + rounds_with_targets * (tr.cfg.tau + 1) + resyncs
+    assert floor <= tr.comm.messages <= cap
+    assert tr.comm.dense_bytes == 4 * n * tr.comm.messages
+    # int8 values + int16 offsets vs f32 pairs: same stored elements
+    # (identical trace + thresholds), a fraction of the bytes
+    assert tr.comm.payload_bytes < 0.45 * ref.comm.payload_bytes
+
+
 @pytest.mark.parametrize("engine", ["sequential", "batched"])
 def test_residual_hygiene_under_faults(data, engine):
     """After every faulted round, the EF residuals of forced / lost /

@@ -46,6 +46,18 @@ MATRIX = [
     # store's engines to it exactly as before the versioned default
     ("noniid-dense-store-k6", "basic",
      dict(C=0.6, tau=2, base_store="dense")),
+    # quantized + packed wire format (csr_q): int8 values with per-row
+    # absmax scales, int16 in-block offsets + block-count tables, the
+    # dequantization error folded into the EF residual — the quantize /
+    # pack / dequantizing-scatter pipeline must agree across all three
+    # engines like every other format
+    ("noniid-wire-csrq-k6", "basic",
+     dict(C=0.6, tau=2, wire_format="csr_q", error_feedback=True)),
+    # csr_q through the Pallas kernel path (quantize + compact + fused
+    # aggregation in interpret mode) and the fp16 fallback without EF
+    ("noniid-wire-csrq-kernels-k5", "basic",
+     dict(C=0.5, tau=2, wire_format="csr_q", use_kernels=True,
+          q_dtype="fp16")),
     # epochs > 1: every epoch folds its index into the client RNG key in
     # both the sequential loop and the batched lax.scan, so the fixed
     # paths stay pinned to each other (the old shared-key replay bug hid

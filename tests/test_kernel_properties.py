@@ -199,6 +199,95 @@ def test_csr_overflow_spill_invariants(seed, k, n, cap_frac):
     np.testing.assert_array_equal(decoded + spill, masked)
 
 
+# --- csr_q quantization + index packing --------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=6),
+    nblk=st.integers(min_value=0, max_value=3),
+    off=st.sampled_from([-1, 0, 1, 17, 255, 511]),
+    cap_frac=st.floats(min_value=0.1, max_value=1.0),
+    q_dtype=st.sampled_from(["int8", "fp16"]),
+)
+def test_csr_quantize_kernel_matches_ref(seed, k, nblk, off, cap_frac,
+                                         q_dtype):
+    """Pallas quantize/pack kernel == the jnp oracle elementwise (int8 and
+    fp16), index unpack is EXACT on the stored prefixes (in-block offsets +
+    block-count table lose nothing), and scales bound the payload: every
+    int8 row's absmax quantizes to ±127 exactly."""
+    n = max(nblk * BLK + off, 1)
+    cap = max(1, int(cap_frac * n))
+    x = _delta_with_zeros(seed, k, n)
+    thrs = jnp.full((k,), 0.2, jnp.float32)
+    vals, idx, nnz = R.csr_compact2d_ref(x, thrs, cap)
+    _, stored = R.csr_capped_mask_ref(x, thrs, cap)
+    qv, qo, qc, sc = ops.csr_quantize(vals, idx, stored, n, q_dtype=q_dtype)
+    rqv, rsc = R.csr_quantize2d_ref(vals, stored, q_dtype=q_dtype)
+    rqo, rqc = R.csr_pack_indices_ref(idx, stored, n)
+    np.testing.assert_array_equal(np.asarray(qv), np.asarray(rqv))
+    np.testing.assert_array_equal(np.asarray(qo), np.asarray(rqo))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(rqc))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(rsc), rtol=1e-7)
+    # index unpack is exact wherever something is stored
+    abs_idx = np.asarray(R.csr_unpack_indices_ref(qo, qc))
+    st_h, idx_h = np.asarray(stored), np.asarray(idx)
+    for row in range(k):
+        np.testing.assert_array_equal(abs_idx[row, :st_h[row]],
+                                      idx_h[row, :st_h[row]])
+    if q_dtype == "int8":
+        qv_h, vals_h = np.asarray(qv), np.asarray(vals)
+        for row in range(k):
+            s = st_h[row]
+            if s and np.abs(vals_h[row, :s]).max() > 0:
+                assert np.abs(qv_h[row, :s]).max() == 127
+        assert np.asarray(sc).min() >= 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=5),
+    n=st.sampled_from([300, 512, 1000, 1537]),
+    cap_frac=st.floats(min_value=0.1, max_value=0.9),
+    q_dtype=st.sampled_from(["int8", "fp16"]),
+)
+def test_csr_q_roundtrip_error_lands_in_residual(seed, k, n, cap_frac,
+                                                 q_dtype):
+    """The EF contract under csr_q: dequantize(quantize(payload)) scattered
+    back + the residual (delta - decoded) reconstructs the raw delta
+    EXACTLY — sub-threshold mass, capacity overflow and quantization
+    rounding error all land in the residual, nothing is silently lost.
+    Also pins the scale-twin identity the engines rely on: quantizing the
+    capped-mask dense rows elementwise == scattering the dequantized
+    payload."""
+    cap = max(1, int(cap_frac * n))
+    x = _delta_with_zeros(seed, k, n)
+    thrs = jnp.full((k,), 0.2, jnp.float32)
+    vals, idx, _ = R.csr_compact2d_ref(x, thrs, cap)
+    dense, stored = R.csr_capped_mask_ref(x, thrs, cap)
+    qv, sc = R.csr_quantize2d_ref(vals, stored, q_dtype=q_dtype)
+    qo, qc = R.csr_pack_indices_ref(idx, stored, n)
+    # scatter the dequantized payload
+    deq = np.asarray(R.csr_dequantize_ref(qv, sc))
+    abs_idx = np.asarray(R.csr_unpack_indices_ref(qo, qc))
+    st_h = np.asarray(stored)
+    decoded = np.zeros((k, n), np.float32)
+    for row in range(k):
+        decoded[row, abs_idx[row, :st_h[row]]] = deq[row, :st_h[row]]
+    # scale-twin identity: elementwise round-trip of the dense twin is
+    # bit-identical to the scattered dequantized payload
+    twin = np.asarray(R.quantize_dense_ref(dense, sc, q_dtype=q_dtype))
+    np.testing.assert_array_equal(twin, decoded)
+    # EF closure: decoded + residual == the raw delta, bit-for-bit
+    residual = np.asarray(x) - decoded
+    np.testing.assert_array_equal(decoded + residual, np.asarray(x))
+    if q_dtype == "int8":
+        # quantization error per element is bounded by half a step
+        for row in range(k):
+            err = np.abs(decoded[row] - np.asarray(dense)[row])
+            assert err.max() <= float(sc[row]) * 0.5 + 1e-7
+
+
 def test_csr_row_ptr():
     nnz = jnp.asarray([3, 0, 5, 1], jnp.int32)
     np.testing.assert_array_equal(np.asarray(R.csr_row_ptr_ref(nnz)),
