@@ -31,7 +31,16 @@ degradation. A final ``wire_format="csr_q"`` cell per K (with EF, so the
 dequantization error is re-offered) measures the int8-quantized wire
 format against its f32 CSR twin at the same (K, D): the gate pins its
 payload at <=0.4x the twin's, rounds/sec at >=0.9x, and final accuracy
-within 1e-2.
+within 1e-2. A ``client_store="paged"`` (EF) cell per K measures the
+host-paged per-client state layout against its resident EF twin — every
+cell reports ``client_state_device_bytes`` / ``client_state_host_bytes`` /
+``client_state_resident_equiv_bytes``, and the scale gate requires paged
+device bytes strictly below the resident equivalent, rounds/sec >= 0.9x
+the resident twin at K <= 2048, and per-participant device bytes FLAT in M
+across the paged cells. The flat-in-M claim is anchored by the
+M=1,000,000 scale cell (``SCALE_CELL``): a paged round over a million
+clients (64 pooled dataset shards, 512 participants/round, one device)
+that runs in both the full and smoke sweeps.
 
   PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
   PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: K<=64,
@@ -61,9 +70,17 @@ SMOKE_DEVICES = (1, 4)
 
 
 def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
-               base_store="versioned", faults=False, wire_format="csr"):
+               base_store="versioned", faults=False, wire_format="csr",
+               client_store="resident", pool=None, participants=None,
+               warmup=None):
     """One (K, current-device-count) measurement. Import jax lazily so the
-    driver process never initializes an XLA client."""
+    driver process never initializes an XLA client.
+
+    ``client_store="paged"`` benches the host-paged per-client state layout;
+    ``pool`` / ``participants`` / ``warmup`` parameterize the million-client
+    scale cell (pooled dataset shards, absolute participation count, shorter
+    warmup — the scheduler's mass tau-forcing wave is the expensive part,
+    and one warmup round is enough to absorb compilation)."""
     import jax
 
     from repro.configs.feds3a_cnn import CNNConfig
@@ -71,19 +88,48 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     from repro.core.metrics import fleet_health
     from repro.data import make_fleet_dataset
 
-    warmup = 3                             # distinct distribution-target
+    warmup = 3 if warmup is None else warmup   # distinct distribution-target
+    # paged cells carry the 0.9x throughput gate, and a tiny fleet's round
+    # is tens of milliseconds — a fixed count would time mere milliseconds
+    # of work and the ratio would flap on scheduler noise, so scale their
+    # timed rounds to a comparable work window. Resident cells keep the
+    # short count: their absolute numbers are gated with 30%+ tolerance,
+    # and long multi-device runs needlessly multiply exposure to XLA:CPU's
+    # rare collective-rendezvous stalls on oversubscribed hosts. The scale
+    # cell passes ``participants`` and keeps its short explicit count.
+    if participants is None and client_store == "paged":
+        rounds = rounds * max(1, 1024 // num_clients)
     cnn = CNNConfig(name="feds3a-cnn-fleet", conv_filters=(8, 8), hidden=16)
-    data = make_fleet_dataset(num_clients, scale=0.0008, seed=seed)
-    tr = FedS3ATrainer(data, FedS3AConfig(
-        rounds=rounds + warmup, seed=seed, engine="sharded", cnn=cnn,
-        C=0.5, batch_size=50, error_feedback=error_feedback,
-        base_store=base_store, wire_format=wire_format,
-        # fault cell: the reference churn profile with a round deadline, so
-        # the report carries a round-efficiency number (mean_quorum_frac)
-        # the regression gate can bound
-        traffic=REFERENCE_CHURN if faults else None,
-        round_deadline=700.0 if faults else None,
-        quorum_floor=2 if faults else 1))
+    C = 0.5 if participants is None else participants / num_clients
+
+    def build(store):
+        # each trainer gets its own dataset object: identical content (same
+        # seed), no shared mutable client dicts between twin runs
+        return FedS3ATrainer(
+            make_fleet_dataset(num_clients, scale=0.0008, seed=seed,
+                               pool=pool),
+            FedS3AConfig(
+                rounds=rounds + warmup, seed=seed, engine="sharded", cnn=cnn,
+                C=C, batch_size=50, error_feedback=error_feedback,
+                base_store=base_store, wire_format=wire_format,
+                client_store=store,
+                # fault cell: the reference churn profile with a round
+                # deadline, so the report carries a round-efficiency number
+                # (mean_quorum_frac) the regression gate can bound
+                traffic=REFERENCE_CHURN if faults else None,
+                round_deadline=700.0 if faults else None,
+                quorum_floor=2 if faults else 1))
+
+    tr = build(client_store)
+    data = tr.data
+    # the paged-vs-resident throughput gate needs a ratio immune to
+    # between-process variance (CPU frequency / allocator state swing
+    # separate worker invocations by far more than the 10% budget), so the
+    # paged cell times its RESIDENT twin in the same process, interleaved
+    # block-wise below. The million-client scale cell skips the twin — its
+    # resident layout would need the very device footprint paging removes.
+    twin = build("resident") \
+        if client_store == "paged" and participants is None else None
 
     for _ in range(warmup):                # shapes retrace the first rounds
         tr.run_round()
@@ -92,11 +138,33 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     wire0 = tr.comm.wire_breakdown()
     dist0 = tr.store.dist_payload_bytes() if base_store == "versioned" else 0
 
-    t0 = time.perf_counter()
-    for _ in range(rounds):
-        tr.run_round()
-    jax.block_until_ready(tr._global_flat)
-    elapsed = time.perf_counter() - t0
+    if twin is None:
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            tr.run_round()
+        jax.block_until_ready(tr._global_flat)
+        elapsed = time.perf_counter() - t0
+        twin_elapsed = None
+    else:
+        for _ in range(warmup):
+            twin.run_round()
+        jax.block_until_ready(twin._global_flat)
+        per = max(1, rounds // 4)          # A/B/A/B interleaved blocks
+        elapsed = twin_elapsed = 0.0
+        done = 0
+        while done < rounds:
+            nb = min(per, rounds - done)
+            t0 = time.perf_counter()
+            for _ in range(nb):
+                tr.run_round()
+            jax.block_until_ready(tr._global_flat)
+            elapsed += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for _ in range(nb):
+                twin.run_round()
+            jax.block_until_ready(twin._global_flat)
+            twin_elapsed += time.perf_counter() - t0
+            done += nb
     wire1 = tr.comm.wire_breakdown()
     dist1 = tr.store.dist_payload_bytes() if base_store == "versioned" else 0
 
@@ -109,6 +177,14 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
         "base_store": base_store,
         "faults": faults,
         "wire_format": wire_format,
+        "client_store": client_store,
+        # per-client state split by residence: the paged store keeps a
+        # device window of O(K * page) bytes — flat in M — while the
+        # resident layout's device share IS the resident-equivalent
+        "client_state_device_bytes": tr.client_state_device_bytes(),
+        "client_state_host_bytes": tr.client_state_host_bytes(),
+        "client_state_resident_equiv_bytes":
+            tr.client_state_resident_equiv_bytes(),
         # fleet-health aggregates over the whole run (warmup + timed):
         # deterministic for a fixed seed, so the gate can pin them
         "degraded_rounds": fleet["degraded_rounds"],
@@ -127,6 +203,10 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
         "rounds_timed": rounds,
         "s_per_round": elapsed / rounds,
         "rounds_per_sec": rounds / elapsed,
+        # same-process interleaved resident-twin throughput (paged cells
+        # only): the denominator of the regression gate's 0.9x ratio
+        "resident_twin_rounds_per_sec":
+            (rounds / twin_elapsed) if twin_elapsed else None,
         "payload_bytes_per_round": (tr.comm.payload_bytes - payload0) / rounds,
         "dense_bytes_per_round": (tr.comm.dense_bytes - dense0) / rounds,
         # CSR component breakdown of the bytes actually put on the wire
@@ -151,33 +231,53 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
 def worker(args):
     results = [bench_cell(k, rounds=args.rounds, seed=args.seed,
                           error_feedback=args.ef, base_store=args.base_store,
-                          faults=args.faults, wire_format=args.wire_format)
+                          faults=args.faults, wire_format=args.wire_format,
+                          client_store=args.client_store, pool=args.pool,
+                          participants=args.participants, warmup=args.warmup)
                for k in args.clients]
     with open(args.out, "w") as f:
         json.dump(results, f)
 
 
+# the million-client scale cell: paged client store over a 64-shard pooled
+# dataset, 512 participants per round, one device — the headline run whose
+# device-resident client-state bytes the scale gate pins flat in M. One
+# warmup round (compilation); the per-round cost at this M is dominated by
+# the scheduler's mass tau-forcing wave, which the timed rounds include.
+SCALE_CELL = {"clients": 1_000_000, "devices": 1, "pool": 64,
+              "participants": 512, "rounds": 3, "warmup": 1}
+
+
 def _cells(args):
-    """(devices, clients, error_feedback, base_store, faults, wire_format)
-    cells: the plain sweep (versioned store, f32 CSR, the defaults) plus —
-    at the highest device count — one EF cell per K (the residual-store
-    story), one dense-base-store cell per K (the versioned-store memory +
-    distribution-bytes story), one fault-injected cell per K
-    (REFERENCE_CHURN + round deadline: the graceful-degradation story,
-    gated on round efficiency), and one quantized-wire (csr_q + EF) cell
-    per K (the int8 payload story, gated against its f32 CSR twin)."""
+    """(devices, clients, error_feedback, base_store, faults, wire_format,
+    client_store) cells: the plain sweep (versioned store, f32 CSR, the
+    defaults) plus — at the highest device count — one EF cell per K (the
+    residual-store story), one dense-base-store cell per K (the
+    versioned-store memory + distribution-bytes story), one fault-injected
+    cell per K (REFERENCE_CHURN + round deadline: the graceful-degradation
+    story, gated on round efficiency), one quantized-wire (csr_q + EF) cell
+    per K (the int8 payload story, gated against its f32 CSR twin), and one
+    paged-client-store (EF) cell per K (the flat-device-memory story, gated
+    against its resident twin on throughput and against the resident
+    equivalent on bytes)."""
     dmax = max(args.devices)
-    cells = [(d, k, False, "versioned", False, "csr") for d in args.devices
-             for k in args.clients]
-    cells += [(dmax, k, True, "versioned", False, "csr")
+    cells = [(d, k, False, "versioned", False, "csr", "resident")
+             for d in args.devices for k in args.clients]
+    cells += [(dmax, k, True, "versioned", False, "csr", "resident")
               for k in args.clients]
-    cells += [(dmax, k, False, "dense", False, "csr") for k in args.clients]
-    cells += [(dmax, k, False, "versioned", True, "csr")
+    cells += [(dmax, k, False, "dense", False, "csr", "resident")
+              for k in args.clients]
+    cells += [(dmax, k, False, "versioned", True, "csr", "resident")
               for k in args.clients]
     # csr_q rides with EF so the dequantization error is re-offered instead
     # of dropped — the configuration the accuracy gate compares to its EF
     # f32 twin
-    cells += [(dmax, k, True, "versioned", False, "csr_q")
+    cells += [(dmax, k, True, "versioned", False, "csr_q", "resident")
+              for k in args.clients]
+    # the paged twin rides with EF too: residual pages are the per-client
+    # state whose device footprint the store removes, and its resident EF
+    # twin above shares the same (K, D) for the throughput gate
+    cells += [(dmax, k, True, "versioned", False, "csr", "paged")
               for k in args.clients]
     return cells
 
@@ -188,34 +288,60 @@ def driver(args):
     # (measured 4-5x on the later cell — lingering executables and
     # allocator state), so every cell gets a pristine runtime
     results = []
-    for d, k, ef, store, faults, wire in _cells(args):
+    for d, k, ef, store, faults, wire, cstore in _cells(args):
         env = dict(os.environ)
         flags = [f for f in env.get("XLA_FLAGS", "").split()
                  if "--xla_force_host_platform_device_count" not in f]
         env["XLA_FLAGS"] = " ".join(
             flags + [f"--xla_force_host_platform_device_count={d}"])
         out = f".bench_fleet_worker_{d}_{k}_{int(ef)}_{store}_{int(faults)}" \
-              f"_{wire}.json"
+              f"_{wire}_{cstore}.json"
         cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
                "--worker", "--out", out, "--rounds", str(args.rounds),
                "--seed", str(args.seed), "--clients", str(k),
-               "--base-store", store, "--wire-format", wire]
+               "--base-store", store, "--wire-format", wire,
+               "--client-store", cstore]
         if ef:
             cmd.append("--ef")
         if faults:
             cmd.append("--faults")
         print(f"[bench_fleet] K={k} devices={d} ef={ef} store={store} "
-              f"faults={faults} wire={wire}", flush=True)
+              f"faults={faults} wire={wire} cstore={cstore}", flush=True)
         subprocess.run(cmd, env=env, check=True)
         with open(out) as f:
             results.extend(json.load(f))
         os.remove(out)
 
+    # the M=1,000,000 scale cell (both full and smoke sweeps — it IS the
+    # headline claim, and the pooled dataset keeps it minutes, not hours)
+    sc = SCALE_CELL
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "--xla_force_host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        flags + [f"--xla_force_host_platform_device_count={sc['devices']}"])
+    out = ".bench_fleet_worker_scale.json"
+    print(f"[bench_fleet] K={sc['clients']} devices={sc['devices']} "
+          f"paged scale cell (pool={sc['pool']}, "
+          f"participants={sc['participants']})", flush=True)
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_fleet", "--worker",
+         "--out", out, "--rounds", str(sc["rounds"]),
+         "--seed", str(args.seed), "--clients", str(sc["clients"]),
+         "--client-store", "paged", "--ef", "--pool", str(sc["pool"]),
+         "--participants", str(sc["participants"]),
+         "--warmup", str(sc["warmup"])],
+        env=env, check=True)
+    with open(out) as f:
+        results.extend(json.load(f))
+    os.remove(out)
+
     for r in results:
-        tag = " q8" if r.get("wire_format", "csr") == "csr_q" else \
-            (" ef" if r["error_feedback"] else
-             (" fx" if r.get("faults") else
-              (" db" if r.get("base_store") == "dense" else "")))
+        tag = " pg" if r.get("client_store", "resident") == "paged" else \
+            (" q8" if r.get("wire_format", "csr") == "csr_q" else
+             (" ef" if r["error_feedback"] else
+              (" fx" if r.get("faults") else
+               (" db" if r.get("base_store") == "dense" else ""))))
         print(f"  K={r['clients']:5d} D={r['devices']}{tag:3s} "
               f"{r['rounds_per_sec']:7.3f} rounds/s "
               f"({r['s_per_round']*1e3:8.1f} ms/round)  "
@@ -230,6 +356,12 @@ def driver(args):
                   f"degraded {r['degraded_rounds']} "
                   f"crashes {r['crashes']} lost {r['lost_uploads']} "
                   f"resyncs {r['resyncs']}")
+        if r.get("client_store", "resident") == "paged":
+            print(f"        client state: device "
+                  f"{r['client_state_device_bytes']/1e6:.2f} MB (window), "
+                  f"host {r['client_state_host_bytes']/1e6:.2f} MB, "
+                  f"resident equiv "
+                  f"{r['client_state_resident_equiv_bytes']/1e6:.2f} MB")
     # scaling summary: rounds/sec at each K, normalized to the 1-device run
     summary = {}
     for r in results:
@@ -265,6 +397,14 @@ def main():
     ap.add_argument("--faults", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--wire-format", dest="wire_format", default="csr",
                     choices=("csr", "csr_q", "dense_masked"),
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--client-store", dest="client_store",
+                    default="resident", choices=("resident", "paged"),
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--pool", type=int, default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--participants", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--warmup", type=int, default=None,
                     help=argparse.SUPPRESS)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)

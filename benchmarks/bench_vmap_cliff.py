@@ -1,0 +1,149 @@
+"""Canary for the XLA:CPU batched-GEMM cliff behind the ``lax.map`` fallback.
+
+``make_batched_client_epoch`` (core.pseudo_label) lowers the client axis to
+``jax.lax.map`` on the CPU backend because XLA:CPU batched GEMMs degraded
+superlinearly past K~4 rows when the fallback was added (measured 2x at
+K=6). ROADMAP marks that workaround "revisit per JAX release": if an XLA
+upgrade fixes batched-GEMM lowering, the fallback silently becomes a
+de-optimization (a serial scan over clients where a parallel vmap would do)
+and nothing would ever tell us. This microbenchmark is that tripwire — the
+weekly jax-latest CI job runs it and FAILS LOUDLY when the fallback starts
+costing real throughput.
+
+Method: build a faithful miniature of the batched client epoch out of the
+repo's own pieces — the real CNN forward (small parity config), the
+scan-over-batches + ``lax.cond`` dead-step + flat-Adam structure — and time
+the client axis lowered both ways (``jax.vmap`` vs ``jax.lax.map``) on the
+same operands. A bare tanh-GEMM chain does NOT reproduce the effect; the
+cliff lives in the full autodiff+optimizer dispatch mix, so the canary
+benchmarks exactly that.
+
+Interpretation (exit codes):
+
+* 0, "cliff present" — vmap >= 1.5x slower than lax.map: the fallback is
+  still earning its keep.
+* 0, "neutral" — the ratio sits in (0.8, 1.5): the two lowerings are
+  within noise of each other (expected on few-core runners, where both
+  strategies serialize). The fallback costs nothing and stays — engine
+  parity is pinned against its reduction order.
+* 1, "FALLBACK NOW HURTS" — vmap is decisively FASTER (ratio <= 0.8):
+  XLA:CPU now batches the client axis better than a serial scan. Drop the
+  ``lax.map`` fallback in ``make_batched_client_epoch`` /
+  ``class_histogram_batch`` and re-pin parity.
+* 0, skipped — non-CPU backend (the cliff is XLA:CPU-specific).
+
+  PYTHONPATH=src python -m benchmarks.bench_vmap_cliff
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+# past the measured cliff onset (K~4-6) while keeping the canary a few
+# seconds on a CI core; small parity CNN so compile time stays bounded
+K, B, NB = 8, 50, 4
+REPEATS = 5
+THRESHOLD = 0.9          # pseudo-label confidence gate (paper default)
+
+
+def _build():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pseudo_label import adam_update
+    from repro.core.sparse_comm import flatten_tree, unflatten_like
+    from repro.kernels.ref import masked_pseudo_ce_ref
+    from repro.models.cnn import CNNConfig, cnn_forward, init_cnn
+
+    cfg = CNNConfig(name="vmap-cliff-canary", conv_filters=(8, 8), hidden=16)
+    template = init_cnn(cfg, jax.random.PRNGKey(0))
+    flat0 = flatten_tree(template)
+
+    def one_client(flat, xc, vc, lr, rng):
+        xb = xc.reshape(NB, B, -1)
+        vb = vc.reshape(NB, B)
+        opt = {"m": jnp.zeros_like(flat), "v": jnp.zeros_like(flat),
+               "t": jnp.zeros((), jnp.int32)}
+
+        def step(carry, inp):
+            flat, o, rng = carry
+            xi, vi = inp
+            rng, dr = jax.random.split(rng)
+
+            def live_step(_):
+                def loss_fn(fp):
+                    pp = unflatten_like(fp, template)
+                    logits = cnn_forward(cfg, pp, xi, train=True, rng=dr)
+                    loss, _ = masked_pseudo_ce_ref(logits, THRESHOLD)
+                    return jnp.sum(loss * vi) / jnp.maximum(jnp.sum(vi), 1.0)
+
+                l, g = jax.value_and_grad(loss_fn)(flat)
+                f2, o2 = adam_update(g, o, flat, lr=lr, l1=0.0)
+                return f2, o2, l
+
+            def dead_step(_):
+                return flat, o, jnp.float32(0.0)
+
+            live = jnp.sum(vi) > 0
+            flat, o, l = jax.lax.cond(live, live_step, dead_step, None)
+            return (flat, o, rng), l
+
+        (flat, opt, _), losses = jax.lax.scan(step, (flat, opt, rng),
+                                              (xb, vb))
+        return flat, jnp.mean(losses)
+
+    chain_vmap = jax.jit(lambda *a: jax.vmap(one_client)(*a))
+    chain_map = jax.jit(
+        lambda *a: jax.lax.map(lambda t: one_client(*t), a))
+
+    key = jax.random.PRNGKey(1)
+    args = (
+        jnp.tile(flat0[None], (K, 1)),
+        jax.random.normal(key, (K, NB * B, cfg.num_features), jnp.float32),
+        jnp.ones((K, NB * B), jnp.float32),
+        jnp.full((K,), 1e-3, jnp.float32),
+        jax.random.split(key, K),
+    )
+    return jax, (chain_vmap, chain_map), args
+
+
+def _time(jax, fn, args):
+    jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        out = fn(*args)
+    jax.block_until_ready(out[0])
+    return (time.perf_counter() - t0) / REPEATS
+
+
+def main():
+    jax, (chain_vmap, chain_map), args = _build()
+    if jax.default_backend() != "cpu":
+        print(f"[bench_vmap_cliff] backend={jax.default_backend()}: the "
+              f"batched-GEMM cliff is XLA:CPU-specific — skipped")
+        return 0
+    t_vmap = _time(jax, chain_vmap, args)
+    t_map = _time(jax, chain_map, args)
+    ratio = t_vmap / t_map
+    print(f"[bench_vmap_cliff] jax {jax.__version__}  K={K} B={B} nb={NB}: "
+          f"vmap {t_vmap*1e3:.1f} ms  lax.map {t_map*1e3:.1f} ms  "
+          f"ratio x{ratio:.2f}")
+    if ratio >= 1.5:
+        print("cliff present: the lax.map fallback in "
+              "make_batched_client_epoch is still justified")
+        return 0
+    if ratio > 0.8:
+        print("neutral (ratio in the 0.8-1.5 band): the two lowerings are "
+              "within noise — the fallback costs nothing, keep it (engine "
+              "parity is pinned against its reduction order)")
+        return 0
+    print("FALLBACK NOW HURTS: vmap decisively beats lax.map on XLA:CPU "
+          f"(x{ratio:.2f}). Drop the lax.map fallback in "
+          "core/pseudo_label.py (make_batched_client_epoch, "
+          "class_histogram_batch), let the client axis vmap on every "
+          "backend, and re-pin engine parity.", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

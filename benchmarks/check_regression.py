@@ -2,8 +2,8 @@
 
 Diffs a fresh smoke run of ``benchmarks.bench_fleet`` against the committed
 baseline (BENCH_fleet.json) cell by cell — cells are keyed by
-(clients, devices, error_feedback, base_store, faults, wire_format) — and
-fails the job when:
+(clients, devices, error_feedback, base_store, faults, wire_format,
+client_store) — and fails the job when:
 
 * throughput regresses by more than ``--max-slowdown`` (default 30%) on
   the GEOMETRIC MEAN across cells, or by more than twice that on any
@@ -42,7 +42,19 @@ fails the job when:
   EF residual absorbs the rounding error; a larger gap means the
   quantization stopped being error-compensated). Both cells come from the
   same run on the same host, so the throughput ratio is insulated from
-  runner drift.
+  runner drift, or
+* the client-state scale gate fails on a ``client_store="paged"`` cell:
+  its ``client_state_device_bytes`` (the participant window + pending
+  writeback pages) must stay strictly below
+  ``client_state_resident_equiv_bytes`` (what the resident layout would
+  hold on device at that M), its rounds/sec must stay >= 0.9x its resident
+  twin from the SAME run at K <= 2048 (the page gather/scatter must
+  overlap, not serialize), and — across ALL paged cells, including the
+  M=1,000,000 scale cell — device bytes PER PARTICIPANT of the largest-M
+  cell must stay within 4x the smallest-M cell's: the flat-in-M claim.
+  (The 4x slop absorbs padded-batch-count variation between the pooled
+  scale dataset and the per-K fleet datasets; a resident layout would blow
+  past it by orders of magnitude at 1M clients.)
 
 The throughput comparison is absolute rounds/sec against a baseline
 measured on whatever machine last ran the full sweep — a systematically
@@ -73,7 +85,8 @@ def _cells(path):
     for r in results:
         key = (r["clients"], r["devices"], bool(r.get("error_feedback")),
                r.get("base_store", "versioned"), bool(r.get("faults")),
-               r.get("wire_format", "csr"))
+               r.get("wire_format", "csr"),
+               r.get("client_store", "resident"))
         out[key] = r
     return out
 
@@ -82,11 +95,12 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
     failures, skipped, rows, speeds = [], [], [], []
     for key, cand in sorted(candidate.items()):
         base = baseline.get(key)
-        k, d, ef, store, faults, wire = key
+        k, d, ef, store, faults, wire, cstore = key
         name = f"K={k} D={d}{' ef' if ef else ''}" + \
             (f" {store}" if store != "versioned" else "") + \
             (" faults" if faults else "") + \
-            (f" {wire}" if wire != "csr" else "")
+            (f" {wire}" if wire != "csr" else "") + \
+            (f" {cstore}" if cstore != "resident" else "")
         # base-store memory gate: the versioned store must stay sublinear —
         # strictly below the dense (M, N) equivalent — at every committed
         # fleet size (candidate-only check, no baseline cell needed)
@@ -98,7 +112,8 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                     f"{cand['base_store_bytes']} B is not smaller than the "
                     f"dense equivalent "
                     f"{cand['base_store_dense_equiv_bytes']} B")
-            dense_twin = candidate.get((k, d, ef, "dense", faults, wire))
+            dense_twin = candidate.get((k, d, ef, "dense", faults, wire,
+                                        cstore))
             if dense_twin is not None:
                 if cand["base_store_bytes"] >= \
                         dense_twin.get("base_store_bytes", float("inf")):
@@ -118,7 +133,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
         # the byte ratio is deterministic and the throughput ratio is
         # insulated from runner drift (candidate-only, no baseline needed)
         if wire == "csr_q":
-            twin = candidate.get((k, d, ef, store, faults, "csr"))
+            twin = candidate.get((k, d, ef, store, faults, "csr", cstore))
             if twin is None:
                 skipped.append(f"{name} (no f32 csr twin cell)")
             else:
@@ -142,6 +157,42 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                         f"{name}: final accuracy {cand['final_accuracy']:.4f}"
                         f" is {qacc:.4f} from the f32 csr twin's "
                         f"{twin['final_accuracy']:.4f} (gate: <=0.01)")
+        # client-state scale gate: a paged cell must hold strictly less on
+        # device than the resident layout would at its fleet size, and at
+        # CI-sized fleets must stay within 0.9x of its resident twin's
+        # throughput from the SAME run (candidate-only, no baseline needed)
+        if cstore == "paged":
+            dev = cand.get("client_state_device_bytes")
+            req = cand.get("client_state_resident_equiv_bytes")
+            if dev is not None and req is not None:
+                rows.append(f"  {name:16s} device client state "
+                            f"{dev/1e6:8.2f} MB (resident equiv "
+                            f"{req/1e6:.2f} MB)")
+                if dev >= req:
+                    failures.append(
+                        f"{name}: paged device client-state bytes {dev} are "
+                        f"not smaller than the resident equivalent {req}")
+            if k <= 2048:
+                # prefer the same-process interleaved twin measurement the
+                # paged cell carries — a separate resident worker's number
+                # swings with between-process CPU state far more than the
+                # gate's 10% budget
+                tspeed = cand.get("resident_twin_rounds_per_sec")
+                if not tspeed:
+                    rtwin = candidate.get((k, d, ef, store, faults, wire,
+                                           "resident"))
+                    tspeed = rtwin["rounds_per_sec"] if rtwin else None
+                if tspeed is None:
+                    skipped.append(f"{name} (no resident twin cell)")
+                else:
+                    pspeed = cand["rounds_per_sec"] / tspeed
+                    rows.append(f"  {name:16s} vs resident twin: "
+                                f"rounds/s x{pspeed:5.2f}")
+                    if pspeed < 0.9:
+                        failures.append(
+                            f"{name}: paged throughput is x{pspeed:.2f} of "
+                            f"the resident twin (gate: >=0.9 — the page "
+                            f"gather/scatter must overlap, not serialize)")
         if base is None:
             skipped.append(name)
             continue
@@ -182,6 +233,25 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                 f"{name}: residual store "
                 f"{cand['residual_store_bytes']} B is not smaller than the "
                 f"dense equivalent {cand['residual_dense_equiv_bytes']} B")
+    # flat-in-M gate: across every paged cell (the CI-sized fleets AND the
+    # M=1,000,000 scale cell), device client-state bytes per participant
+    # must not grow with the fleet — a resident layout smuggled back in
+    # would blow the largest-M cell up by orders of magnitude
+    paged = [c for key, c in candidate.items()
+             if key[6] == "paged" and c.get("client_state_device_bytes")
+             and c.get("participants_per_round")]
+    if len(paged) >= 2:
+        per = sorted((c["clients"],
+                      c["client_state_device_bytes"]
+                      / c["participants_per_round"]) for c in paged)
+        (m_lo, b_lo), (m_hi, b_hi) = per[0], per[-1]
+        rows.append(f"  paged device bytes/participant: {b_lo:.0f} at "
+                    f"M={m_lo} -> {b_hi:.0f} at M={m_hi}")
+        if b_hi > 4 * b_lo:
+            failures.append(
+                f"paged client state is not flat in M: "
+                f"{b_hi:.0f} B/participant at M={m_hi} vs {b_lo:.0f} at "
+                f"M={m_lo} (gate: <=4x)")
     if speeds:
         geomean = math.exp(sum(math.log(s) for s in speeds) / len(speeds))
         rows.append(f"  {'geomean':16s} rounds/s x{geomean:5.2f}")

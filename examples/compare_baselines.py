@@ -2,15 +2,23 @@
 FedAsync-SSL vs the Local-SSL ceiling, on the non-IID basic scenario.
 
   PYTHONPATH=src python examples/compare_baselines.py
+
+Environment knobs (used by the CI examples smoke job): ``EXAMPLES_ROUNDS``
+overrides the round count, ``EXAMPLES_SCALE`` the dataset scale.
 """
+import os
+
 from repro.core import (FedAsyncSSL, FedAvgSSL, FedS3AConfig, FedS3ATrainer,
                         LocalSSL)
 from repro.data import make_dataset
 
+ROUNDS = int(os.environ.get("EXAMPLES_ROUNDS", "8"))
+SCALE = float(os.environ.get("EXAMPLES_SCALE", "0.008"))
+
 
 def main():
-    data = make_dataset("basic", scale=0.008, seed=0)
-    cfg = FedS3AConfig(rounds=8)
+    data = make_dataset("basic", scale=SCALE, seed=0)
+    cfg = FedS3AConfig(rounds=ROUNDS)
 
     rows = []
     tr = FedS3ATrainer(data, cfg)

@@ -152,23 +152,68 @@ aggregate ``fleet`` health dict (``degraded_rounds``,
 ``mean_quorum_frac``, ``resyncs``, ...) — bit-identical across all three
 engines for the same seed (pinned in tests/test_chaos.py).
 
+Client state paging
+-------------------
+``FedS3AConfig(client_store=...)`` selects where per-client state (the
+error-feedback residual rows and participation/staleness counters) lives:
+
+* ``"resident"`` (default) — on-device, sized by the fleet: the EF store
+  is an (M, rcap) device matrix, so device memory grows with M whether or
+  not a client participates. Kept as the parity-pinned reference; right
+  whenever the whole fleet fits.
+* ``"paged"`` — host-resident numpy pages plus a device window holding
+  only the round's K participants: the round prologue gathers the
+  participants' residual rows host->device, the epilogue scatters the
+  updated rows back, and device client-state bytes are O(K * rcap) — flat
+  in M (the CI scale gate pins a demonstrated M=1,000,000-client round).
+  Requires ``base_store="versioned"`` (the paged layout keeps no
+  per-client base state at all — a client's base is its ring version,
+  already host-side). Paged runs are bit-identical to resident runs
+  (pinned per engine in tests/test_engine_parity.py).
+
+  Two operational notes. First, writes are double-buffered: the epilogue
+  scatter is ENQUEUED and drained at the next round's prologue (so the
+  write-back overlaps the next round's work) — host pages are stale until
+  then, and any direct read through the store (``residual_row``,
+  ``gather_*``) flushes first to stay coherent. Second,
+  ``FedS3AConfig(paged_dir=...)`` backs the pages with memory-mapped
+  ``.npy`` files instead of anonymous memory: fleets whose residual store
+  exceeds RAM spill to disk, and the OS pages in only the rows each round
+  touches.
+
+Paging pays when M >> K — the window costs two host<->device copies per
+round but shrinks device state by M/K; at M = K (every client every
+round) it is pure overhead, so the regression gate only holds paged cells
+to 0.9x resident throughput. For fleet-scale datasets,
+``make_fleet_dataset(pool=P)`` materializes only P distinct client shards
+and aliases them cyclically, so the data footprint stays O(P) while the
+fleet is M clients wide.
+
 CI runs ``benchmarks/check_regression.py`` against the committed
 BENCH_fleet.json on every PR, failing on >30% rounds/sec regression or any
 bytes-on-wire increase — if you touch the comm path, refresh the baseline
 with ``python -m benchmarks.bench_fleet``.
+
+Environment knobs (used by the CI examples smoke job): ``EXAMPLES_ROUNDS``
+overrides the round count, ``EXAMPLES_SCALE`` the dataset scale.
 """
+import os
+
 from repro.core import FedS3AConfig, FedS3ATrainer
 from repro.data import make_dataset
+
+ROUNDS = int(os.environ.get("EXAMPLES_ROUNDS", "8"))
+SCALE = float(os.environ.get("EXAMPLES_SCALE", "0.008"))
 
 
 def main():
     print("building synthetic CIC-IDS-2017 (basic / non-IID scenario)...")
-    data = make_dataset("basic", scale=0.008, seed=0)
+    data = make_dataset("basic", scale=SCALE, seed=0)
     for i, (c, e) in enumerate(zip(data["clients"], data["entropy"])):
         print(f"  client {i}: {len(c['x']):5d} samples, entropy {e:.3f}")
     print(f"  server:   {len(data['server']['x'])} labeled samples")
 
-    cfg = FedS3AConfig(rounds=8, C=0.6, tau=2)
+    cfg = FedS3AConfig(rounds=ROUNDS, C=0.6, tau=2)
     trainer = FedS3ATrainer(data, cfg)
     print(f"\nFedS3A: C={cfg.C} tau={cfg.tau} "
           f"staleness={cfg.staleness_function} groups={cfg.num_groups} "

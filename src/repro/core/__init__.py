@@ -3,6 +3,7 @@ semi-asynchronous learning (scheduler, aggregation, pseudo-labeling,
 staleness control, sparse-diff communication, fault injection, baselines)."""
 from repro.core.feds3a import FedS3AConfig, FedS3ATrainer  # noqa: F401
 from repro.core.base_store import VersionedBaseStore  # noqa: F401
+from repro.core.client_store import PagedClientStore  # noqa: F401
 from repro.core.scheduler import FleetStalledError  # noqa: F401
 from repro.core.traffic import REFERENCE_CHURN, TrafficModel  # noqa: F401
 from repro.core.baselines import FedAvgSSL, FedAsyncSSL, LocalSSL  # noqa: F401

@@ -16,6 +16,12 @@ at the round boundary).  This module exploits that invariant:
   hold the bit-identical reconstruction by construction;
 * a per-client ``base_version`` integer array.
 
+The per-client arrays (``client_version``, ``detached``) are HOST-side
+numpy, never device-resident: version bookkeeping is boundary-time python
+anyway, and keeping them on host is what lets the paged client store
+(``core.client_store``) report a complete host-side per-client footprint —
+it adopts references to these arrays rather than copying them.
+
 Server memory is ``O(tau * N + M)`` — the ``(M, N)`` dense base matrices the
 engines previously kept are gone — and distribution becomes a **chain-delta
 broadcast**: each transition payload goes on the wire once per round and a

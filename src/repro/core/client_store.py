@@ -1,0 +1,222 @@
+"""Participant-paged client state (``client_store="paged"``).
+
+The resident layout keeps the server's per-client state — error-feedback
+residual rows, per-client versions, participation counters — as (M, ...)
+DEVICE arrays, so device memory grows with the fleet even though a round
+only ever touches its K participants. :class:`PagedClientStore` moves that
+state to host memory (numpy; optionally a memory-mapped file set) and
+serves each round a device-side *window* holding only the participants'
+pages:
+
+* round prologue — :meth:`gather_csr` / :meth:`gather_dense` fancy-index
+  the participants' pages out of the host store and place them on device
+  (after draining any queued writes, see below);
+* round epilogue — :meth:`scatter_csr` / :meth:`scatter_dense` queue the
+  round's updated pages, and :meth:`retire` queues the fault-driven page
+  invalidations (tau-forced restarts, lost uploads, churn departures,
+  rejoiners) that the resident engines apply as device-wide scatters.
+
+Writes are DEFERRED: scatter/retire only enqueue, and the queue drains at
+the next gather (or an explicit :meth:`flush`). The device->host
+materialization of a round's residual pages therefore overlaps the host
+work that follows the round — scheduler bookkeeping, the next boundary's
+event processing — instead of blocking the epilogue; this is the
+double-buffering that keeps paged rounds within the regression gate's
+0.9x-of-resident throughput budget. Queue order is preserved, so a
+retirement queued after the same round's scatter zeroes the page exactly
+like the resident scatter-then-reset sequence.
+
+Numerics are bit-identical to the resident layout: a CSR page decodes
+(scatter-add, ``kernels.ops.csr_decode``) to exactly the dense residual
+row the resident engines store — the capped-mask/compact round-trip
+contract pinned in tests/test_kernels.py — and gathers of retired or
+never-written pages return exact zeros, the same rows a resident reset
+writes. The engine parity matrix pins paged vs resident runs equal.
+
+Per-client *versions* stay owned by ``VersionedBaseStore`` (they are
+already host-side numpy there); this store only adopts references via
+:meth:`adopt_versions` so :meth:`host_bytes` reports the full host-side
+per-client footprint. Participation/staleness counters (``part_count``,
+``last_round``) live here and are updated from the shared round epilogue.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+LAYOUTS = ("csr", "dense", "none")
+
+
+class PagedClientStore:
+    """Host-resident per-client pages + a device gather/scatter window.
+
+    ``layout`` selects the residual page shape: ``"csr"`` keeps the
+    capacity-bounded (M, rcap) values/indices pair the CSR wire formats
+    use, ``"dense"`` keeps dense (M, n) rows (the ``dense_masked``
+    reference format's residual), ``"none"`` allocates no residual pages
+    at all (error feedback off — the store still carries the counters and
+    byte accounting).
+
+    ``paged_dir``: when set, the residual page arrays are ``.npy``
+    memory-maps under that directory instead of anonymous RAM — the
+    explicit spill-to-disk option for fleets whose nominal page store
+    exceeds memory. Plain ``np.zeros`` is already lazily committed on
+    Linux (untouched pages cost nothing), so the memmap is only needed
+    when *touched* pages outgrow RAM.
+    """
+
+    def __init__(self, M, n, rcap, *, layout="csr", paged_dir=None):
+        if layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}, "
+                             f"got {layout!r}")
+        self.M = int(M)
+        self.n = int(n)
+        self.rcap = int(rcap)
+        self.layout = layout
+        self.paged_dir = os.fspath(paged_dir) if paged_dir is not None \
+            else None
+        if layout == "csr":
+            self.res_vals = self._alloc("res_vals", (M, rcap), np.float32)
+            self.res_idx = self._alloc("res_idx", (M, rcap), np.int32)
+            self._pages = (self.res_vals, self.res_idx)
+        elif layout == "dense":
+            self.res_rows = self._alloc("res_rows", (M, n), np.float32)
+            self._pages = (self.res_rows,)
+        else:
+            self._pages = ()
+        # a page is readable only while valid; retire() clears the bit and
+        # the page reads as zero — no O(M) host write, no stale mass
+        self.valid = np.zeros(M, bool)
+        self.part_count = np.zeros(M, np.int64)
+        self.last_round = np.full(M, -1, np.int64)
+        self._queue = []            # ordered ("scatter", ids, arrays) /
+                                    # ("retire", ids) ops, drained on gather
+        self._window_bytes = 0      # device bytes of the last gather window
+        self._versions = ()         # adopted VersionedBaseStore arrays
+
+    def _alloc(self, name, shape, dtype):
+        if self.paged_dir is None:
+            return np.zeros(shape, dtype)
+        os.makedirs(self.paged_dir, exist_ok=True)
+        path = os.path.join(self.paged_dir, f"{name}.npy")
+        return np.lib.format.open_memmap(path, mode="w+", shape=shape,
+                                         dtype=dtype)
+
+    def adopt_versions(self, *arrays):
+        """Reference the host-side per-client version arrays owned by the
+        VersionedBaseStore (``client_version``, ``detached``) so
+        :meth:`host_bytes` reports the complete per-client footprint."""
+        self._versions = arrays
+
+    # -- deferred write queue ----------------------------------------------
+    def scatter_csr(self, ids, vals, idx):
+        """Queue the round's updated (K, rcap) CSR residual pages for
+        ``ids``. Device arrays are kept as-is — the host copy happens at
+        the next :meth:`flush` / gather, overlapping the post-round host
+        work (the double buffer)."""
+        if len(ids):
+            self._queue.append(("scatter", np.asarray(ids, np.int64),
+                                (vals, idx)))
+
+    def scatter_dense(self, ids, rows):
+        """Queue updated dense (K, n) residual rows for ``ids``."""
+        if len(ids):
+            self._queue.append(("scatter", np.asarray(ids, np.int64),
+                                (rows,)))
+
+    def retire(self, ids):
+        """Queue page invalidation for ``ids`` (forced restarts, lost
+        uploads, departures, rejoiners): their residual mass was
+        accumulated against a base they no longer hold. Ordered after any
+        same-round scatter, exactly like the resident engines' sequence."""
+        if len(ids):
+            self._queue.append(("retire", np.asarray(ids, np.int64)))
+
+    def flush(self):
+        """Drain the write queue into the host pages, in order."""
+        for op in self._queue:
+            if op[0] == "scatter":
+                _, rows, arrays = op
+                for dst, src in zip(self._pages, arrays):
+                    dst[rows] = np.asarray(src)
+                self.valid[rows] = True
+            else:
+                self.valid[op[1]] = False
+        self._queue = []
+
+    # -- gather windows -----------------------------------------------------
+    def _gather(self, ids):
+        self.flush()
+        rows = np.asarray(ids, np.int64)
+        bad = ~self.valid[rows]
+        out = []
+        for page in self._pages:
+            win = page[rows]               # fancy index -> fresh ndarray
+            if bad.any():
+                win[bad] = 0
+            out.append(jnp.asarray(win))
+        self._window_bytes = int(sum(w.nbytes for w in out))
+        return tuple(out)
+
+    def gather_csr(self, ids):
+        """(len(ids), rcap) device (values, indices) window. Invalid
+        (retired / never-written) pages read as zeros — ``csr_decode`` of
+        an all-zero page is the zero residual row."""
+        return self._gather(ids)
+
+    def gather_dense(self, ids):
+        """(len(ids), n) device dense-residual window."""
+        return self._gather(ids)[0]
+
+    # -- counters -----------------------------------------------------------
+    def record_participation(self, ids, round_no):
+        """Bump participation counters for this round's uploaders;
+        ``last_round`` makes per-client staleness ``round - last_round`` a
+        host-side lookup, like the versions the base store keeps."""
+        if len(ids):
+            rows = np.asarray(ids, np.int64)
+            self.part_count[rows] += 1
+            self.last_round[rows] = int(round_no)
+
+    # -- inspection ---------------------------------------------------------
+    def residual_row(self, i):
+        """Dense (n,) host residual of client ``i`` (test/debug accessor;
+        drains the queue first). Matches the resident layout: retired or
+        never-written pages are exact zeros, CSR pages scatter-add decode
+        like ``kernels.ops.csr_decode``."""
+        self.flush()
+        out = np.zeros(self.n, np.float32)
+        if self.layout == "none" or not self.valid[i]:
+            return out
+        if self.layout == "dense":
+            out[:] = self.res_rows[i]
+            return out
+        np.add.at(out, self.res_idx[i], self.res_vals[i])
+        return out
+
+    # -- byte accounting ----------------------------------------------------
+    def device_window_bytes(self):
+        """Device-resident bytes of per-client state right now: the last
+        gather window plus any queued (not yet materialized) writeback
+        pages — O(K * page), flat in M."""
+        pending = sum(int(a.nbytes) for op in self._queue if op[0] ==
+                      "scatter" for a in op[2])
+        return self._window_bytes + pending
+
+    def host_bytes(self):
+        """Nominal host bytes of the full per-client store: residual pages
+        + validity bits + counters + the adopted version arrays. Nominal —
+        ``np.zeros`` pages are lazily committed and memmap pages live on
+        disk, so resident set is typically far smaller."""
+        total = sum(int(p.nbytes) for p in self._pages)
+        total += int(self.valid.nbytes + self.part_count.nbytes
+                     + self.last_round.nbytes)
+        total += sum(int(np.asarray(v).nbytes) for v in self._versions)
+        return total
+
+    def residual_store_bytes(self):
+        """Nominal bytes of the residual pages alone (0 when EF is off) —
+        the paged counterpart of the resident residual-store report."""
+        return sum(int(p.nbytes) for p in self._pages)

@@ -67,6 +67,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.feds3a_cnn import CONFIG as CNN_CONFIG
 from repro.core import aggregation as agg
 from repro.core.base_store import VersionedBaseStore
+from repro.core.client_store import PagedClientStore
 from repro.core.functions import (adaptive_learning_rates, staleness_fn,
                                   supervised_weight)
 from repro.core.grouping import group_clients, init_index, kmeans_device
@@ -89,6 +90,7 @@ from repro.optimizer import adam_init
 
 ENGINES = ("sequential", "batched", "sharded")
 BASE_STORES = ("versioned", "dense")
+CLIENT_STORES = ("resident", "paged")
 
 # auto engine selection: minimum participants per device before the sharded
 # engine beats batched — below this the psum/collective overhead dominates
@@ -176,6 +178,21 @@ class FedS3AConfig:
                                          # memory | "dense": legacy
                                          # per-client base state (O(M*N)),
                                          # per-target distribution encodes
+    client_store: str = "resident"       # "resident": per-client EF residual
+                                         # rows (and the batched engines'
+                                         # padded data stack) live as (M,...)
+                                         # device arrays — the parity-pinned
+                                         # reference | "paged": host-resident
+                                         # pages (core.client_store) with a
+                                         # device gather/scatter window over
+                                         # the round's participants only —
+                                         # device client-state bytes are
+                                         # O(K * page), flat in M. Requires
+                                         # base_store="versioned"
+    paged_dir: object = None             # client_store="paged": directory
+                                         # for memory-mapped page files
+                                         # (None = anonymous host RAM, which
+                                         # Linux commits lazily)
     error_feedback: bool = False         # beyond-paper: EF-sparsification
     l1: float = 1e-5                    # §IV-F L1 regularisation
     use_kernels: bool = False           # Pallas kernels (interpret on CPU)
@@ -246,6 +263,15 @@ class FedS3ATrainer:
             raise ValueError(f"base_store must be one of {BASE_STORES}, "
                              f"got {self.cfg.base_store!r}")
         self.base_store = self.cfg.base_store
+        if self.cfg.client_store not in CLIENT_STORES:
+            raise ValueError(f"client_store must be one of {CLIENT_STORES}, "
+                             f"got {self.cfg.client_store!r}")
+        self.paged = self.cfg.client_store == "paged"
+        if self.paged and self.base_store != "versioned":
+            raise ValueError(
+                "client_store='paged' requires base_store='versioned': the "
+                "paged layout keeps no per-client base state at all — a "
+                "client's base is its ring version, already host-side")
         # legacy attribute: any stacked-flat-state engine counts as batched
         self.batched = self.engine != "sequential"
         self.mesh = client_mesh() if self.engine == "sharded" else None
@@ -314,6 +340,7 @@ class FedS3ATrainer:
 
         self.g_fn = staleness_fn(self.cfg.staleness_function)
         self.participation = np.zeros((0, self.M))
+        self._data_window_bytes = 0
         self.logs: list[RoundLog] = []
 
         self._init_models()
@@ -353,19 +380,48 @@ class FedS3ATrainer:
 
     def _build_padded_data(self):
         """Pad every client's data to a common batch count once, so the
-        batched epoch indexes a fixed (M, nb*B, F) device stack per round."""
+        batched epoch indexes a fixed (M, nb*B, F) device stack per round.
+
+        Paged client store: the padded stack stays HOST-side and only the
+        round's participant rows are placed on device (``_gather_data``).
+        Pooled fleet datasets (``data["pool"]`` — M clients aliasing P
+        distinct shards) store only the P distinct rows, with ``_data_map``
+        sending client i to its shard row; at M=1,000,000 the device (and
+        host) data footprint is what a 64-client run pays."""
         B = self.cfg.batch_size
-        F = self.data["clients"][0]["x"].shape[1]
-        nb = max(max((len(c["x"]) + B - 1) // B, 1)
-                 for c in self.data["clients"])
-        xs = np.zeros((self.M, nb * B, F), np.float32)
-        valid = np.zeros((self.M, nb * B), np.float32)
-        for i, c in enumerate(self.data["clients"]):
+        pool = self.data.get("pool") if self.paged else None
+        rows = min(int(pool), self.M) if pool else self.M
+        clients = self.data["clients"][:rows]
+        F = clients[0]["x"].shape[1]
+        nb = max(max((len(c["x"]) + B - 1) // B, 1) for c in clients)
+        xs = np.zeros((rows, nb * B, F), np.float32)
+        valid = np.zeros((rows, nb * B), np.float32)
+        for i, c in enumerate(clients):
             n = len(c["x"])
             xs[i, :n] = c["x"]
             valid[i, :n] = 1.0
-        self._x_pad = jnp.asarray(xs)
-        self._valid_pad = jnp.asarray(valid)
+        if self.paged:
+            self._x_pad_h = xs
+            self._valid_pad_h = valid
+            self._data_map = np.arange(self.M, dtype=np.int64) % rows
+            self._data_row_bytes = int(xs[0].nbytes + valid[0].nbytes)
+        else:
+            self._x_pad = jnp.asarray(xs)
+            self._valid_pad = jnp.asarray(valid)
+
+    def _gather_data(self, ids):
+        """Participants' padded data rows as device arrays. Resident: a
+        device-side fancy index of the (M, nb*B, F) stack. Paged: a host
+        fancy index + device put of just the window — same values bit for
+        bit (pure data movement, no arithmetic)."""
+        if self.paged:
+            rows = self._data_map[np.asarray(ids, np.int64)]
+            xs = jnp.asarray(self._x_pad_h[rows])
+            vs = jnp.asarray(self._valid_pad_h[rows])
+            self._data_window_bytes = int(xs.nbytes + vs.nbytes)
+            return xs, vs
+        idx = jnp.asarray(ids)
+        return self._x_pad[idx], self._valid_pad[idx]
 
     def _init_models(self):
         cfg = self.cfg
@@ -427,7 +483,7 @@ class FedS3ATrainer:
                     # distribution replaces references instead of copying
                     # the whole fleet's parameters every round.
                     self._base_rows = [self._global_flat] * self.M
-            if cfg.error_feedback:
+            if cfg.error_feedback and not self.paged:
                 if self.engine == "sharded":
                     if self._csr_wire:
                         # sparse residual store: per-client residuals live in
@@ -461,6 +517,18 @@ class FedS3ATrainer:
             # derived from its ring version; only the EF residual tree is
             # genuinely per-client state
             self.clients = [{} for _ in range(self.M)]
+        if self.paged:
+            # host-resident per-client pages + a device participant window;
+            # the residual page layout follows the effective wire format
+            # (CSR rows for the CSR family, dense rows for dense_masked,
+            # none with EF off — the store still carries the counters)
+            layout = ("csr" if self._csr_wire else "dense") \
+                if cfg.error_feedback else "none"
+            self.cstore = PagedClientStore(
+                self.M, n, self.comm.residual_capacity(n), layout=layout,
+                paged_dir=cfg.paged_dir)
+            self.cstore.adopt_versions(self.store.client_version,
+                                       self.store.detached)
         self.global_version = 0
 
     # ------------------------------------------------------------------
@@ -646,6 +714,12 @@ class FedS3ATrainer:
         if not self.cfg.error_feedback or not forced:
             return
         ids = sorted(set(forced))
+        if self.paged:
+            # page invalidation, queued AFTER this round's residual
+            # writeback so the scatter-then-retire order matches the
+            # resident engines' sequence
+            self.cstore.retire(ids)
+            return
         if self.engine == "sharded":
             fidx = jnp.asarray(ids)
             if self._csr_wire:
@@ -682,6 +756,11 @@ class FedS3ATrainer:
         (lost uploads, churn, degradation) every engine threads through
         the same distribution plan."""
         prev_time = self.scheduler.state.time
+        if self.paged:
+            # swap point of the page double-buffer: the previous round's
+            # queued residual writebacks / retirements have overlapped the
+            # inter-round host work; drain them before this round gathers
+            self.cstore.flush()
         ev = self.scheduler.next_round()
         lrs = adaptive_learning_rates(
             self.participation, base_lr=self.cfg.lr,
@@ -694,6 +773,9 @@ class FedS3ATrainer:
         row = np.zeros((1, self.M))
         row[0, part_ids] = 1
         self.participation = np.concatenate([self.participation, row])
+        if self.paged:
+            self.cstore.record_participation(part_ids,
+                                             self.global_version - 1)
         log = RoundLog(round=self.global_version - 1, time=ev.time,
                        art=ev.time - prev_time, participants=part_ids,
                        stalenesses={i: ev.stale[i] for i in part_ids},
@@ -725,7 +807,25 @@ class FedS3ATrainer:
         for run in participants:
             i = run.client
             newp, base = self._train_client(i, float(lrs[i]))
-            if cfg.error_feedback:
+            if cfg.error_feedback and self.paged:
+                if self._csr_wire:
+                    # the residual is a CSR page: gather it, fold its
+                    # decode into the encode, queue the new page back —
+                    # identical math to the resident tree path (the page
+                    # decodes to exactly the dense residual, and the
+                    # delta+residual add is elementwise in flat space)
+                    rv, rx = self.cstore.gather_csr([i])
+                    delta, _, (nrv, nrx) = self.comm.encode_paged(
+                        newp, base, rv[0], rx[0])
+                    self.cstore.scatter_csr([i], nrv[None], nrx[None])
+                else:
+                    row = self.cstore.gather_dense([i])[0]
+                    res = unflatten_like(row, newp)
+                    delta, _, res = self.comm.encode(newp, base,
+                                                     residual=res)
+                    self.cstore.scatter_dense([i],
+                                              flatten_tree(res)[None])
+            elif cfg.error_feedback:
                 res = self.clients[i].get("residual")
                 if res is None:
                     res = jax.tree.map(jnp.zeros_like, newp)
@@ -886,6 +986,29 @@ class FedS3ATrainer:
             self._upload_jits[key] = fn
         return fn
 
+    def _upload_fn_paged(self, with_hist):
+        """Paged-store batched upload under the CSR family: the gathered
+        (K, rcap) residual window decodes to dense INSIDE the jit — fused
+        with the encode, the dense (K, N) residual never crosses a stage
+        boundary — and the new residual comes back as CSR pages for the
+        writeback queue. The decode is a pure scatter of exact f32 values,
+        so the result matches the resident dense-row path bit for bit."""
+        key = ("paged", with_hist)
+        fn = self._upload_jits.get(key)
+        if fn is None:
+            body = self._encode_upload_body(True, with_hist)
+            n = self._global_flat.shape[0]
+
+            @jax.jit
+            def fn(trained, base, xs, vs, rvals, ridx):
+                residual = csr_decode(rvals, ridx, n)
+                payload, stored, hists, res_payload, _ = body(
+                    trained, base, xs, vs, residual)
+                return payload, stored, hists, res_payload[:2]
+
+            self._upload_jits[key] = fn
+        return fn
+
     def _finalize_fn(self):
         """server-flatten + weighted aggregation + distribute encode, one
         jit. Under the CSR format the aggregation consumes the upload
@@ -961,9 +1084,7 @@ class FedS3ATrainer:
         # epoch compiles exactly once; all-padding batches are skipped by
         # the in-graph cond, so each client still pays for exactly its own
         # number of optimizer steps
-        idx = jnp.asarray(part_ids)
-        xs = self._x_pad[idx]
-        vs = self._valid_pad[idx]
+        xs, vs = self._gather_data(part_ids)
         if self.base_store == "versioned":
             # version-indexed base gather from the (tau+2, N) ring — no
             # per-client rows exist
@@ -980,7 +1101,15 @@ class FedS3ATrainer:
             # the upload stage emits the compacted payload; the dense
             # uploaded stack never leaves the jit (histograms consume it
             # in-graph, aggregation takes base + payload)
-            if cfg.error_feedback:
+            if cfg.error_feedback and self.paged:
+                # residual pages in, residual pages out: the participant
+                # window decodes to dense inside the jit (fused with the
+                # encode) and the new CSR pages join the writeback queue
+                rv, rx = self.cstore.gather_csr(part_ids)
+                payload, nnz, hists_dev, (nrv, nrx) = self._upload_fn_paged(
+                    with_hist)(trained_flat, base_flat, xs, vs, rv, rx)
+                self.cstore.scatter_csr(part_ids, nrv, nrx)
+            elif cfg.error_feedback:
                 residual = jnp.stack(
                     [self._residual_rows[i] for i in part_ids])
                 payload, nnz, hists_dev, _, res_dense = self._upload_fn(
@@ -992,6 +1121,12 @@ class FedS3ATrainer:
                 payload, nnz, hists_dev, _, _ = self._upload_fn(
                     False, with_hist)(trained_flat, base_flat, xs, vs)
             self.comm.account_batch_csr(nnz, n, K)
+        elif cfg.error_feedback and self.paged:
+            residual = self.cstore.gather_dense(part_ids)
+            uploaded_flat, nnz, hists_dev, residual = self._upload_fn(
+                True, with_hist)(trained_flat, base_flat, xs, vs, residual)
+            self.cstore.scatter_dense(part_ids, residual)
+            self.comm.account_batch(nnz, n, K)
         elif cfg.error_feedback:
             residual = jnp.stack([self._residual_rows[i] for i in part_ids])
             uploaded_flat, nnz, hists_dev, residual = self._upload_fn(
@@ -1290,8 +1425,7 @@ class FedS3ATrainer:
         keys = self._split_keys(K)
         pad_ids = part_ids + part_ids[:1] * pad
         idx = jnp.asarray(pad_ids)
-        xs = self._x_pad[idx]
-        vs = self._valid_pad[idx]
+        xs, vs = self._gather_data(pad_ids)
         if pad:
             keys = jnp.concatenate([keys, jnp.zeros((pad,) + keys.shape[1:],
                                                     keys.dtype)])
@@ -1316,15 +1450,24 @@ class FedS3ATrainer:
             arity = self._payload_arity
             if cfg.error_feedback:
                 # residual rows travel as CSR (values, indices) — the dense
-                # (M, N) residual matrix no longer exists
-                rvals = _gather_rows(self._res_vals, idx)
-                ridx = _gather_rows(self._res_idx, idx)
+                # (M, N) residual matrix no longer exists. Paged store: the
+                # (Kp, rcap) window comes off the host pages instead of a
+                # device (M, rcap) gather; the stage is unchanged (it
+                # already consumes participant windows)
+                if self.paged:
+                    rvals, ridx = self.cstore.gather_csr(pad_ids)
+                else:
+                    rvals = _gather_rows(self._res_vals, idx)
+                    ridx = _gather_rows(self._res_idx, idx)
                 out = stage1(*base_args, xs, vs, lrs_p, keys, rvals, ridx)
                 nrv, nri = out[arity + 2], out[arity + 3]
-                self._res_vals = _scatter_rows(self._res_vals, idx[:K],
-                                               nrv[:K])
-                self._res_idx = _scatter_rows(self._res_idx, idx[:K],
-                                              nri[:K])
+                if self.paged:
+                    self.cstore.scatter_csr(part_ids, nrv[:K], nri[:K])
+                else:
+                    self._res_vals = _scatter_rows(self._res_vals, idx[:K],
+                                                   nrv[:K])
+                    self._res_idx = _scatter_rows(self._res_idx, idx[:K],
+                                                  nri[:K])
             else:
                 z = jnp.zeros((), jnp.float32)
                 out = stage1(*base_args, xs, vs, lrs_p, keys, z, z)
@@ -1332,11 +1475,15 @@ class FedS3ATrainer:
                 tuple(out[:arity]), out[arity], out[arity + 1]
             self.comm.account_batch_csr(nnz[:K], n, K)
         elif cfg.error_feedback:
-            residual = _gather_rows(self._residual_mat, idx)
+            residual = self.cstore.gather_dense(pad_ids) if self.paged \
+                else _gather_rows(self._residual_mat, idx)
             uploaded, nnz, hists_dev, new_res = stage1(
                 *base_args, xs, vs, lrs_p, keys, residual)
-            self._residual_mat = _scatter_rows(
-                self._residual_mat, idx[:K], new_res[:K])
+            if self.paged:
+                self.cstore.scatter_dense(part_ids, new_res[:K])
+            else:
+                self._residual_mat = _scatter_rows(
+                    self._residual_mat, idx[:K], new_res[:K])
             self.comm.account_batch(nnz[:K], n, K)
         else:
             uploaded, nnz, hists_dev, _ = stage1(
@@ -1435,6 +1582,11 @@ class FedS3ATrainer:
         format removes."""
         if not self.cfg.error_feedback:
             return 0
+        if self.paged:
+            # host-nominal bytes of the residual pages (lazily committed /
+            # memmapped); the device-side share is in
+            # ``client_state_device_bytes``
+            return self.cstore.residual_store_bytes()
         if self.engine == "sharded":
             if self._csr_wire:
                 return int((self._res_vals.size + self._res_idx.size) * 4)
@@ -1444,6 +1596,72 @@ class FedS3ATrainer:
         return int(sum(
             sum(leaf.size * 4 for leaf in jax.tree.leaves(c["residual"]))
             for c in self.clients if "residual" in c))
+
+    def client_state_device_bytes(self):
+        """DEVICE-resident bytes of per-client state: EF residual storage
+        plus (for the stacked engines) the padded data stack. Resident
+        layouts hold (M, ...) arrays — linear in the fleet size; the paged
+        store holds only the last round's participant window and its
+        pending writeback pages — O(K * page), flat in M. This is the
+        number the CI scale gate pins flat across fleet sizes."""
+        if self.paged:
+            return self.cstore.device_window_bytes() \
+                + self._data_window_bytes
+        total = 0
+        if self.batched:
+            total += int(self._x_pad.nbytes + self._valid_pad.nbytes)
+        if self.cfg.error_feedback:
+            if self.engine == "sharded":
+                if self._csr_wire:
+                    total += int((self._res_vals.size
+                                  + self._res_idx.size) * 4)
+                else:
+                    total += int(self._residual_mat.size * 4)
+            elif self.engine == "batched":
+                total += int(sum(r.size * 4 for r in self._residual_rows))
+            else:
+                total += self.residual_store_bytes()
+        return total
+
+    def client_state_host_bytes(self):
+        """HOST-resident bytes of per-client state (nominal): the paged
+        store's pages + counters + adopted version arrays, plus the host
+        copy of the padded data stack the stacked engines page from. The
+        resident layouts keep versions host-side (the versioned base
+        store) and everything else on device."""
+        if self.paged:
+            total = self.cstore.host_bytes()
+            if self.batched:
+                total += int(self._x_pad_h.nbytes + self._valid_pad_h.nbytes
+                             + self._data_map.nbytes)
+            return total
+        if self.base_store == "versioned":
+            return int(self.store.client_version.nbytes
+                       + self.store.detached.nbytes)
+        if self.batched:
+            return int(np.asarray(self._base_version).nbytes)
+        return 8 * self.M
+
+    def client_state_resident_equiv_bytes(self):
+        """What the resident layout would put on DEVICE at this fleet size:
+        the (M, nb*B, F) padded data stack (stacked engines) plus the
+        (M, rcap) CSR or (M, n) dense residual store under EF. The scale
+        gate requires ``client_state_device_bytes`` strictly below this on
+        every paged cell — at M=1,000,000 the resident equivalent simply
+        would not fit."""
+        total = 0
+        if self.batched:
+            if self.paged:
+                total += self.M * self._data_row_bytes
+            else:
+                total += int(self._x_pad.nbytes + self._valid_pad.nbytes)
+        if self.cfg.error_feedback:
+            n = self._global_flat.shape[0]
+            if self._csr_wire:
+                total += self.M * self.comm.residual_capacity(n) * 8
+            else:
+                total += self.M * n * 4
+        return total
 
     def evaluate(self, params=None):
         params = params if params is not None else self.global_params

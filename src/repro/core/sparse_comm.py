@@ -563,6 +563,34 @@ class SparseComm:
             return sparse_tree, stats, new_residual
         return sparse_tree, stats
 
+    def encode_paged(self, new_params, base_params, res_vals, res_idx, *,
+                     deliver=True):
+        """Single-message CSR-family encode against a PAGED residual: the
+        client's error-feedback state arrives as one (rcap,) CSR page
+        (values, indices) from ``core.client_store.PagedClientStore`` and
+        the truncated new residual returns as a page for the writeback
+        queue. Returns ``(sparse_delta_tree, stats, (rvals', ridx'))``.
+
+        Bit-identical to :meth:`encode` with the page's dense expansion as
+        ``residual``: the page scatter-add decodes to exactly the dense
+        residual row the resident layout stores (the capped-mask round-trip
+        contract), and adding it to the flat delta is elementwise — the
+        same values :meth:`encode` produces by adding trees leaf-wise and
+        flattening. Only valid under the CSR wire formats (the paged dense
+        layout goes through :meth:`encode` unchanged)."""
+        delta = tree_sub(new_params, base_params)
+        flat = flatten_tree(delta)
+        n = flat.shape[0]
+        flat = flat + kops.csr_decode(res_vals[None], res_idx[None], n)[0]
+        zero = jnp.zeros_like(flat)[None]
+        payload, stored, decoded, res_payload, _ = self.csr_core(True)(
+            flat[None], zero, zero)
+        stats = self._csr_stats(payload, stored, n, rows=None)
+        if deliver:
+            self.deliver(stats)
+        return unflatten_like(decoded[0], delta), stats, \
+            (res_payload[0][0], res_payload[1][0])
+
     # -- batched path ------------------------------------------------------
     def _batch_core(self, with_residual):
         """Jitted (delta -> threshold -> mask -> count) pipeline, built once

@@ -107,26 +107,41 @@ def make_dataset(scenario="basic", *, scale=0.02, server_frac=0.05,
 
 def make_fleet_dataset(num_clients, *, scenario="basic", scale=0.001,
                        jitter=0.3, server_frac=0.05, test_frac=0.1, seed=0,
-                       separation=8.0):
+                       separation=8.0, pool=None):
     """Fleet-scale federation: ``num_clients`` clients whose class counts
     tile the Table III rows cyclically, each scaled by ``scale`` and a
     per-client uniform size jitter of ±``jitter`` — a heterogeneous IoT
     fleet of arbitrary size with the paper's non-IID (or balanced) label
     structure. Same return shape as ``make_dataset``. Keep ``scale`` small:
     the fleet engine pads every client to the fleet-wide max batch count.
+
+    ``pool``: materialize only ``pool`` distinct client shards and alias
+    them cyclically across the fleet (clients share array REFERENCES, no
+    copies) — million-client scale runs in the memory of a ``pool``-client
+    dataset. The returned dict carries ``"pool"`` so the trainer's paged
+    data path stores just the distinct rows. Server/test splits are built
+    from the pool's counts (they only set labeled-split sizes).
     """
     table = BASIC_SCENARIO if scenario == "basic" else BALANCED_SCENARIO
     rng = np.random.default_rng(seed)
     model = _ClassModel(rng, separation=separation)
 
-    rows = table[np.arange(num_clients) % len(table)]
-    factors = rng.uniform(1.0 - jitter, 1.0 + jitter, (num_clients, 1))
+    P = num_clients if pool is None else max(1, min(int(pool), num_clients))
+    rows = table[np.arange(P) % len(table)]
+    factors = rng.uniform(1.0 - jitter, 1.0 + jitter, (P, 1))
     counts = np.maximum((rows * scale * factors).astype(int), 0)
     # every client holds at least one sample of its majority class so no
     # round sees an empty shard
     empty = counts.sum(axis=1) == 0
     counts[empty, np.argmax(rows[empty], axis=1)] = 1
-    return _build_federation(counts, model, rng, server_frac, test_frac)
+    data = _build_federation(counts, model, rng, server_frac, test_frac)
+    if pool is not None:
+        reps = -(-num_clients // P)
+        data["clients"] = (data["clients"] * reps)[:num_clients]
+        data["counts"] = np.tile(counts, (reps, 1))[:num_clients]
+        data["entropy"] = np.tile(data["entropy"], reps)[:num_clients]
+        data["pool"] = P
+    return data
 
 
 def _build_federation(counts, model, rng, server_frac, test_frac):

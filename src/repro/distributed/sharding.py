@@ -147,6 +147,14 @@ REPLICATED_SPEC = P()
 # packs/decodes only its local client rows, so compaction adds no collective
 CLIENT_PAYLOAD_SPECS = (CLIENT_STACK_SPEC, CLIENT_STACK_SPEC,
                         CLIENT_VEC_SPEC)
+# the paged client store (``client_store="paged"``) removes the (M, rcap)
+# device-resident residual source entirely: the round stages consume a
+# gathered (Kp, rcap) PARTICIPANT WINDOW of residual pages instead, sharded
+# row-wise exactly like every other per-client stack — the specs are
+# unchanged, only the array they partition shrank from fleet-sized to
+# round-sized. The alias documents that the window intentionally shares the
+# payload triple's layout (values / indices rows + per-row counts).
+CLIENT_WINDOW_SPECS = CLIENT_PAYLOAD_SPECS
 
 
 def payload_specs(wire_format):

@@ -315,6 +315,35 @@ def test_residual_hygiene_under_faults(data, engine):
     assert retired_any > 0, "profile produced no retirements; weak test"
 
 
+def test_paged_store_pins_fault_trace_and_retires_pages(data):
+    """client_store="paged" under REFERENCE_CHURN: the PR 5 fault hooks
+    (residual retirement on force/loss/churn, rejoiner resync) become page
+    operations, and the run must stay pinned to the resident layout —
+    bit-identical fault trace, fleet health dict and model metrics — while
+    every retired client's page reads back as an all-zero residual."""
+    mk = lambda store: FedS3ATrainer(data, FedS3AConfig(
+        rounds=12, seed=CHAOS_SEED, engine="batched", cnn=TEST_CNN,
+        error_feedback=True, traffic=REFERENCE_CHURN, round_deadline=700.0,
+        client_store=store))
+    ref = mk("resident")
+    tr = mk("paged")
+    retired_any = 0
+    for _ in range(12):
+        ref.run_round()
+        log = tr.run_round()
+        retired = (set(log.forced) | set(log.lost) | set(log.departed)
+                   | set(log.rejoined))
+        retired_any += len(retired)
+        for i in retired:
+            assert not tr.cstore.residual_row(i).any(), i
+    assert retired_any > 0, "profile produced no retirements; weak test"
+    assert _trace(tr) == _trace(ref), "paged fault trace diverged"
+    ref_out, out = ref.evaluate(), tr.evaluate()
+    for k in ref_out:
+        assert out[k] == ref_out[k], k     # same layout math: EXACT equality
+    assert tr.comm.aco == ref.comm.aco
+
+
 # --- the acceptance scenario -------------------------------------------------
 def test_acceptance_50_rounds_all_engines_bit_identical(data):
     """ISSUE 6 acceptance: crash 10% / loss 5% / churn on, 50 rounds on

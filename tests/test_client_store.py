@@ -1,0 +1,157 @@
+"""PagedClientStore unit contract: the host-paged per-client state must be
+indistinguishable from the resident layout through every access path —
+deferred-write ordering, retirement-as-invalidation, zero-fill of
+never-written pages, scatter-add CSR decode — and its device footprint must
+be a function of the gather window (K), never the fleet (M). The
+engine-level halves of the same contract (bit-identical runs, fault-trace
+pinning) live in test_engine_parity.py / test_chaos.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core.client_store import LAYOUTS, PagedClientStore
+
+M, N, RCAP = 32, 40, 10
+
+
+def _csr_page(rng, k):
+    vals = rng.normal(size=(k, RCAP)).astype(np.float32)
+    idx = np.stack([rng.choice(N, RCAP, replace=False)
+                    for _ in range(k)]).astype(np.int32)
+    return vals, idx
+
+
+def test_scatter_gather_round_trip_csr():
+    rng = np.random.default_rng(0)
+    st = PagedClientStore(M, N, RCAP)
+    ids = [3, 7, 21]
+    vals, idx = _csr_page(rng, len(ids))
+    st.scatter_csr(ids, vals, idx)
+    gv, gi = st.gather_csr(ids)
+    assert np.array_equal(np.asarray(gv), vals)
+    assert np.array_equal(np.asarray(gi), idx)
+
+
+def test_scatter_gather_round_trip_dense():
+    rng = np.random.default_rng(1)
+    st = PagedClientStore(M, N, RCAP, layout="dense")
+    ids = [0, 31]
+    rows = rng.normal(size=(2, N)).astype(np.float32)
+    st.scatter_dense(ids, rows)
+    assert np.array_equal(np.asarray(st.gather_dense(ids)), rows)
+    assert np.array_equal(st.residual_row(31), rows[1])
+
+
+def test_unwritten_and_foreign_rows_read_zero():
+    rng = np.random.default_rng(2)
+    st = PagedClientStore(M, N, RCAP)
+    vals, idx = _csr_page(rng, 1)
+    st.scatter_csr([5], vals, idx)
+    gv, gi = st.gather_csr([4, 5, 6])
+    assert not np.asarray(gv)[[0, 2]].any()
+    assert not np.asarray(gi)[[0, 2]].any()
+    assert np.array_equal(np.asarray(gv)[1], vals[0])
+    assert not st.residual_row(4).any()
+
+
+def test_deferred_queue_order_scatter_then_retire_zeroes():
+    rng = np.random.default_rng(3)
+    st = PagedClientStore(M, N, RCAP)
+    vals, idx = _csr_page(rng, 1)
+    st.scatter_csr([9], vals, idx)
+    st.retire([9])                       # same-round fault after the upload
+    assert not st.residual_row(9).any()
+    assert not st.valid[9]
+
+
+def test_deferred_queue_order_retire_then_scatter_keeps_data():
+    rng = np.random.default_rng(4)
+    st = PagedClientStore(M, N, RCAP)
+    vals, idx = _csr_page(rng, 1)
+    st.retire([9])
+    st.scatter_csr([9], vals, idx)       # rejoiner writes after retirement
+    assert st.residual_row(9).any()
+    assert st.valid[9]
+
+
+def test_residual_row_scatter_add_decodes_duplicate_columns():
+    st = PagedClientStore(M, N, RCAP)
+    vals = np.zeros((1, RCAP), np.float32)
+    idx = np.zeros((1, RCAP), np.int32)
+    vals[0, :3] = [1.0, 2.0, 4.0]
+    idx[0, :3] = [7, 7, 12]              # duplicate column must ADD
+    st.scatter_csr([0], vals, idx)
+    row = st.residual_row(0)
+    assert row[7] == 3.0 and row[12] == 4.0
+    assert row.sum() == 7.0
+
+
+def test_memmap_pages_persist_under_paged_dir(tmp_path):
+    rng = np.random.default_rng(5)
+    st = PagedClientStore(M, N, RCAP, paged_dir=tmp_path)
+    vals, idx = _csr_page(rng, 2)
+    st.scatter_csr([1, 2], vals, idx)
+    st.flush()
+    assert isinstance(st.res_vals, np.memmap)
+    on_disk = np.load(tmp_path / "res_vals.npy", mmap_mode="r")
+    assert np.array_equal(np.asarray(on_disk[[1, 2]]), vals)
+    gv, _ = st.gather_csr([1, 2])
+    assert np.array_equal(np.asarray(gv), vals)
+
+
+def test_record_participation_counters():
+    st = PagedClientStore(M, N, RCAP, layout="none")
+    st.record_participation([2, 5], 0)
+    st.record_participation([5], 3)
+    assert st.part_count[5] == 2 and st.part_count[2] == 1
+    assert st.last_round[5] == 3 and st.last_round[2] == 0
+    assert st.last_round[0] == -1
+    assert st.residual_store_bytes() == 0
+    assert not st.residual_row(5).any()
+
+
+def test_device_window_bytes_scale_with_k_not_m():
+    rng = np.random.default_rng(6)
+    small = PagedClientStore(M, N, RCAP)
+    big = PagedClientStore(100 * M, N, RCAP)
+    ids = [0, 1, 2, 3]
+    for st in (small, big):
+        vals, idx = _csr_page(rng, len(ids))
+        st.scatter_csr(ids, vals, idx)
+        st.gather_csr(ids)
+    assert small.device_window_bytes() == big.device_window_bytes()
+    assert big.host_bytes() > 50 * small.host_bytes()
+    # queued writeback pages count as device bytes until flushed
+    vals, idx = _csr_page(rng, len(ids))
+    small.scatter_csr(ids, vals, idx)
+    pending = small.device_window_bytes()
+    assert pending > big.device_window_bytes()
+    small.flush()
+    assert small.device_window_bytes() < pending
+
+
+def test_adopted_versions_count_toward_host_bytes():
+    st = PagedClientStore(M, N, RCAP, layout="none")
+    base = st.host_bytes()
+    st.adopt_versions(np.zeros(M, np.int64), np.zeros(M, bool))
+    assert st.host_bytes() == base + M * 8 + M
+
+
+def test_rejects_unknown_layout():
+    with pytest.raises(ValueError, match="layout"):
+        PagedClientStore(M, N, RCAP, layout="sparse")
+    assert LAYOUTS == ("csr", "dense", "none")
+
+
+def test_trainer_rejects_paged_with_dense_base_store():
+    from repro.configs.feds3a_cnn import CNNConfig
+    from repro.core import FedS3AConfig, FedS3ATrainer
+    from repro.data import make_dataset
+
+    data = make_dataset("basic", scale=0.0015, seed=0)
+    cnn = CNNConfig(name="feds3a-cnn-store", conv_filters=(8, 8), hidden=16)
+    with pytest.raises(ValueError, match="paged"):
+        FedS3ATrainer(data, FedS3AConfig(
+            cnn=cnn, base_store="dense", client_store="paged"))
+    with pytest.raises(ValueError, match="client_store"):
+        FedS3ATrainer(data, FedS3AConfig(cnn=cnn, client_store="mapped"))

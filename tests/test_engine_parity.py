@@ -63,6 +63,21 @@ MATRIX = [
     # paths stay pinned to each other (the old shared-key replay bug hid
     # here because both paths shared it)
     ("noniid-epochs2-k6", "basic", dict(C=0.6, tau=2, epochs=2)),
+    # participant-paged client store: host-resident EF pages + a device
+    # gather/scatter window of just the round's participants. Same cells
+    # as the resident EF rows above, so the dedicated paged-vs-resident
+    # test below can pin the two layouts bit-identical per engine.
+    ("noniid-paged-ef-k6", "basic",
+     dict(C=0.6, tau=2, error_feedback=True, client_store="paged")),
+    ("noniid-paged-dense-wire-k6", "basic",
+     dict(C=0.6, tau=2, wire_format="dense_masked", error_feedback=True,
+          client_store="paged")),
+]
+
+# (paged case, resident twin) pairs — identical configs modulo client_store
+PAGED_TWINS = [
+    ("noniid-paged-ef-k6", "noniid-ef-k6"),
+    ("noniid-paged-dense-wire-k6", "noniid-wire-dense-k6"),
 ]
 
 
@@ -119,6 +134,37 @@ def test_aco_within_quantile_flip_tolerance(matrix_runs, case, engine):
     _, ref = matrix_runs[case, "sequential"]
     _, res = matrix_runs[case, engine]
     assert abs(ref["aco"] - res["aco"]) < 2e-3, case
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_paged_store_bit_identical_to_resident(matrix_runs, engine):
+    """client_store="paged" is a memory layout, not an algorithm change:
+    for every engine the paged run must equal its resident twin EXACTLY —
+    schedules, metrics and ACO, no float tolerance. The paged gather
+    (host fancy-index + device transfer) decodes the same f32 values the
+    resident row gather reads, so even the reduction order is unchanged."""
+    for paged_case, resident_case in PAGED_TWINS:
+        rtr, rres = matrix_runs[resident_case, engine]
+        ptr, pres = matrix_runs[paged_case, engine]
+        assert np.array_equal(rtr.participation, ptr.participation), \
+            (paged_case, engine)
+        for lr, lp in zip(rtr.logs, ptr.logs):
+            assert lr.participants == lp.participants
+            assert lr.stalenesses == lp.stalenesses
+            assert lr.forced == lp.forced
+        for k in rres["metrics"]:
+            assert rres["metrics"][k] == pres["metrics"][k], \
+                (k, paged_case, engine)
+        assert rres["aco"] == pres["aco"], (paged_case, engine)
+
+
+def test_paged_device_window_smaller_than_resident_equiv(matrix_runs):
+    """The device window holds K participants, the resident equivalent all
+    M clients — the paged headline (device bytes flat in M) shows up even
+    at test scale as window < equivalent."""
+    tr, _ = matrix_runs["noniid-paged-ef-k6", "batched"]
+    assert tr.client_state_device_bytes() < \
+        tr.client_state_resident_equiv_bytes()
 
 
 def test_sharded_pads_indivisible_k(matrix_runs):
