@@ -42,6 +42,17 @@ M=1,000,000 scale cell (``SCALE_CELL``): a paged round over a million
 clients (64 pooled dataset shards, 512 participants/round, one device)
 that runs in both the full and smoke sweeps.
 
+Two large-model cells (``LM_CELLS``) run a REAL reduced transformer from
+the config zoo through the chunked parameter axis
+(``FedS3AConfig(model=..., chunk_size=...)``): two model sizes (~0.2M and
+~1.3M params) at the SAME chunk_size, each reporting
+``peak_delta_device_bytes`` — the trainer's bound on per-stage (K, chunk)
+delta buffers. The regression gate pins that bound FLAT IN N: the bigger
+model's peak must grow far slower than its parameter count (and stay under
+an absolute ceiling set by chunk_size alone), which is the chunked
+streaming claim. The flat CNN cells are untouched — their cell keys and
+gates are unchanged.
+
   PYTHONPATH=src python -m benchmarks.bench_fleet            # full sweep
   PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI: K<=64,
                                                              # D in {1,4}
@@ -68,11 +79,32 @@ SMOKE_CLIENTS = (8, 64)
 FULL_DEVICES = (1, 2, 4)
 SMOKE_DEVICES = (1, 4)
 
+# chunked large-model cells: two reduced-transformer sizes at ONE shared
+# chunk_size, so the gate can require peak delta memory flat in N. The
+# small preset trims the reduced qwen2-1.5b to ~0.2M params; the large one
+# is the full reduced config (~1.3M). Both stream over ~2-10 leaf-aligned
+# chunks — modest on purpose: the chunk loop unrolls inside the jits, so
+# chunk count is compile time.
+LM_PRESETS = {
+    "lm-small": dict(num_layers=1, d_model=128, d_ff=256, num_heads=2,
+                     num_kv_heads=1),
+    "lm-large": {},
+}
+LM_CHUNK_SIZE = 131072
+LM_CELLS = [{"model": m, "clients": 8, "rounds": 3, "warmup": 1}
+            for m in ("lm-small", "lm-large")]
+
+
+def _lm_config(preset):
+    from repro.configs import get_config, load_all
+    load_all()
+    return get_config("qwen2-1.5b").reduced(**LM_PRESETS[preset])
+
 
 def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
                base_store="versioned", faults=False, wire_format="csr",
                client_store="resident", pool=None, participants=None,
-               warmup=None):
+               warmup=None, model=None, chunk_size=0):
     """One (K, current-device-count) measurement. Import jax lazily so the
     driver process never initializes an XLA client.
 
@@ -86,7 +118,7 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     from repro.configs.feds3a_cnn import CNNConfig
     from repro.core import REFERENCE_CHURN, FedS3AConfig, FedS3ATrainer
     from repro.core.metrics import fleet_health
-    from repro.data import make_fleet_dataset
+    from repro.data import make_fleet_dataset, make_lm_dataset
 
     warmup = 3 if warmup is None else warmup   # distinct distribution-target
     # paged cells carry the 0.9x throughput gate, and a tiny fleet's round
@@ -105,6 +137,19 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     def build(store):
         # each trainer gets its own dataset object: identical content (same
         # seed), no shared mutable client dicts between twin runs
+        if model is not None:
+            # chunked large-model cell: a real reduced transformer as a
+            # final-token classifier over the synthetic token federation
+            mcfg = _lm_config(model)
+            return FedS3ATrainer(
+                make_lm_dataset(num_clients, vocab_size=mcfg.vocab_size,
+                                seq_len=12, samples_per_client=24,
+                                seed=seed),
+                FedS3AConfig(
+                    rounds=rounds + warmup, seed=seed, model=mcfg,
+                    chunk_size=chunk_size, C=C, batch_size=16,
+                    error_feedback=error_feedback, base_store=base_store,
+                    wire_format=wire_format, client_store=store))
         return FedS3ATrainer(
             make_fleet_dataset(num_clients, scale=0.0008, seed=seed,
                                pool=pool),
@@ -178,6 +223,14 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
         "faults": faults,
         "wire_format": wire_format,
         "client_store": client_store,
+        # chunked parameter axis: the model driven through the round, the
+        # resolved layout, and the trainer's peak per-stage device delta
+        # bound — what the flat-in-N gate pins across the LM cells
+        "model": model or "cnn",
+        "n_params": n_params,
+        "chunk_size": chunk_size,
+        "num_chunks": tr.layout.num_chunks if tr.chunked else 1,
+        "peak_delta_device_bytes": tr.peak_delta_device_bytes(),
         # per-client state split by residence: the paged store keeps a
         # device window of O(K * page) bytes — flat in M — while the
         # resident layout's device share IS the resident-equivalent
@@ -233,7 +286,8 @@ def worker(args):
                           error_feedback=args.ef, base_store=args.base_store,
                           faults=args.faults, wire_format=args.wire_format,
                           client_store=args.client_store, pool=args.pool,
-                          participants=args.participants, warmup=args.warmup)
+                          participants=args.participants, warmup=args.warmup,
+                          model=args.model, chunk_size=args.chunk_size)
                for k in args.clients]
     with open(args.out, "w") as f:
         json.dump(results, f)
@@ -336,8 +390,31 @@ def driver(args):
         results.extend(json.load(f))
     os.remove(out)
 
+    # the chunked large-model cells (both sweeps): two model sizes at one
+    # shared chunk_size, one device each — the flat-in-N peak-memory claim
+    for cell in LM_CELLS:
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if "--xla_force_host_platform_device_count" not in f]
+        env["XLA_FLAGS"] = " ".join(
+            flags + ["--xla_force_host_platform_device_count=1"])
+        out = f".bench_fleet_worker_{cell['model']}.json"
+        print(f"[bench_fleet] {cell['model']} chunked cell "
+              f"(chunk_size={LM_CHUNK_SIZE})", flush=True)
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_fleet", "--worker",
+             "--out", out, "--rounds", str(cell["rounds"]),
+             "--seed", str(args.seed), "--clients", str(cell["clients"]),
+             "--model", cell["model"], "--chunk-size", str(LM_CHUNK_SIZE),
+             "--warmup", str(cell["warmup"])],
+            env=env, check=True)
+        with open(out) as f:
+            results.extend(json.load(f))
+        os.remove(out)
+
     for r in results:
-        tag = " pg" if r.get("client_store", "resident") == "paged" else \
+        tag = f" {r['model']}" if r.get("model", "cnn") != "cnn" else \
+            " pg" if r.get("client_store", "resident") == "paged" else \
             (" q8" if r.get("wire_format", "csr") == "csr_q" else
              (" ef" if r["error_feedback"] else
               (" fx" if r.get("faults") else
@@ -362,11 +439,16 @@ def driver(args):
                   f"host {r['client_state_host_bytes']/1e6:.2f} MB, "
                   f"resident equiv "
                   f"{r['client_state_resident_equiv_bytes']/1e6:.2f} MB")
+        if r.get("model", "cnn") != "cnn":
+            print(f"        {r['n_params']:,} params over "
+                  f"{r['num_chunks']} chunks (chunk_size "
+                  f"{r['chunk_size']:,}): peak delta "
+                  f"{r['peak_delta_device_bytes']/1e6:.2f} MB on device")
     # scaling summary: rounds/sec at each K, normalized to the 1-device run
     summary = {}
     for r in results:
         if not r["error_feedback"] and r.get("base_store") != "dense" \
-                and not r.get("faults") \
+                and not r.get("faults") and r.get("model", "cnn") == "cnn" \
                 and r.get("wire_format", "csr") == "csr":
             summary.setdefault(r["clients"], {})[r["devices"]] = \
                 r["rounds_per_sec"]
@@ -405,6 +487,10 @@ def main():
     ap.add_argument("--participants", type=int, default=None,
                     help=argparse.SUPPRESS)
     ap.add_argument("--warmup", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--model", default=None, choices=tuple(LM_PRESETS),
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--chunk-size", dest="chunk_size", type=int, default=0,
                     help=argparse.SUPPRESS)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)

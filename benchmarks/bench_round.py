@@ -51,7 +51,8 @@ def bench_case(*, name, scale, cnn, C, batch_size, rounds=5, warmup=3,
 
     def mk(batched):
         return FedS3ATrainer(data, FedS3AConfig(
-            rounds=rounds + warmup, seed=seed, batched=batched, cnn=cnn,
+            rounds=rounds + warmup, seed=seed,
+            engine="batched" if batched else "sequential", cnn=cnn,
             C=C, batch_size=batch_size))
 
     seq, bat = mk(False), mk(True)

@@ -3,7 +3,7 @@
 Diffs a fresh smoke run of ``benchmarks.bench_fleet`` against the committed
 baseline (BENCH_fleet.json) cell by cell — cells are keyed by
 (clients, devices, error_feedback, base_store, faults, wire_format,
-client_store) — and fails the job when:
+client_store, model) — and fails the job when:
 
 * throughput regresses by more than ``--max-slowdown`` (default 30%) on
   the GEOMETRIC MEAN across cells, or by more than twice that on any
@@ -54,7 +54,17 @@ client_store) — and fails the job when:
   cell must stay within 4x the smallest-M cell's: the flat-in-M claim.
   (The 4x slop absorbs padded-batch-count variation between the pooled
   scale dataset and the per-K fleet datasets; a resident layout would blow
-  past it by orders of magnitude at 1M clients.)
+  past it by orders of magnitude at 1M clients.), or
+* the chunked-memory scale gate fails on the large-model cells: across
+  the ``model != "cnn"`` cells sharing one chunk_size (two reduced
+  transformers whose parameter counts differ by >= 2x),
+  ``peak_delta_device_bytes`` must grow at most HALF as fast as N
+  (flat-in-N up to leaf-packing raggedness), and every chunked cell's
+  peak must stay under the absolute ceiling ``24 * K * chunk_size``
+  bytes — a bound set by the chunk width alone, independent of N. A flat
+  (K, N) stage smuggled back into any round body blows both. The flat
+  CNN cells are keyed ``model="cnn"`` (the default for pre-chunked
+  baselines), so their comparisons are unchanged.
 
 The throughput comparison is absolute rounds/sec against a baseline
 measured on whatever machine last ran the full sweep — a systematically
@@ -86,7 +96,8 @@ def _cells(path):
         key = (r["clients"], r["devices"], bool(r.get("error_feedback")),
                r.get("base_store", "versioned"), bool(r.get("faults")),
                r.get("wire_format", "csr"),
-               r.get("client_store", "resident"))
+               r.get("client_store", "resident"),
+               r.get("model", "cnn"))
         out[key] = r
     return out
 
@@ -95,12 +106,13 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
     failures, skipped, rows, speeds = [], [], [], []
     for key, cand in sorted(candidate.items()):
         base = baseline.get(key)
-        k, d, ef, store, faults, wire, cstore = key
+        k, d, ef, store, faults, wire, cstore, model = key
         name = f"K={k} D={d}{' ef' if ef else ''}" + \
             (f" {store}" if store != "versioned" else "") + \
             (" faults" if faults else "") + \
             (f" {wire}" if wire != "csr" else "") + \
-            (f" {cstore}" if cstore != "resident" else "")
+            (f" {cstore}" if cstore != "resident" else "") + \
+            (f" {model}" if model != "cnn" else "")
         # base-store memory gate: the versioned store must stay sublinear —
         # strictly below the dense (M, N) equivalent — at every committed
         # fleet size (candidate-only check, no baseline cell needed)
@@ -113,7 +125,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                     f"dense equivalent "
                     f"{cand['base_store_dense_equiv_bytes']} B")
             dense_twin = candidate.get((k, d, ef, "dense", faults, wire,
-                                        cstore))
+                                        cstore, model))
             if dense_twin is not None:
                 if cand["base_store_bytes"] >= \
                         dense_twin.get("base_store_bytes", float("inf")):
@@ -133,7 +145,8 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
         # the byte ratio is deterministic and the throughput ratio is
         # insulated from runner drift (candidate-only, no baseline needed)
         if wire == "csr_q":
-            twin = candidate.get((k, d, ef, store, faults, "csr", cstore))
+            twin = candidate.get((k, d, ef, store, faults, "csr", cstore,
+                                  model))
             if twin is None:
                 skipped.append(f"{name} (no f32 csr twin cell)")
             else:
@@ -180,7 +193,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                 tspeed = cand.get("resident_twin_rounds_per_sec")
                 if not tspeed:
                     rtwin = candidate.get((k, d, ef, store, faults, wire,
-                                           "resident"))
+                                           "resident", model))
                     tspeed = rtwin["rounds_per_sec"] if rtwin else None
                 if tspeed is None:
                     skipped.append(f"{name} (no resident twin cell)")
@@ -252,6 +265,42 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                 f"paged client state is not flat in M: "
                 f"{b_hi:.0f} B/participant at M={m_hi} vs {b_lo:.0f} at "
                 f"M={m_lo} (gate: <=4x)")
+    # chunked-memory scale gate: across the large-model cells at one shared
+    # chunk_size, peak per-stage device delta bytes must be flat in N —
+    # sublinear growth between the two model sizes AND under an absolute
+    # ceiling set by the chunk width alone (candidate-only, no baseline
+    # cell needed)
+    by_chunk = {}
+    for key, c in candidate.items():
+        if key[7] != "cnn" and c.get("chunk_size") \
+                and c.get("peak_delta_device_bytes") \
+                and c.get("n_params"):
+            by_chunk.setdefault(c["chunk_size"], []).append(c)
+    for csize, cells in sorted(by_chunk.items()):
+        for c in cells:
+            ceiling = 24 * c["participants_per_round"] * csize
+            rows.append(f"  {c['model']:16s} N={c['n_params']:,} peak delta "
+                        f"{c['peak_delta_device_bytes']/1e6:.2f} MB "
+                        f"({c['num_chunks']} chunks)")
+            if c["peak_delta_device_bytes"] > ceiling:
+                failures.append(
+                    f"{c['model']}: peak delta device bytes "
+                    f"{c['peak_delta_device_bytes']} exceed the chunk-width "
+                    f"ceiling {ceiling} (24 * K * chunk_size) — a flat "
+                    f"(K, N) stage is back in a round body")
+        cells = sorted(cells, key=lambda c: c["n_params"])
+        lo, hi = cells[0], cells[-1]
+        n_ratio = hi["n_params"] / lo["n_params"]
+        if hi is not lo and n_ratio >= 2:
+            p_ratio = hi["peak_delta_device_bytes"] / \
+                max(lo["peak_delta_device_bytes"], 1)
+            rows.append(f"  {'chunked peak':16s} x{p_ratio:.2f} while N "
+                        f"grew x{n_ratio:.2f} (chunk_size {csize:,})")
+            if p_ratio > 0.5 * n_ratio:
+                failures.append(
+                    f"chunked peak delta memory is not flat in N: "
+                    f"x{p_ratio:.2f} growth against x{n_ratio:.2f} params "
+                    f"at chunk_size {csize} (gate: <= half the N growth)")
     if speeds:
         geomean = math.exp(sum(math.log(s) for s in speeds) / len(speeds))
         rows.append(f"  {'geomean':16s} rounds/s x{geomean:5.2f}")

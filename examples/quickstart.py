@@ -152,6 +152,43 @@ aggregate ``fleet`` health dict (``degraded_rounds``,
 ``mean_quorum_frac``, ``resyncs``, ...) — bit-identical across all three
 engines for the same seed (pinned in tests/test_chaos.py).
 
+Chunked parameter axis & per-layer sparsity
+-------------------------------------------
+Every engine flattens parameters to one length-N vector and stacks the
+round's K participants as (K, N); for the paper CNN (N ~ 1e5) the per-stage
+(K, N) delta buffers are free, but for the real LM configs the repo carries
+they are the device-memory wall. ``FedS3AConfig(chunk_size=...)`` partitions
+the flat axis into chunks **aligned to parameter-leaf boundaries**
+(``core.param_layout.ParamLayout``) and streams every
+(K, N)-materializing stage — the sparse-diff encode, the EF residual
+update, the versioned-ring advance, the fused server blends — one chunk at
+a time, so peak device delta memory is O(K * chunk_size) instead of
+O(K * N) (``trainer.peak_delta_device_bytes()`` reports the bound; the CI
+regression gate pins it flat in N). With ``model=<a configs ModelConfig>``
+the same trainer federates a real transformer as a final-token classifier
+(see examples/fl_large_model.py for the reduced qwen2-1.5b at 1.3M
+params); ``cnn=`` keeps driving the paper CNN, chunked or not.
+
+Three contracts worth knowing:
+
+* ``chunk_size=0`` (the default) and any chunk_size >= N are exactly the
+  historical flat path — the degenerate single-chunk layout resolves to no
+  layout at all, and the parity suite pins those runs bit-identical to the
+  seed behaviour per engine and wire format.
+* A real multi-chunk run is NOT bit-identical to flat by design: the p0.2
+  quantile thresholds become per-chunk statistics instead of per-row
+  globals. That is also the feature: ``layer_keep_frac={"embed": 0.05}``
+  gives any leaf(-name substring) its own keep fraction, and leaf
+  alignment guarantees an overridden leaf never shares a chunk — per-layer
+  sparsity with no extra kernel work. ``wire_breakdown()["layout"]``
+  reports the resolved layout truthfully.
+* Keep the chunk count modest (a handful to a few tens, i.e. pick
+  chunk_size ~ N/10): the chunk loop is unrolled inside the jitted round
+  bodies, so XLA compile time scales with the number of chunks — hundreds
+  of chunks compile for minutes for no extra memory win. Chunked rounds
+  require the default ``base_store="versioned"`` and a CSR-family wire
+  format (csr / csr_q).
+
 Client state paging
 -------------------
 ``FedS3AConfig(client_store=...)`` selects where per-client state (the

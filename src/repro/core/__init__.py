@@ -2,6 +2,7 @@
 semi-asynchronous learning (scheduler, aggregation, pseudo-labeling,
 staleness control, sparse-diff communication, fault injection, baselines)."""
 from repro.core.feds3a import FedS3AConfig, FedS3ATrainer  # noqa: F401
+from repro.core.param_layout import ParamLayout  # noqa: F401
 from repro.core.base_store import VersionedBaseStore  # noqa: F401
 from repro.core.client_store import PagedClientStore  # noqa: F401
 from repro.core.scheduler import FleetStalledError  # noqa: F401

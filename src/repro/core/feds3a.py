@@ -56,6 +56,7 @@ suite pins against the sequential reference.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -72,10 +73,8 @@ from repro.core.functions import (adaptive_learning_rates, staleness_fn,
                                   supervised_weight)
 from repro.core.grouping import group_clients, init_index, kmeans_device
 from repro.core.metrics import fleet_health, weighted_metrics
-from repro.core.pseudo_label import (class_histogram, class_histogram_batch,
-                                     make_batched_client_epoch,
-                                     make_client_epoch, make_server_epoch,
-                                     make_server_epoch_flat, predict_fn)
+from repro.core.model_adapter import make_adapter
+from repro.core.param_layout import ParamLayout
 from repro.core.scheduler import SemiAsyncScheduler, paper_latency
 from repro.core.sparse_comm import (CSR_FORMATS, SparseComm, flatten_tree,
                                     unflatten_like)
@@ -85,7 +84,6 @@ from repro.distributed.sharding import (CLIENT_AXIS, CLIENT_PAYLOAD_SPECS,
                                         RING_SPEC, client_mesh, padded_rows,
                                         payload_specs)
 from repro.kernels.ops import csr_decode
-from repro.models.cnn import cnn_param_count, init_cnn
 from repro.optimizer import adam_init
 
 ENGINES = ("sequential", "batched", "sharded")
@@ -206,6 +204,27 @@ class FedS3AConfig:
                                         # engine="batched"/"sequential" when
                                         # ``engine`` is unset
     cnn: object = None                  # CNNConfig override (None: paper §V-B)
+    model: object = None                # model-zoo ModelConfig (configs.base)
+                                        # federated as a final-token
+                                        # classifier via core.model_adapter;
+                                        # None = the paper CNN (``cnn``)
+    chunk_size: int = 0                 # > 0: partition the flat parameter
+                                        # axis into leaf-aligned chunks
+                                        # (core.param_layout) and stream the
+                                        # round's delta pipeline chunk by
+                                        # chunk — peak device delta memory is
+                                        # O(K * chunk) instead of O(K * N).
+                                        # 0 = the flat single-chunk path
+    param_layout: object = None         # explicit ParamLayout (wins over
+                                        # chunk_size); a single-chunk layout
+                                        # with no overrides routes through
+                                        # the flat path bit-identically
+    layer_keep_frac: object = None      # per-layer sparsity: {leaf-name
+                                        # substring: keep_frac | (keep_frac,
+                                        # residual_frac) | {"keep_frac": ...,
+                                        # "residual_frac": ...}}. Requires
+                                        # chunking (a chunk never spans two
+                                        # leaves with different overrides)
     seed: int = 0
     latency_jitter: float = 0.05
     traffic: object = None              # fault profile (core.traffic.
@@ -258,6 +277,17 @@ class FedS3ATrainer:
         self.data = data
         self.M = len(data["clients"])
         self.cnn = self.cfg.cnn if self.cfg.cnn is not None else CNN_CONFIG
+        # one adapter owns every model closure (epochs, histograms, predict)
+        # — the paper CNN delegates to the exact pseudo_label factories the
+        # trainer used to bind directly, a model-zoo ModelConfig routes to
+        # the LM-as-classifier adapter
+        model = self.cfg.model if self.cfg.model is not None else self.cnn
+        self.adapter = make_adapter(
+            model, batch_size=self.cfg.batch_size,
+            threshold=self.cfg.threshold, l1=self.cfg.l1,
+            use_kernel=self.cfg.use_kernels, epochs=self.cfg.epochs)
+        self.layout = self._resolve_layout()
+        self.chunked = self.layout is not None
         self.engine = self._select_engine()
         if self.cfg.base_store not in BASE_STORES:
             raise ValueError(f"base_store must be one of {BASE_STORES}, "
@@ -272,8 +302,10 @@ class FedS3ATrainer:
                 "client_store='paged' requires base_store='versioned': the "
                 "paged layout keeps no per-client base state at all — a "
                 "client's base is its ring version, already host-side")
-        # legacy attribute: any stacked-flat-state engine counts as batched
-        self.batched = self.engine != "sequential"
+        # legacy attribute: any stacked-flat-state engine counts as batched;
+        # the chunked round body is stacked on every engine (the sequential
+        # engine's chunked rounds share it — same RNG stream, same math)
+        self.batched = self.engine != "sequential" or self.chunked
         self.mesh = client_mesh() if self.engine == "sharded" else None
         self.rng = jax.random.PRNGKey(self.cfg.seed)
 
@@ -281,23 +313,14 @@ class FedS3ATrainer:
         self._stage2_jits = {}      # sharded aggregate+distribute stages
         self._groupw_jits = {}      # sharded on-device kmeans+weights
 
-        self.client_epoch = make_client_epoch(
-            self.cnn, batch_size=self.cfg.batch_size,
-            threshold=self.cfg.threshold, l1=self.cfg.l1,
-            use_kernel=self.cfg.use_kernels)
-        self.server_epoch = make_server_epoch(
-            self.cnn, batch_size=self.cfg.batch_size, l1=self.cfg.l1)
-        self.predict = predict_fn(self.cnn)
-        self.histogram = class_histogram(self.cnn)
+        self.client_epoch = self.adapter.client_epoch
+        self.server_epoch = self.adapter.server_epoch
+        self.predict = self.adapter.predict
+        self.histogram = self.adapter.histogram
         if self.batched:
-            self.batched_epoch = make_batched_client_epoch(
-                self.cnn, batch_size=self.cfg.batch_size,
-                threshold=self.cfg.threshold, l1=self.cfg.l1,
-                use_kernel=self.cfg.use_kernels, epochs=self.cfg.epochs)
-            self.histogram_batch = class_histogram_batch(
-                self.cnn, batch_size=self.cfg.batch_size)
-            self.server_epoch_flat = make_server_epoch_flat(
-                self.cnn, batch_size=self.cfg.batch_size, l1=self.cfg.l1)
+            self.batched_epoch = self.adapter.batched_epoch
+            self.histogram_batch = self.adapter.histogram_batch
+            self.server_epoch_flat = self.adapter.server_epoch_flat
             self._build_padded_data()
 
         sizes = [len(c["x"]) for c in data["clients"]]
@@ -324,7 +347,8 @@ class FedS3ATrainer:
                                wire_format=self.cfg.wire_format,
                                capacity=self.cfg.wire_capacity,
                                residual_frac=self.cfg.residual_frac,
-                               q_dtype=self.cfg.q_dtype)
+                               q_dtype=self.cfg.q_dtype,
+                               layout=self.layout)
         # the engines branch on the *effective* wire format: disabled
         # sparsification always moves dense payloads. Both CSR formats
         # share the engine plumbing (payload tuples thread through the
@@ -337,6 +361,17 @@ class FedS3ATrainer:
         # payload tuple arity (excl. stored): (vals, idx) vs the quantized
         # (qvals, qoffs, qcnt, scales) quadruple
         self._payload_arity = {"csr": 2, "csr_q": 4}.get(self.wire_fmt, 0)
+        if self.chunked:
+            if not self._csr_wire:
+                raise ValueError(
+                    "chunked layouts require a CSR-family wire format with "
+                    "sparse_comm enabled: the chunked round streams "
+                    "compacted per-chunk payloads")
+            if self.base_store != "versioned":
+                raise ValueError(
+                    "chunked layouts require base_store='versioned': chunk "
+                    "bases are gathered from the reconstruction ring one "
+                    "chunk at a time")
 
         self.g_fn = staleness_fn(self.cfg.staleness_function)
         self.participation = np.zeros((0, self.M))
@@ -344,6 +379,27 @@ class FedS3ATrainer:
         self.logs: list[RoundLog] = []
 
         self._init_models()
+
+    def _resolve_layout(self):
+        """Resolve chunk_size / param_layout / layer_keep_frac to the
+        trainer's effective :class:`ParamLayout` — or ``None`` for the flat
+        path. A resolved layout that ``is_flat`` (one chunk, no overrides)
+        also maps to ``None``: the degenerate single-chunk layout IS the
+        historical flat path, routed through exactly the same code."""
+        cfg = self.cfg
+        layout = cfg.param_layout
+        if layout is None:
+            if cfg.layer_keep_frac and not cfg.chunk_size:
+                raise ValueError(
+                    "layer_keep_frac requires chunk_size > 0 or an explicit "
+                    "param_layout: per-layer sparsity is a property of the "
+                    "leaf-aligned chunks")
+            if not cfg.chunk_size:
+                return None
+            layout = ParamLayout.from_template(
+                self.adapter.template, cfg.chunk_size,
+                overrides=cfg.layer_keep_frac)
+        return None if layout.is_flat else layout
 
     def _select_engine(self):
         """Resolve cfg.engine / legacy cfg.batched to a concrete engine.
@@ -360,11 +416,16 @@ class FedS3ATrainer:
         """
         cfg = self.cfg
         engine = cfg.engine
+        if cfg.batched is not None:
+            warnings.warn(
+                "FedS3AConfig(batched=...) is deprecated since the engine "
+                "selector landed; use engine='batched' / engine="
+                "'sequential' instead", DeprecationWarning, stacklevel=3)
         if engine is None and cfg.batched is not None:
             engine = "batched" if cfg.batched else "sequential"
         if engine is None:
             stacked = (jax.default_backend() != "cpu"
-                       or cnn_param_count(self.cnn) <= 300_000)
+                       or self.adapter.param_count() <= 300_000)
             if not stacked:
                 engine = "sequential"
             else:
@@ -426,7 +487,7 @@ class FedS3ATrainer:
     def _init_models(self):
         cfg = self.cfg
         self.rng, k = jax.random.split(self.rng)
-        params = init_cnn(self.cnn, k)
+        params = self.adapter.init(k)
         opt = adam_init(params)
         # Algorithm 1: server warms up on labeled data before distributing
         for e in range(cfg.init_server_epochs):
@@ -484,7 +545,16 @@ class FedS3ATrainer:
                     # the whole fleet's parameters every round.
                     self._base_rows = [self._global_flat] * self.M
             if cfg.error_feedback and not self.paged:
-                if self.engine == "sharded":
+                if self.chunked:
+                    # chunked EF pages: every engine stores per-client
+                    # residuals as (M, rcap_total) CSR segments — the
+                    # concatenation of the per-chunk capacities, holding
+                    # GLOBAL column indices (chunk_encode_body re-localizes
+                    # per chunk)
+                    rcap = self.comm.residual_capacity_total()
+                    self._res_vals = jnp.zeros((self.M, rcap), jnp.float32)
+                    self._res_idx = jnp.zeros((self.M, rcap), jnp.int32)
+                elif self.engine == "sharded":
                     if self._csr_wire:
                         # sparse residual store: per-client residuals live in
                         # capacity-bounded CSR rows — O(M * rcap) instead of
@@ -524,8 +594,10 @@ class FedS3ATrainer:
             # none with EF off — the store still carries the counters)
             layout = ("csr" if self._csr_wire else "dense") \
                 if cfg.error_feedback else "none"
+            rcap = self.comm.residual_capacity_total() if self.chunked \
+                else self.comm.residual_capacity(n)
             self.cstore = PagedClientStore(
-                self.M, n, self.comm.residual_capacity(n), layout=layout,
+                self.M, n, rcap, layout=layout,
                 paged_dir=cfg.paged_dir)
             self.cstore.adopt_versions(self.store.client_version,
                                        self.store.detached)
@@ -720,7 +792,7 @@ class FedS3ATrainer:
             # resident engines' sequence
             self.cstore.retire(ids)
             return
-        if self.engine == "sharded":
+        if self.chunked or self.engine == "sharded":
             fidx = jnp.asarray(ids)
             if self._csr_wire:
                 shape = (len(ids), self._res_vals.shape[1])
@@ -743,6 +815,8 @@ class FedS3ATrainer:
 
     # ------------------------------------------------------------------
     def run_round(self):
+        if self.chunked:
+            return self._run_round_chunked()
         if self.engine == "sharded":
             return self._run_round_sharded()
         if self.engine == "batched":
@@ -1200,6 +1274,245 @@ class FedS3ATrainer:
         return self._round_epilogue(prev_time, ev)
 
     # ------------------------------------------------------------------
+    # chunked round body (core.param_layout): all engines stream the delta
+    # pipeline one chunk at a time
+    def _chunk_upload_fn(self, with_hist):
+        """Upload-encode over the chunked parameter axis, one jit: the
+        per-chunk encode loop is unrolled inside, so XLA's buffer liveness
+        keeps one chunk's delta/decode temporaries (O(K * max_chunk)) live
+        at a time. The base is a ring-gather CLOSURE ``(s, e) ->
+        ring[:, s:e][slots]`` — no (K, N) base copy materializes for the
+        encode. Returns (flat payload tuple [arity * num_chunks entries],
+        stored_total (K,), hists | None, new residual pages | None)."""
+        key = ("chunk", self.cfg.error_feedback, with_hist)
+        fn = self._upload_jits.get(key)
+        if fn is not None:
+            return fn
+        ef = self.cfg.error_feedback
+        body = self.comm.chunk_encode_body(ef)
+        plan = self.comm.chunk_plan()
+        hist = self.histogram_batch
+
+        def encode(trained, ring, slots, xs, vs, rvals, ridx):
+            def base(s, e):
+                return ring[:, s:e][slots]
+            if ef:
+                payloads, stored, decoded, (nrv, nri) = body(
+                    trained, base, rvals, ridx)
+            else:
+                payloads, stored, decoded = body(trained, base)
+                nrv = nri = None
+            stored_total = stored[0]
+            for st in stored[1:]:
+                stored_total = stored_total + st
+            hists = None
+            if with_hist:
+                # histograms need the full uploaded model for the forward
+                # pass; build it by scattering each chunk's decode into the
+                # gathered base (one (K, N) buffer, same as training held)
+                up = ring[slots]
+                for p, dec in zip(plan, decoded):
+                    up = up.at[:, p["s"]:p["e"]].add(dec)
+                hists = hist(up, xs, vs)
+            flat_payload = tuple(x for pay in payloads for x in pay)
+            return flat_payload, stored_total, hists, nrv, nri
+
+        if ef:
+            @jax.jit
+            def fn(trained, ring, slots, xs, vs, rvals, ridx):
+                return encode(trained, ring, slots, xs, vs, rvals, ridx)
+        else:
+            @jax.jit
+            def fn(trained, ring, slots, xs, vs):
+                return encode(trained, ring, slots, xs, vs, None, None)
+
+        self._upload_jits[key] = fn
+        return fn
+
+    def _chunk_finalize_fn(self):
+        """Chunked server blend + ring advance, one jit: each chunk's
+        weighted client sum consumes that chunk's compacted payload against
+        a per-chunk ring-gathered base (``agg.blend_flat_csr`` /
+        ``_csr_q`` on (K, nc) slices — chunk-local indices decode in
+        place), and the chain-transition encode streams the same chunks.
+        The (K, N) uploaded stack of the flat finalize never exists."""
+        if self._finalize_jit is not None:
+            return self._finalize_jit
+        plan = self.comm.chunk_plan()
+        arity = self._payload_arity
+        advance = self.comm.chunk_advance_body()
+        quantized = self.wire_fmt == "csr_q"
+
+        @jax.jit
+        def fn(server_flat, ring, slots, payload, w, fw, prev):
+            new = []
+            for ci, p in enumerate(plan):
+                s, e = p["s"], p["e"]
+                pc = payload[ci * arity:(ci + 1) * arity]
+                base_c = ring[:, s:e][slots]
+                if quantized:
+                    new_c = agg.blend_flat_csr_q(
+                        server_flat[s:e], base_c, *pc, w, fw,
+                        use_kernel=False)
+                else:
+                    new_c = agg.blend_flat_csr(
+                        server_flat[s:e], base_c, pc[0], pc[1], w, fw,
+                        use_kernel=False)
+                new.append(new_c)
+            new_flat = jnp.concatenate(new)
+            recon, chain = advance(new_flat, prev)
+            return (new_flat, recon) + chain
+
+        self._finalize_jit = fn
+        return fn
+
+    def _train_sharded_chunked(self):
+        """Train-only shard_map stage for chunked sharded rounds: each
+        device trains its row shard from the replicated ring (client-local,
+        no collectives). Encode/finalize then stream chunks unsharded —
+        the chunked pipeline's O(K * chunk) liveness is the point; the
+        training stage keeps the multi-device speedup."""
+        fn = self._stage1_jits.get("chunk_train")
+        if fn is not None:
+            return fn
+        mesh = self.mesh
+        epoch = self.batched_epoch
+
+        def shard_fn(ring, slots, xs, vs, lrs, keys):
+            base = ring[slots]
+            trained, _ = epoch(base, xs, vs, lrs, keys)
+            return trained
+
+        fn = jax.jit(shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(RING_SPEC, RING_SLOT_SPEC, _ROW3, _ROW2, _ROW, _ROW2),
+            out_specs=_ROW2, check_rep=False))
+        self._stage1_jits["chunk_train"] = fn
+        return fn
+
+    def _run_round_chunked(self):
+        """One round streamed over the chunked parameter axis, shared by
+        all three engines (the sequential engine runs the stacked epoch —
+        same RNG stream, same per-client math; the sharded engine shards
+        the training stage only). Encode, blend and ring advance all
+        iterate chunks, so no stage materializes a (K, N) delta."""
+        cfg = self.cfg
+        prev_time, ev, lrs = self._round_prologue()
+        participants, stale, forced, t = ev
+        r = self.global_version
+        part_ids = [run.client for run in participants]
+        K = len(part_ids)
+        n = self._global_flat.shape[0]
+
+        # same RNG stream as the flat engines: one split per participant
+        # in arrival order, then the server's split
+        keys = self._split_keys(K)
+
+        if self.engine == "sharded":
+            D = self.mesh.devices.size
+            Kp = padded_rows(K, D)
+            pad = Kp - K
+            pad_ids = part_ids + part_ids[:1] * pad
+            xs, vs = self._gather_data(pad_ids)
+            if pad:
+                keys_p = jnp.concatenate(
+                    [keys, jnp.zeros((pad,) + keys.shape[1:], keys.dtype)])
+                # pad rows see no valid samples -> pure no-op epochs
+                vs = vs * jnp.asarray(
+                    np.concatenate([np.ones(K, np.float32),
+                                    np.zeros(pad, np.float32)]))[:, None]
+            else:
+                keys_p = keys
+            lrs_p = jnp.asarray(
+                np.concatenate([lrs[part_ids], np.zeros(pad)]), jnp.float32)
+            slots_p = self.store.slots_for(pad_ids)
+            trained = self._train_sharded_chunked()(
+                self.store.ring, slots_p, xs, vs, lrs_p, keys_p)
+            trained = trained[:K]
+            xs, vs = xs[:K], vs[:K]
+            slots = slots_p[:K]
+        else:
+            xs, vs = self._gather_data(part_ids)
+            slots = self.store.slots_for(part_ids)
+            base_flat = self.store.gather(part_ids)
+            trained, _ = self.batched_epoch(base_flat, xs, vs,
+                                            lrs[part_ids], keys)
+
+        with_hist = cfg.group_based and K > 1
+        upload = self._chunk_upload_fn(with_hist)
+        if cfg.error_feedback:
+            if self.paged:
+                rv, rx = self.cstore.gather_csr(part_ids)
+            else:
+                idxK = jnp.asarray(part_ids)
+                rv = _gather_rows(self._res_vals, idxK)
+                rx = _gather_rows(self._res_idx, idxK)
+            payload, stored_total, hists_dev, nrv, nri = upload(
+                trained, self.store.ring, slots, xs, vs, rv, rx)
+            if self.paged:
+                self.cstore.scatter_csr(part_ids, nrv, nri)
+            else:
+                self._res_vals = _scatter_rows(self._res_vals, idxK, nrv)
+                self._res_idx = _scatter_rows(self._res_idx, idxK, nri)
+        else:
+            payload, stored_total, hists_dev, _, _ = upload(
+                trained, self.store.ring, slots, xs, vs)
+        # one ledger entry for the whole chunked batch; the layout-aware
+        # framing (per-chunk row_ptr, scales, block tables) is booked by
+        # the comm channel's chunk-aware accounting
+        self.comm.account_batch_csr(stored_total, n, K)
+
+        # server supervised epoch on the current global model (Eq. 6), in
+        # flat space; the RNG split order matches the flat engines
+        self.rng, k = jax.random.split(self.rng)
+        sp_flat, self.server_opt, _ = self.server_epoch_flat(
+            self._global_flat, self.server_opt,
+            self.data["server"]["x"], self.data["server"]["y"], cfg.lr, k)
+
+        groups = None
+        if with_hist:
+            hists = np.asarray(hists_dev)
+            groups = group_clients(hists, min(cfg.num_groups, K),
+                                   seed=cfg.seed)
+
+        fw = supervised_weight(r, C=cfg.C, M=self.M,
+                               mode=cfg.supervised_weight_mode)
+        w = agg.combine_weights(
+            [len(self.data["clients"][i]["x"]) for i in part_ids],
+            [stale[i] for i in part_ids], self.g_fn, groups)
+
+        self.global_version += 1
+        prev = self.store.latest()
+        out = self._chunk_finalize_fn()(
+            sp_flat, self.store.ring, slots, payload,
+            jnp.asarray(w, jnp.float32), jnp.float32(fw), prev)
+        new_flat, recon, chain = out[0], out[1], out[2:]
+        self._advance_versioned(recon, chain, ev, part_ids)
+        self._global_flat = new_flat
+        self._gp_tree = None      # materialized lazily on demand
+
+        return self._round_epilogue(prev_time, ev)
+
+    def peak_delta_device_bytes(self):
+        """Analytic peak DEVICE bytes of one round's delta pipeline: the
+        widest live set any encode/blend stage holds for the k = ceil(C*M)
+        expected participants. Flat path: delta + decode (K, N) f32 pairs
+        (plus the EF residual expansion and spill under error feedback) and
+        the (K, cap) f32+int32 payload. Chunked: the same buffers at
+        max_chunk width — O(K * chunk), flat in N, which is the number the
+        bench/regression gate pins across model sizes."""
+        k = max(int(np.ceil(self.cfg.C * self.M)), 1)
+        n = self._global_flat.shape[0]
+        if self.chunked:
+            chunk = self.layout.max_chunk
+            cap = max(p["cap"] for p in self.comm.chunk_plan())
+        else:
+            chunk = n
+            cap = self.comm.payload_capacity(n) if self._csr_wire else n
+        bufs = 2 + (2 if self.cfg.error_feedback else 0)
+        return int(4 * k * chunk * bufs + 8 * k * cap)
+
+    # ------------------------------------------------------------------
     # sharded fleet engine: shard_map over the ``clients`` mesh axis
     def _stage1_sharded(self, with_residual, with_hist):
         """Train + upload-encode (+ pseudo-label histograms), one jitted
@@ -1587,6 +1900,8 @@ class FedS3ATrainer:
             # memmapped); the device-side share is in
             # ``client_state_device_bytes``
             return self.cstore.residual_store_bytes()
+        if self.chunked:
+            return int((self._res_vals.size + self._res_idx.size) * 4)
         if self.engine == "sharded":
             if self._csr_wire:
                 return int((self._res_vals.size + self._res_idx.size) * 4)
@@ -1611,7 +1926,10 @@ class FedS3ATrainer:
         if self.batched:
             total += int(self._x_pad.nbytes + self._valid_pad.nbytes)
         if self.cfg.error_feedback:
-            if self.engine == "sharded":
+            if self.chunked:
+                total += int((self._res_vals.size
+                              + self._res_idx.size) * 4)
+            elif self.engine == "sharded":
                 if self._csr_wire:
                     total += int((self._res_vals.size
                                   + self._res_idx.size) * 4)
@@ -1658,7 +1976,9 @@ class FedS3ATrainer:
         if self.cfg.error_feedback:
             n = self._global_flat.shape[0]
             if self._csr_wire:
-                total += self.M * self.comm.residual_capacity(n) * 8
+                rcap = self.comm.residual_capacity_total() if self.chunked \
+                    else self.comm.residual_capacity(n)
+                total += self.M * rcap * 8
             else:
                 total += self.M * n * 4
         return total
@@ -1667,7 +1987,7 @@ class FedS3ATrainer:
         params = params if params is not None else self.global_params
         test = self.data["test"]
         preds = np.asarray(self.predict(params, jnp.asarray(test["x"])))
-        return weighted_metrics(test["y"], preds, self.cnn.num_classes)
+        return weighted_metrics(test["y"], preds, self.adapter.num_classes)
 
     def train(self, rounds=None, *, eval_every=0):
         rounds = rounds or self.cfg.rounds

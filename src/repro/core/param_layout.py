@@ -1,0 +1,202 @@
+"""Chunked parameter-axis layout (§IV-F at real-model scale).
+
+Every fleet engine flattens client parameters to one vector of length N
+and stacks the round's K participants as ``(K, N)``.  For the paper's CNN
+(N ≈ 1e5) materializing per-stage ``(K, N)`` delta buffers is free; for
+the real LM configs the repo carries (``configs/qwen2_1_5b.py``,
+``configs/xlstm_125m.py``) it is the memory wall.  :class:`ParamLayout`
+partitions ``[0, N)`` into contiguous chunks **aligned to parameter-leaf
+boundaries** so the sparse-diff encode, the versioned-ring advance, and
+the fused server blends stream one chunk at a time — peak device delta
+memory is O(K · max_chunk) instead of O(K · N).
+
+Leaf alignment is what makes per-layer sparsity fall out: a chunk never
+spans two leaves with different ``keep_frac`` overrides, so the per-row
+quantile thresholds the kernels already compute become per-layer
+thresholds for free (embedding vs head sparsity differ; FedIoT-style
+on-device fleets want aggressive embedding sparsity and conservative
+head sparsity).
+
+The degenerate single-chunk layout *is* the historical flat path: a
+resolved layout with ``num_chunks == 1`` routes through exactly the same
+code as no layout at all, which is how the engine parity matrix pins
+chunked-off bit-identical to the seed behaviour.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+__all__ = ["ParamLayout", "leaf_sizes"]
+
+
+def _path_name(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future pytree key kinds
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def leaf_sizes(template):
+    """``[(name, size), ...]`` for a pytree of arrays/ShapeDtypeStructs, in
+    the same traversal order ``flatten_tree`` uses to build the flat vector."""
+    leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+    return [(_path_name(path), int(np.prod(leaf.shape)) if leaf.shape else 1)
+            for path, leaf in leaves]
+
+
+def _match_override(name, overrides):
+    """First override whose pattern is a substring of the leaf name.
+
+    Values may be a float (keep_frac), a ``(keep_frac, residual_frac)``
+    pair, or a dict with ``keep_frac`` / ``residual_frac`` keys.
+    """
+    if not overrides:
+        return (None, None)
+    for pat, val in overrides.items():
+        if pat in name:
+            if isinstance(val, dict):
+                return (val.get("keep_frac"), val.get("residual_frac"))
+            if isinstance(val, (tuple, list)):
+                return (val[0], val[1] if len(val) > 1 else None)
+            return (float(val), None)
+    return (None, None)
+
+
+@dataclass(frozen=True)
+class ParamLayout:
+    """Immutable partition of the flat parameter axis ``[0, n)``.
+
+    ``bounds`` are contiguous ``(start, end)`` half-open chunk spans that
+    cover ``[0, n)`` exactly.  ``keep_frac`` / ``residual_frac`` hold one
+    entry per chunk; ``None`` means "use the channel default" so a layout
+    without overrides accounts bytes identically to the flat path.
+    """
+
+    n: int
+    bounds: tuple
+    keep_frac: tuple = ()
+    residual_frac: tuple = ()
+    names: tuple = field(default=(), compare=False)
+
+    def __post_init__(self):
+        if not self.bounds:
+            raise ValueError("ParamLayout needs at least one chunk")
+        pos = 0
+        for s, e in self.bounds:
+            if s != pos or e <= s:
+                raise ValueError(
+                    f"chunk bounds must be contiguous and non-empty; got "
+                    f"({s}, {e}) at offset {pos}")
+            pos = e
+        if pos != self.n:
+            raise ValueError(f"chunks cover [0, {pos}) but n={self.n}")
+        c = len(self.bounds)
+        if not self.keep_frac:
+            object.__setattr__(self, "keep_frac", (None,) * c)
+        if not self.residual_frac:
+            object.__setattr__(self, "residual_frac", (None,) * c)
+        if len(self.keep_frac) != c or len(self.residual_frac) != c:
+            raise ValueError("per-chunk frac tuples must match num_chunks")
+
+    # -- shape facts ------------------------------------------------------
+    @property
+    def num_chunks(self):
+        return len(self.bounds)
+
+    @property
+    def sizes(self):
+        return tuple(e - s for s, e in self.bounds)
+
+    @property
+    def max_chunk(self):
+        return max(self.sizes)
+
+    @property
+    def is_flat(self):
+        """Single chunk with no sparsity overrides == the historical path."""
+        return (self.num_chunks == 1
+                and self.keep_frac[0] is None
+                and self.residual_frac[0] is None)
+
+    # -- constructors -----------------------------------------------------
+    @staticmethod
+    def flat(n):
+        return ParamLayout(n=int(n), bounds=((0, int(n)),))
+
+    @classmethod
+    def from_template(cls, template, chunk_size, *, overrides=None):
+        """Partition a parameter pytree into leaf-aligned chunks.
+
+        Consecutive leaves sharing the same (possibly absent) sparsity
+        override are greedily packed into chunks of at most ``chunk_size``
+        parameters; a leaf larger than ``chunk_size`` is split internally
+        with a ragged last piece.  Leaves with distinct overrides never
+        share a chunk, so per-layer ``keep_frac`` maps exactly onto
+        per-chunk thresholds.
+        """
+        chunk_size = int(chunk_size)
+        if chunk_size <= 0:
+            raise ValueError("chunk_size must be positive")
+        bounds, keeps, residuals, names = [], [], [], []
+        cur_start, cur_end, cur_ov, cur_names = None, None, None, []
+
+        def close():
+            nonlocal cur_start
+            if cur_start is not None:
+                bounds.append((cur_start, cur_end))
+                keeps.append(cur_ov[0])
+                residuals.append(cur_ov[1])
+                names.append("+".join(cur_names))
+                cur_start = None
+
+        offset = 0
+        for name, size in leaf_sizes(template):
+            ov = _match_override(name, overrides)
+            if size > chunk_size:
+                close()
+                for s in range(offset, offset + size, chunk_size):
+                    e = min(s + chunk_size, offset + size)
+                    bounds.append((s, e))
+                    keeps.append(ov[0])
+                    residuals.append(ov[1])
+                    names.append(name)
+            elif (cur_start is not None and ov == cur_ov
+                  and cur_end - cur_start + size <= chunk_size):
+                cur_end += size
+                cur_names.append(name)
+            else:
+                close()
+                cur_start, cur_end, cur_ov = offset, offset + size, ov
+                cur_names = [name]
+            offset += size
+        close()
+        return cls(n=offset, bounds=tuple(bounds), keep_frac=tuple(keeps),
+                   residual_frac=tuple(residuals), names=tuple(names))
+
+    # -- reporting --------------------------------------------------------
+    def describe(self):
+        return {
+            "n": self.n,
+            "num_chunks": self.num_chunks,
+            "max_chunk": self.max_chunk,
+            "min_chunk": min(self.sizes),
+            "overridden_chunks": sum(
+                1 for k, r in zip(self.keep_frac, self.residual_frac)
+                if k is not None or r is not None),
+        }
+
+    def __repr__(self):  # keep log lines short at hundreds of chunks
+        return (f"ParamLayout(n={self.n}, num_chunks={self.num_chunks}, "
+                f"max_chunk={self.max_chunk})")

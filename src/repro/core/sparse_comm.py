@@ -200,7 +200,7 @@ class SparseComm:
 
     def __init__(self, threshold="p0.2", *, use_kernel=True, enabled=True,
                  wire_format="csr", capacity=None, cap_factor=CAP_FACTOR,
-                 residual_frac=RESIDUAL_FRAC, q_dtype="int8"):
+                 residual_frac=RESIDUAL_FRAC, q_dtype="int8", layout=None):
         if wire_format not in WIRE_FORMATS:
             raise ValueError(f"wire_format must be one of {WIRE_FORMATS}, "
                              f"got {wire_format!r}")
@@ -208,6 +208,8 @@ class SparseComm:
             raise ValueError(f"q_dtype must be one of {Q_DTYPES}, "
                              f"got {q_dtype!r}")
         self.threshold = threshold
+        self.layout = layout            # core.param_layout.ParamLayout | None
+        self._chunk_plan = None
         self.use_kernel = use_kernel
         self.enabled = enabled
         self.wire_format = wire_format
@@ -248,11 +250,28 @@ class SparseComm:
         (scale_bytes, block_table_bytes) for one n-param csr_q row — the
         f32 absmax scale (omitted in fp16 mode, where scales are the
         constant 1) and the int16 per-block count table. Zero under f32
-        CSR, whose indices are self-describing absolute columns."""
+        CSR, whose indices are self-describing absolute columns.
+
+        Under a chunked layout the per-row framing is per CHUNK per row —
+        one absmax scale and one block table per chunk — so a full-model
+        (n == layout.n) csr_q message books the chunked wire truthfully."""
         if self.wire_format != "csr_q":
             return 0, 0
         scale = 0 if self.q_dtype == "fp16" else 4
+        chunks = self._layout_chunks(n)
+        if chunks > 1:
+            table = sum(2 * max((nc + 511) // 512, 1)
+                        for nc in self.layout.sizes)
+            return scale * chunks, table
         return scale, 2 * max((n + 511) // 512, 1)
+
+    def _layout_chunks(self, n):
+        """Number of layout chunks an n-param message spans: the layout
+        applies only to full-model messages (n == layout.n); everything
+        else (server data messages, sub-vector payloads) stays flat."""
+        if self.layout is not None and n == self.layout.n:
+            return self.layout.num_chunks
+        return 1
 
     # -- threshold ---------------------------------------------------------
     def _quantile_frac(self):
@@ -392,6 +411,187 @@ class SparseComm:
         self._csr_cores[key] = core
         return core
 
+    # -- chunked parameter axis (core.param_layout) ------------------------
+    def set_layout(self, layout):
+        """Attach a :class:`~repro.core.param_layout.ParamLayout`. Accounting
+        for full-model messages (row_ptr / scales / block tables) switches to
+        the per-chunk framing; a ``None`` or single-chunk layout keeps the
+        flat books bit-identical."""
+        self.layout = layout
+        self._chunk_plan = None
+
+    def chunk_plan(self):
+        """Per-chunk encode plan derived from the layout: a list of dicts
+        ``{s, e, nc, keep, cap, rcap, roff}`` where ``keep`` is the chunk's
+        keep-fraction override (``None`` -> channel default), ``cap`` the
+        payload capacity at the chunk's width, and ``[roff, roff + rcap)``
+        the chunk's segment of the concatenated EF residual page."""
+        if self._chunk_plan is not None:
+            return self._chunk_plan
+        if self.layout is None:
+            raise ValueError("chunk_plan() requires a layout (set_layout)")
+        default_frac = self._quantile_frac()
+        plan, roff = [], 0
+        for c in range(self.layout.num_chunks):
+            s, e = self.layout.bounds[c]
+            nc = e - s
+            keep = self.layout.keep_frac[c]
+            frac = keep if keep is not None else default_frac
+            if self.capacity is not None:
+                cap = max(1, min(int(self.capacity), nc))
+            elif frac is None:          # absolute threshold: nnz unbounded
+                cap = nc
+            else:
+                cap = max(1, min(nc, int(math.ceil(self.cap_factor
+                                                   * frac * nc))))
+            rfrac = self.layout.residual_frac[c]
+            rfrac = rfrac if rfrac is not None else self.residual_frac
+            rcap = max(1, min(nc, int(math.ceil(rfrac * nc))))
+            plan.append({"s": s, "e": e, "nc": nc, "keep": keep, "cap": cap,
+                         "rfrac": rfrac, "rcap": rcap, "roff": roff})
+            roff += rcap
+        self._chunk_plan = plan
+        return plan
+
+    def residual_capacity_total(self):
+        """Total per-client EF residual capacity under the layout: the sum
+        of the per-chunk capacities (== the width of the concatenated
+        residual page a chunked engine stores per client)."""
+        return sum(p["rcap"] for p in self.chunk_plan())
+
+    def _chunk_thresholds(self, delta_c, keep):
+        """(K,) per-row thresholds for one chunk: the chunk's keep-fraction
+        override when present, else the channel's mode."""
+        if keep is not None:
+            return local_quantile_thresholds(delta_c, keep)
+        return self._row_thresholds(delta_c)
+
+    def _chunk_encode_one(self, delta_c, plan_c):
+        """One chunk of the CSR-family encode: (K, nc) delta -> (payload
+        wire tuple, stored (K,), decoded (K, nc)). Always the jnp reference
+        oracles — per-chunk widths are ragged and the caller fuses this into
+        its own jit, where the elementwise/cumsum oracles compile to the
+        same fused loops the Pallas grids hand-build at flat N."""
+        nc, cap = plan_c["nc"], plan_c["cap"]
+        thr = self._chunk_thresholds(delta_c, plan_c["keep"])
+        vals, idx, _ = kref.csr_compact2d_ref(delta_c, thr, cap)
+        dense, stored = kref.csr_capped_mask_ref(delta_c, thr, cap)
+        if self.wire_format != "csr_q":
+            return (vals, idx), stored, dense
+        qvals, scales = kref.csr_quantize2d_ref(vals, stored,
+                                                q_dtype=self.q_dtype)
+        offs, counts = kref.csr_pack_indices_ref(idx, stored, nc)
+        decoded = kref.quantize_dense_ref(dense, scales, q_dtype=self.q_dtype)
+        return (qvals, offs, counts, scales), stored, decoded
+
+    def chunk_encode_body(self, with_residual=False):
+        """Per-chunk encode pipeline over (K, N) stacks — the chunked twin
+        of :meth:`csr_core`. NOT jitted: the caller fuses the returned
+        callable into its own jitted round stage, and the chunk loop is
+        unrolled there so XLA's buffer liveness keeps at most one chunk's
+        delta/decode temporaries (O(K * max_chunk)) live at a time while
+        ``new``/``base`` stay the already-materialized parameter stacks.
+
+        Without residual: ``fn(new, base) -> (payloads, stored, decoded)``
+        — per-chunk lists of wire tuples, (K,) stored counts and (K, nc)
+        dequantized decodes; payload column indices are chunk-local.
+
+        With residual: ``fn(new, base, rvals, ridx) -> (payloads, stored,
+        decoded, (rvals', ridx'))`` where the EF residual pages are
+        (K, rcap_total) concatenations of per-chunk CSR segments holding
+        GLOBAL column indices (segment c spans ``[roff_c, roff_c+rcap_c)``
+        and only carries columns from chunk c; zero-value pads sit at the
+        chunk start, so the per-chunk scatter decode is exact).
+
+        ``base`` may be a (K, N) array or a callable ``(s, e) -> (K, e-s)``
+        — the versioned engines pass a ring-gather closure so no (K, N)
+        base copy is ever materialized.
+        """
+        plan = self.chunk_plan()
+
+        def base_cols(base, s, e):
+            return base(s, e) if callable(base) else base[:, s:e]
+
+        if not with_residual:
+            def body(new, base):
+                payloads, stored, decoded = [], [], []
+                for p in plan:
+                    s, e = p["s"], p["e"]
+                    delta_c = new[:, s:e] - base_cols(base, s, e)
+                    pay, st, dec = self._chunk_encode_one(delta_c, p)
+                    payloads.append(pay)
+                    stored.append(st)
+                    decoded.append(dec)
+                return payloads, stored, decoded
+            return body
+
+        def body(new, base, rvals, ridx):
+            payloads, stored, decoded = [], [], []
+            new_rv, new_ri = [], []
+            for p in plan:
+                s, e, nc = p["s"], p["e"], p["nc"]
+                roff, rcap = p["roff"], p["rcap"]
+                rv_c = rvals[:, roff:roff + rcap]
+                # global -> chunk-local columns; zero-value pads sit at
+                # global index 0 and clip to local 0, scattering nothing
+                ri_c = jnp.clip(ridx[:, roff:roff + rcap] - s, 0, nc - 1)
+                res_c = kref.csr_decode_ref(rv_c, ri_c, nc)
+                delta_c = new[:, s:e] - base_cols(base, s, e) + res_c
+                pay, st, dec = self._chunk_encode_one(delta_c, p)
+                res_new = delta_c - dec     # sub-threshold + overflow
+                                            # (+ csr_q rounding error)
+                r_thr = local_quantile_thresholds(res_new, p["rfrac"])
+                rv, ri, _ = kref.csr_compact2d_ref(res_new, r_thr, rcap)
+                payloads.append(pay)
+                stored.append(st)
+                decoded.append(dec)
+                new_rv.append(rv)
+                new_ri.append(ri + s)       # store GLOBAL columns
+            return payloads, stored, decoded, \
+                (jnp.concatenate(new_rv, axis=1),
+                 jnp.concatenate(new_ri, axis=1))
+        return body
+
+    def chunk_advance_body(self):
+        """Chunked twin of the versioned ring's advance encode: one flat
+        (n,) transition ``new - prev`` encoded chunk-by-chunk, returning
+        ``(recon, chain_payload)`` where ``recon`` is the full decoded
+        reconstruction and ``chain_payload`` matches the flat chain-entry
+        contract — ``(vals, idx, stored)`` under csr with the per-chunk
+        payloads concatenated and indices made global, ``(qvals, offs,
+        counts, scales, stored)`` under csr_q with a (num_chunks,) scale
+        vector (one absmax per chunk: exactly the bytes the chunked wire
+        ships, so the chain's byte ledger stays truthful). Chain entries
+        are accounting-only (virtual clients never decode them), so the
+        concatenation is never unpacked."""
+        plan = self.chunk_plan()
+        quantized = self.wire_format == "csr_q"
+
+        def body(new_flat, prev_flat):
+            recon, parts, stored_sum = [], [], 0
+            for p in plan:
+                s, e = p["s"], p["e"]
+                delta_c = (new_flat[s:e] - prev_flat[s:e])[None]
+                pay, st, dec = self._chunk_encode_one(delta_c, p)
+                recon.append(prev_flat[s:e] + dec[0])
+                stored_sum = stored_sum + st[0]
+                if quantized:
+                    parts.append((pay[0][0], pay[1][0], pay[2][0],
+                                  pay[3][0]))
+                else:
+                    # global columns; value-0 pads land at the chunk start
+                    parts.append((pay[0][0], pay[1][0] + s))
+            cat = tuple(jnp.concatenate([p[i] for p in parts])
+                        for i in range(2))
+            if quantized:
+                scales = jnp.stack([p[3] for p in parts])
+                counts = jnp.concatenate([p[2] for p in parts])
+                chain = cat + (counts, scales, stored_sum)
+            else:
+                chain = cat + (stored_sum,)
+            return jnp.concatenate(recon), chain
+        return body
+
     def account_batch_csr(self, stored_nnz, params_per_message, n_messages):
         """Record an n_messages-row CSR-family batch whose on-device stored
         counts are ``stored_nnz``: one value + one index per stored element
@@ -402,7 +602,8 @@ class SparseComm:
             return
         vb, ib = self.elem_bytes()
         self._pending_payload.append((jnp.sum(stored_nnz), vb, ib))
-        self.row_ptr_bytes += 4 * (n_messages + 1)
+        self.row_ptr_bytes += \
+            4 * (n_messages + 1) * self._layout_chunks(params_per_message)
         sb, bb = self.row_overhead_bytes(params_per_message)
         self.scales_bytes += sb * n_messages
         self.block_table_bytes += bb * n_messages
@@ -424,7 +625,8 @@ class SparseComm:
         vb, ib = self.elem_bytes()
         self._pending_payload.append((stored_total_dev, vb, ib))
         if row_ptr_rows:
-            self.row_ptr_bytes += 4 * (row_ptr_rows + 1)
+            self.row_ptr_bytes += \
+                4 * (row_ptr_rows + 1) * self._layout_chunks(params_per_message)
             sb, bb = self.row_overhead_bytes(params_per_message)
             self.scales_bytes += sb * row_ptr_rows
             self.block_table_bytes += bb * row_ptr_rows
@@ -452,14 +654,21 @@ class SparseComm:
         are index-decoding side information and report under
         ``indices_bytes``; the per-row absmax scales get their own
         ``scales_bytes`` component. Components always sum to
-        ``payload_bytes``."""
+        ``payload_bytes``. The nested ``layout`` entry reports the chunked
+        parameter axis the framing was booked under (``num_chunks == 1``
+        on an unchunked channel)."""
         self._materialize()
+        if self.layout is not None:
+            layout = self.layout.describe()
+        else:
+            layout = {"num_chunks": 1}
         return {"values_bytes": self._values_host,
                 "indices_bytes": self._indices_host + self.block_table_bytes,
                 "scales_bytes": float(self.scales_bytes),
                 "row_ptr_bytes": float(self.row_ptr_bytes),
                 "dense_payload_bytes": self._dense_payload_host,
-                "payload_bytes": self.payload_bytes}
+                "payload_bytes": self.payload_bytes,
+                "layout": layout}
 
     def deliver(self, stats):
         """Book a payload's bytes-on-wire at DELIVERY time.

@@ -89,72 +89,6 @@ def run_one(arch, shape_name, *, multi_pod=False, fsdp=True, moe_impl="einsum",
     return rec
 
 
-def run_fl(arch, *, multi_pod=False, num_clients=16, local_steps=4,
-           batch_per_step=1, seq_len=4096, keep_frac=0.2, verbose=True):
-    """Dry-run the FedS3A round (core/distributed_fl.py) for an LM arch:
-    clients = the data mesh axis, aggregation = weighted reduction."""
-    import dataclasses
-    from repro.core.distributed_fl import fl_input_specs, make_fl_train_step
-    from repro.distributed.sharding import mesh_axis_sizes, param_specs
-    from repro.models import lm as _lm
-
-    cfg = get_config(arch)
-    if cfg.moe:
-        cfg = dataclasses.replace(cfg, moe_groups=num_clients)
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    axis_sizes = mesh_axis_sizes(mesh)
-    params_shape = jax.eval_shape(
-        lambda: _lm.init_params(cfg, jax.random.PRNGKey(0)))
-    pspecs = param_specs(cfg, params_shape, axis_sizes, fsdp=False)
-    batch, mask, stal, sizes = fl_input_specs(
-        cfg, num_clients=num_clients, local_steps=local_steps,
-        batch_per_step=batch_per_step, seq_len=seq_len)
-    P = jax.sharding.PartitionSpec
-    bspec = jax.tree.map(lambda l: P("data", *([None] * (l.ndim - 1))), batch)
-    step = make_fl_train_step(cfg, num_clients=num_clients, local_steps=local_steps,
-                              keep_frac=keep_frac)
-    t0 = time.time()
-    with use_mesh(mesh):
-        lowered = jax.jit(step, in_shardings=jit_shardings(mesh, (
-            pspecs, bspec, P("data"), P("data"), P("data")))).lower(
-            params_shape, batch, mask, stal, sizes)
-        compiled = lowered.compile()
-    rl = RL.analyze(f"{arch}:fl_round", compiled, chips=mesh.devices.size,
-                    model_flops=6.0 * cfg.active_param_count() *
-                    num_clients * local_steps * batch_per_step * seq_len)
-    mem = compiled.memory_analysis()
-    rec = {
-        "arch": arch, "shape": f"fl_round(M={num_clients},ls={local_steps})",
-        "mesh": "2x16x16" if multi_pod else "16x16", "kind": "fl",
-        "notes": f"keep_frac={keep_frac}",
-        "lower_s": 0.0, "compile_s": round(time.time() - t0, 1),
-        "per_device": {
-            "flops": rl.flops, "hbm_bytes": rl.hbm_bytes,
-            "collective_bytes": rl.coll_bytes,
-            "collectives": {k: v for k, v in rl.coll_breakdown.items() if v},
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-        },
-        "roofline": {
-            "t_compute_ms": rl.t_compute * 1e3,
-            "t_memory_ms": rl.t_memory * 1e3,
-            "t_collective_ms": rl.t_collective * 1e3,
-            "bottleneck": rl.bottleneck,
-            "model_flops": rl.model_flops,
-            "useful_flops_ratio": rl.useful_flops_ratio,
-        },
-    }
-    if verbose:
-        print(f"== {arch}:fl_round on {rec['mesh']} ({rec['notes']}) "
-              f"compile {rec['compile_s']}s")
-        print(f"   roofline ms: compute={rl.t_compute*1e3:.2f} "
-              f"memory={rl.t_memory*1e3:.2f} collective={rl.t_collective*1e3:.2f} "
-              f"-> {rl.bottleneck}  useful={rl.useful_flops_ratio:.3f}")
-        print(f"   collectives/dev: {rec['per_device']['collectives']}")
-    return rec
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -166,22 +100,7 @@ def main():
     ap.add_argument("--attn-impl", default="flash", choices=["flash", "ref"])
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
-    ap.add_argument("--fl", action="store_true",
-                    help="dry-run the FedS3A federated round instead of the "
-                         "train/serve steps")
-    ap.add_argument("--fl-keep-frac", type=float, default=0.2)
     args = ap.parse_args()
-
-    if args.fl:
-        archs = [args.arch or "qwen2-1.5b"]
-        meshes = {"pod": [False], "multipod": [True],
-                  "both": [False, True]}[args.mesh]
-        results = [run_fl(a, multi_pod=mp, keep_frac=args.fl_keep_frac)
-                   for a in archs for mp in meshes]
-        if args.out:
-            with open(args.out, "w") as f:
-                json.dump(results, f, indent=1)
-        return
 
     archs = list_configs() if args.all or not args.arch else [args.arch]
     archs = [a for a in archs if a != "feds3a-cnn"]

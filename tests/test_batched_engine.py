@@ -25,7 +25,8 @@ def both_engines(data):
     out = {}
     for batched in (False, True):
         tr = FedS3ATrainer(data, FedS3AConfig(
-            rounds=4, seed=0, batched=batched, cnn=TEST_CNN))
+            rounds=4, seed=0, engine="batched" if batched else "sequential",
+            cnn=TEST_CNN))
         res = tr.train()
         out[batched] = (tr, res)
     return out
@@ -83,18 +84,38 @@ def test_auto_engine_selection(data):
     tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, engine="batched",
                                           cnn=TEST_CNN))
     assert tr.engine == "batched"
-    # legacy alias maps onto engine= when engine is unset
-    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=False,
-                                          cnn=TEST_CNN))
+    # legacy alias still maps onto engine= when engine is unset (it warns;
+    # test_batched_kwarg_deprecated pins the warning itself)
+    with pytest.deprecated_call():
+        tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=False,
+                                              cnn=TEST_CNN))
     assert tr.engine == "sequential"
     assert tr.batched is False
-    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=True,
-                                          cnn=TEST_CNN))
+    with pytest.deprecated_call():
+        tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=True,
+                                              cnn=TEST_CNN))
     assert tr.engine == "batched"
     # engine= beats the legacy flag
-    tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, engine="sharded",
-                                          batched=False, cnn=TEST_CNN))
+    with pytest.deprecated_call():
+        tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, engine="sharded",
+                                              batched=False, cnn=TEST_CNN))
     assert tr.engine == "sharded"
+
+
+def test_batched_kwarg_deprecated(data):
+    """FedS3AConfig(batched=...) is a deprecated alias for engine=: it must
+    raise DeprecationWarning at trainer construction (where the engine is
+    resolved) while keeping its historical behaviour, and engine= must stay
+    silent."""
+    import warnings
+    with pytest.deprecated_call(match="engine="):
+        tr = FedS3ATrainer(data, FedS3AConfig(rounds=1, batched=True,
+                                              cnn=TEST_CNN))
+    assert tr.engine == "batched"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        FedS3ATrainer(data, FedS3AConfig(rounds=1, engine="batched",
+                                         cnn=TEST_CNN))
 
 
 @pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a client mesh")

@@ -222,6 +222,117 @@ def test_sharded_round_defers_all_accounting(datasets):
     assert tr.comm._pending_payload == []
 
 
+# --- chunked parameter axis (ParamLayout streaming rounds) ------------------
+# Two pins. First: the degenerate single-chunk layout IS the flat path — a
+# chunk_size >= N resolves to no layout at all, so those cells must equal
+# the existing flat matrix cells EXACTLY (bit-identity, no tolerance), per
+# engine and wire format. Second: with a real multi-chunk layout the three
+# engines stay pinned to each other (sequential == batched bitwise — same
+# RNG stream, same stacked bodies — and sharded within the usual matrix
+# tolerances). Chunked-vs-flat is NOT bit-identical by design: per-chunk
+# quantile thresholds legitimately differ from per-row global quantiles.
+
+# (id, flat twin in MATRIX, config overrides) — twins chosen so csr and
+# csr_q (+EF) wires both get a single-chunk bit-identity pin
+CHUNK_TWINS = [
+    ("chunk-csr-k6", "noniid-tau2-k6", dict(C=0.6, tau=2)),
+    ("chunk-csrq-ef-k6", "noniid-wire-csrq-k6",
+     dict(C=0.6, tau=2, wire_format="csr_q", error_feedback=True)),
+]
+
+_CHUNKED_SIZE = 2600       # ~5 leaf-aligned chunks on the 10385-param CNN
+
+
+@pytest.fixture(scope="module")
+def chunk_runs(datasets):
+    """Single-chunk (degenerate) and multi-chunk cells for every engine."""
+    out = {}
+    for case, _twin, overrides in CHUNK_TWINS:
+        for engine in ENGINES:
+            for label, size in (("one", 10**6), ("many", _CHUNKED_SIZE)):
+                tr = FedS3ATrainer(datasets["basic"], FedS3AConfig(
+                    rounds=3, seed=0, engine=engine, cnn=TEST_CNN,
+                    chunk_size=size, **overrides))
+                out[case, engine, label] = (tr, tr.train())
+    return out
+
+
+@pytest.mark.parametrize("case", [c[0] for c in CHUNK_TWINS])
+@pytest.mark.parametrize("engine", ENGINES)
+def test_single_chunk_bit_identical_to_flat(matrix_runs, chunk_runs, case,
+                                            engine):
+    """chunk_size >= N packs every leaf into one chunk, the layout resolves
+    to flat, and the run routes through the historical code paths — so it
+    must equal the flat matrix cell EXACTLY, schedules and floats alike."""
+    twin = dict((c, t) for c, t, _ in CHUNK_TWINS)[case]
+    tr, res = chunk_runs[case, engine, "one"]
+    rtr, rres = matrix_runs[twin, engine]
+    assert tr.layout is None and not tr.chunked
+    assert np.array_equal(rtr.participation, tr.participation)
+    for lr, lc in zip(rtr.logs, tr.logs):
+        assert lr.participants == lc.participants
+        assert lr.stalenesses == lc.stalenesses
+        assert lr.forced == lc.forced
+    for k in rres["metrics"]:
+        assert rres["metrics"][k] == res["metrics"][k], (k, case, engine)
+    assert rres["aco"] == res["aco"], (case, engine)
+
+
+@pytest.mark.parametrize("case", [c[0] for c in CHUNK_TWINS])
+def test_chunked_sequential_equals_batched_bitwise(chunk_runs, case):
+    """All chunked engines share one stacked round body (the sequential
+    engine runs it at K rows like the batched engine), so these two cells
+    agree bitwise — same RNG stream, same reduction order."""
+    _, ref = chunk_runs[case, "sequential", "many"]
+    _, res = chunk_runs[case, "batched", "many"]
+    for k in ref["metrics"]:
+        assert ref["metrics"][k] == res["metrics"][k], (k, case)
+    assert ref["aco"] == res["aco"], case
+
+
+@pytest.mark.parametrize("case", [c[0] for c in CHUNK_TWINS])
+def test_chunked_sharded_within_matrix_tolerance(chunk_runs, case):
+    """The sharded chunked round shards only the training stage; encode and
+    finalize stream unsharded, so it stays within the usual matrix
+    tolerances of the sequential chunked reference."""
+    rtr, ref = chunk_runs[case, "sequential", "many"]
+    tr, res = chunk_runs[case, "sharded", "many"]
+    assert np.array_equal(rtr.participation, tr.participation)
+    for ls, le in zip(rtr.logs, tr.logs):
+        assert ls.participants == le.participants
+        assert ls.stalenesses == le.stalenesses
+        assert ls.forced == le.forced
+    for k in ref["metrics"]:
+        assert abs(ref["metrics"][k] - res["metrics"][k]) < 1e-4, (k, case)
+    assert abs(ref["aco"] - res["aco"]) < 2e-3, case
+
+
+def test_chunked_layout_resolved_and_reported(chunk_runs):
+    """The multi-chunk cells really stream: a resolved leaf-aligned layout,
+    truthful wire_breakdown reporting, and a peak device delta bound that
+    beats the flat engine's O(K*N)."""
+    tr, _ = chunk_runs["chunk-csr-k6", "batched", "many"]
+    ftr, _ = chunk_runs["chunk-csr-k6", "batched", "one"]
+    assert tr.chunked and tr.layout.num_chunks > 1
+    assert tr.layout.max_chunk <= _CHUNKED_SIZE
+    wb = tr.comm.wire_breakdown()
+    assert wb["layout"]["num_chunks"] == tr.layout.num_chunks
+    assert tr.peak_delta_device_bytes() < ftr.peak_delta_device_bytes()
+
+
+def test_per_layer_keep_frac_round_trips(datasets):
+    """layer_keep_frac overrides land on their own chunks (leaf alignment)
+    and the run still completes; the layout reports the overridden count."""
+    tr = FedS3ATrainer(datasets["basic"], FedS3AConfig(
+        rounds=2, seed=0, engine="batched", cnn=TEST_CNN,
+        chunk_size=_CHUNKED_SIZE, layer_keep_frac={"conv": 0.05}))
+    tr.train()
+    desc = tr.layout.describe()
+    assert desc["overridden_chunks"] >= 1
+    assert tr.comm.wire_breakdown()["layout"]["overridden_chunks"] == \
+        desc["overridden_chunks"]
+
+
 # --- on-device k-means parity (the grouping host-sync removal) -------------
 def test_kmeans_device_matches_host_on_separated_points():
     """Well-separated histograms -> identical assignments AND identical

@@ -294,6 +294,163 @@ def test_csr_row_ptr():
                                   [0, 3, 3, 8, 9])
 
 
+# --- chunked parameter axis (ParamLayout + per-chunk encode) ----------------
+from repro.core.param_layout import ParamLayout  # noqa: E402
+
+
+def _template(sizes):
+    """Pytree of 1-D leaves with collision-free, order-stable names."""
+    return {f"leaf{i:02d}": jax.ShapeDtypeStruct((s,), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=900),
+                   min_size=1, max_size=8),
+    chunk_size=st.integers(min_value=64, max_value=700),
+)
+def test_param_layout_covers_and_aligns(sizes, chunk_size):
+    """from_template partitions [0, N) exactly (contiguity is validated by
+    the dataclass itself), never exceeds chunk_size, and never lets a chunk
+    hold a PART of one leaf plus any piece of another: a chunk either
+    contains whole leaves or is wholly inside one oversized (split) leaf."""
+    lay = ParamLayout.from_template(_template(sizes), chunk_size)
+    assert lay.n == sum(sizes)
+    assert lay.bounds[0][0] == 0 and lay.bounds[-1][1] == lay.n
+    assert all(e - s <= chunk_size for s, e in lay.bounds)
+    edges, off = [], 0
+    for s_ in sizes:
+        edges.append((off, off + s_))
+        off += s_
+    for cs, ce in lay.bounds:
+        for ls, le in edges:
+            if cs < le and ls < ce:           # overlap
+                assert (ls >= cs and le <= ce) or (cs >= ls and ce <= le)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    size=st.integers(min_value=65, max_value=5000),
+    chunk_size=st.integers(min_value=64, max_value=512),
+)
+def test_param_layout_ragged_last_chunk(size, chunk_size):
+    """An oversized leaf splits into full-width pieces plus one ragged tail
+    of exactly ``size % chunk_size`` (when the leaf doesn't divide)."""
+    lay = ParamLayout.from_template(_template([size]), chunk_size)
+    widths = lay.sizes
+    assert sum(widths) == size
+    if size <= chunk_size:
+        assert widths == (size,)
+    else:
+        assert all(w == chunk_size for w in widths[:-1])
+        assert widths[-1] == (size % chunk_size or chunk_size)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=16, max_value=400),
+                   min_size=2, max_size=6),
+    keep=st.floats(min_value=0.05, max_value=0.35),
+)
+def test_param_layout_override_never_shares_a_chunk(sizes, keep):
+    """A keep_frac override isolates its leaf: every chunk carrying the
+    overridden leaf carries ONLY that leaf, and exactly those chunks get
+    the per-chunk keep_frac (per-layer sparsity falls out of alignment)."""
+    lay = ParamLayout.from_template(_template(sizes), max(sizes) * 2,
+                                    overrides={"leaf01": keep})
+    hit = 0
+    for kf, name in zip(lay.keep_frac, lay.names):
+        parts = name.split("+")
+        if "leaf01" in parts:
+            assert parts == ["leaf01"]
+            assert kf == keep
+            hit += 1
+        else:
+            assert kf is None
+    assert hit >= 1
+    assert lay.describe()["overridden_chunks"] == hit
+    assert not lay.is_flat or len(sizes) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=4),
+    sizes=st.lists(st.integers(min_value=128, max_value=500),
+                   min_size=2, max_size=4),
+    keep=st.floats(min_value=0.1, max_value=0.35),
+)
+def test_chunk_encode_body_matches_per_chunk_oracle(seed, k, sizes, keep):
+    """The fused chunked encode == the per-chunk reference pipeline run on
+    each slice independently: same stored counts, same decodes, and the
+    overridden chunk's kept fraction tracks ITS keep_frac, not the channel
+    default — chunk boundaries leak nothing across slices. A ring-gather
+    closure base must be bit-identical to the materialized (K, N) base."""
+    from repro.core.sparse_comm import SparseComm
+    lay = ParamLayout.from_template(_template(sizes), max(sizes),
+                                    overrides={"leaf00": keep})
+    n = lay.n
+    comm = SparseComm("p0.2", use_kernel=False, layout=lay)
+    new = _delta(seed, k, n, 1.0)
+    base = _delta(seed + 1, k, n, 1.0)
+    body = comm.chunk_encode_body(False)
+    payloads, stored, decoded = body(new, base)
+    delta = new - base
+    plan = comm.chunk_plan()
+    assert len(payloads) == lay.num_chunks
+    for p, st_c, dec in zip(plan, stored, decoded):
+        dc = delta[:, p["s"]:p["e"]]
+        thr = comm._chunk_thresholds(dc, p["keep"])
+        rdense, rstored = R.csr_capped_mask_ref(dc, thr, p["cap"])
+        np.testing.assert_array_equal(np.asarray(st_c), np.asarray(rstored))
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(rdense))
+        assert int(np.asarray(st_c).max()) <= p["cap"]
+        if p["keep"] is not None and p["nc"] >= 128:
+            kept = np.asarray(st_c).mean() / p["nc"]
+            assert abs(kept - keep) < 0.2
+    _, stored2, decoded2 = body(new, lambda s, e: base[:, s:e])
+    for a, b in zip(decoded, decoded2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(stored, stored2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=1 << 16),
+    k=st.integers(min_value=1, max_value=3),
+    sizes=st.lists(st.integers(min_value=128, max_value=400),
+                   min_size=2, max_size=3),
+)
+def test_chunk_encode_residual_indices_stay_in_chunk(seed, k, sizes):
+    """EF under the layout: the concatenated residual page stores GLOBAL
+    column indices and segment c only ever references columns of chunk c
+    (value-0 pads land at the chunk start), so the next round's per-chunk
+    scatter decode never crosses a boundary. Closure: for each chunk,
+    decode + residual-decode == the pre-encode delta wherever the residual
+    had room (rfrac caps the tail like the flat path)."""
+    from repro.core.sparse_comm import SparseComm
+    lay = ParamLayout.from_template(_template(sizes), max(sizes))
+    n = lay.n
+    comm = SparseComm("p0.2", use_kernel=False, layout=lay)
+    rcap = comm.residual_capacity_total()
+    new = _delta(seed, k, n, 1.0)
+    base = _delta(seed + 1, k, n, 1.0)
+    rvals = jnp.zeros((k, rcap), jnp.float32)
+    ridx = jnp.zeros((k, rcap), jnp.int32)
+    body = comm.chunk_encode_body(True)
+    payloads, stored, decoded, (rv2, ri2) = body(new, base, rvals, ridx)
+    assert rv2.shape == (k, rcap) and ri2.shape == (k, rcap)
+    ri_h, rv_h = np.asarray(ri2), np.asarray(rv2)
+    for p in comm.chunk_plan():
+        seg_i = ri_h[:, p["roff"]:p["roff"] + p["rcap"]]
+        seg_v = rv_h[:, p["roff"]:p["roff"] + p["rcap"]]
+        live = seg_v != 0
+        assert np.all(seg_i[live] >= p["s"])
+        assert np.all(seg_i[live] < p["e"])
+
+
 # --- shard invariance ------------------------------------------------------
 @pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a client mesh")
 def test_sparse_encode_shard_invariant():
