@@ -40,7 +40,12 @@ the resident twin at K <= 2048, and per-participant device bytes FLAT in M
 across the paged cells. The flat-in-M claim is anchored by the
 M=1,000,000 scale cell (``SCALE_CELL``): a paged round over a million
 clients (64 pooled dataset shards, 512 participants/round, one device)
-that runs in both the full and smoke sweeps.
+that runs in both the full and smoke sweeps. A ``--checkpoint`` (EF) cell
+per K measures crash-consistent fleet checkpointing
+(``checkpoint_every=5``: atomic tmp+rename section writes, sha256
+manifest commit, rolling retention) against a same-process no-checkpoint
+twin, reporting snapshot bytes and per-save wall time — the gate pins
+checkpointing throughput at >=0.95x the twin's.
 
 Two large-model cells (``LM_CELLS``) run a REAL reduced transformer from
 the config zoo through the chunked parameter axis
@@ -70,8 +75,10 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
 import subprocess
 import sys
+import tempfile
 import time
 
 FULL_CLIENTS = (8, 64, 512, 2048)
@@ -101,10 +108,13 @@ def _lm_config(preset):
     return get_config("qwen2-1.5b").reduced(**LM_PRESETS[preset])
 
 
+CKPT_EVERY = 5
+
+
 def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
                base_store="versioned", faults=False, wire_format="csr",
                client_store="resident", pool=None, participants=None,
-               warmup=None, model=None, chunk_size=0):
+               warmup=None, model=None, chunk_size=0, checkpoint=False):
     """One (K, current-device-count) measurement. Import jax lazily so the
     driver process never initializes an XLA client.
 
@@ -129,12 +139,16 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     # and long multi-device runs needlessly multiply exposure to XLA:CPU's
     # rare collective-rendezvous stalls on oversubscribed hosts. The scale
     # cell passes ``participants`` and keeps its short explicit count.
-    if participants is None and client_store == "paged":
+    # checkpoint cells carry the 0.95x overhead gate and need the same
+    # treatment (plus enough timed rounds to span several save cadences)
+    if participants is None and (client_store == "paged" or checkpoint):
         rounds = rounds * max(1, 1024 // num_clients)
     cnn = CNNConfig(name="feds3a-cnn-fleet", conv_filters=(8, 8), hidden=16)
     C = 0.5 if participants is None else participants / num_clients
+    ckpt_root = tempfile.mkdtemp(prefix="bench_fleet_ckpt_") \
+        if checkpoint else None
 
-    def build(store):
+    def build(store, ckpt=False):
         # each trainer gets its own dataset object: identical content (same
         # seed), no shared mutable client dicts between twin runs
         if model is not None:
@@ -149,7 +163,9 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
                     rounds=rounds + warmup, seed=seed, model=mcfg,
                     chunk_size=chunk_size, C=C, batch_size=16,
                     error_feedback=error_feedback, base_store=base_store,
-                    wire_format=wire_format, client_store=store))
+                    wire_format=wire_format, client_store=store,
+                    checkpoint_dir=ckpt_root if ckpt else None,
+                    checkpoint_every=CKPT_EVERY if ckpt else 0))
         return FedS3ATrainer(
             make_fleet_dataset(num_clients, scale=0.0008, seed=seed,
                                pool=pool),
@@ -158,6 +174,8 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
                 C=C, batch_size=50, error_feedback=error_feedback,
                 base_store=base_store, wire_format=wire_format,
                 client_store=store,
+                checkpoint_dir=ckpt_root if ckpt else None,
+                checkpoint_every=CKPT_EVERY if ckpt else 0,
                 # fault cell: the reference churn profile with a round
                 # deadline, so the report carries a round-efficiency number
                 # (mean_quorum_frac) the regression gate can bound
@@ -165,7 +183,7 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
                 round_deadline=700.0 if faults else None,
                 quorum_floor=2 if faults else 1))
 
-    tr = build(client_store)
+    tr = build(client_store, ckpt=checkpoint)
     data = tr.data
     # the paged-vs-resident throughput gate needs a ratio immune to
     # between-process variance (CPU frequency / allocator state swing
@@ -173,11 +191,41 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     # paged cell times its RESIDENT twin in the same process, interleaved
     # block-wise below. The million-client scale cell skips the twin — its
     # resident layout would need the very device footprint paging removes.
-    twin = build("resident") \
-        if client_store == "paged" and participants is None else None
+    # Checkpoint cells interleave a NO-checkpoint twin the same way: the
+    # 0.95x save-overhead gate is a same-process ratio too.
+    if client_store == "paged" and participants is None:
+        twin = build("resident")
+    elif checkpoint:
+        twin = build(client_store, ckpt=False)
+    else:
+        twin = None
+
+    # one round, plus the checkpoint-cadence save when the trainer carries a
+    # checkpoint_dir (the twin never does, so _step is a plain round there).
+    # wait=False is the same background-writer path train() uses; the
+    # timed window still pays the full cost because every timed block ends
+    # with a drain, so trailing writer work cannot leak past the clock.
+    # checkpoint_save_s_mean therefore reports the synchronous snapshot
+    # cost the training loop is actually exposed to per save.
+    ckpt_saves = [0, 0.0]
+
+    def _step(t):
+        t.run_round()
+        c = t.cfg
+        if c.checkpoint_dir and c.checkpoint_every \
+                and t.global_version % c.checkpoint_every == 0:
+            s0 = time.perf_counter()
+            t.save_checkpoint(wait=False)
+            ckpt_saves[0] += 1
+            ckpt_saves[1] += time.perf_counter() - s0
 
     for _ in range(warmup):                # shapes retrace the first rounds
-        tr.run_round()
+        _step(tr)
+    if checkpoint:
+        # one untimed save: the first snapshot pays one-off host-transfer
+        # warmup the same way the first round pays compilation
+        tr.save_checkpoint()
+        ckpt_saves[:] = [0, 0.0]
     jax.block_until_ready(tr._global_flat)
     payload0, dense0 = tr.comm.payload_bytes, tr.comm.dense_bytes
     wire0 = tr.comm.wire_breakdown()
@@ -186,13 +234,15 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
     if twin is None:
         t0 = time.perf_counter()
         for _ in range(rounds):
-            tr.run_round()
+            _step(tr)
+        if checkpoint:
+            tr._ckpt_drain()
         jax.block_until_ready(tr._global_flat)
         elapsed = time.perf_counter() - t0
         twin_elapsed = None
     else:
         for _ in range(warmup):
-            twin.run_round()
+            _step(twin)
         jax.block_until_ready(twin._global_flat)
         per = max(1, rounds // 4)          # A/B/A/B interleaved blocks
         elapsed = twin_elapsed = 0.0
@@ -201,17 +251,30 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
             nb = min(per, rounds - done)
             t0 = time.perf_counter()
             for _ in range(nb):
-                tr.run_round()
+                _step(tr)
+            if checkpoint:
+                tr._ckpt_drain()
             jax.block_until_ready(tr._global_flat)
             elapsed += time.perf_counter() - t0
             t0 = time.perf_counter()
             for _ in range(nb):
-                twin.run_round()
+                _step(twin)
             jax.block_until_ready(twin._global_flat)
             twin_elapsed += time.perf_counter() - t0
             done += nb
     wire1 = tr.comm.wire_breakdown()
     dist1 = tr.store.dist_payload_bytes() if base_store == "versioned" else 0
+
+    # checkpoint footprint: the on-disk size of one complete (newest)
+    # snapshot — every section file plus its MANIFEST
+    ckpt_bytes = 0
+    if checkpoint:
+        from repro.core import fleet_ckpt
+        path, _ = fleet_ckpt.find_restorable(ckpt_root)
+        if path is not None:
+            ckpt_bytes = sum(os.path.getsize(os.path.join(path, f))
+                             for f in os.listdir(path))
+        shutil.rmtree(ckpt_root, ignore_errors=True)
 
     n_params = int(tr._global_flat.shape[0])
     fleet = fleet_health(tr.logs)
@@ -259,7 +322,20 @@ def bench_cell(num_clients, *, rounds, seed=0, error_feedback=False,
         # same-process interleaved resident-twin throughput (paged cells
         # only): the denominator of the regression gate's 0.9x ratio
         "resident_twin_rounds_per_sec":
-            (rounds / twin_elapsed) if twin_elapsed else None,
+            (rounds / twin_elapsed)
+            if twin_elapsed and client_store == "paged" else None,
+        # crash-consistent checkpointing cell: snapshot size, per-save wall
+        # time, and the same-process no-checkpoint twin throughput the
+        # 0.95x overhead gate divides by
+        "checkpoint": checkpoint,
+        "checkpoint_every": CKPT_EVERY if checkpoint else 0,
+        "checkpoint_bytes": ckpt_bytes,
+        "checkpoint_saves": ckpt_saves[0],
+        "checkpoint_save_s_mean":
+            (ckpt_saves[1] / ckpt_saves[0]) if ckpt_saves[0] else 0.0,
+        "no_ckpt_twin_rounds_per_sec":
+            (rounds / twin_elapsed)
+            if twin_elapsed and checkpoint else None,
         "payload_bytes_per_round": (tr.comm.payload_bytes - payload0) / rounds,
         "dense_bytes_per_round": (tr.comm.dense_bytes - dense0) / rounds,
         # CSR component breakdown of the bytes actually put on the wire
@@ -287,7 +363,8 @@ def worker(args):
                           faults=args.faults, wire_format=args.wire_format,
                           client_store=args.client_store, pool=args.pool,
                           participants=args.participants, warmup=args.warmup,
-                          model=args.model, chunk_size=args.chunk_size)
+                          model=args.model, chunk_size=args.chunk_size,
+                          checkpoint=args.checkpoint)
                for k in args.clients]
     with open(args.out, "w") as f:
         json.dump(results, f)
@@ -315,23 +392,28 @@ def _cells(args):
     against its resident twin on throughput and against the resident
     equivalent on bytes)."""
     dmax = max(args.devices)
-    cells = [(d, k, False, "versioned", False, "csr", "resident")
+    cells = [(d, k, False, "versioned", False, "csr", "resident", False)
              for d in args.devices for k in args.clients]
-    cells += [(dmax, k, True, "versioned", False, "csr", "resident")
+    cells += [(dmax, k, True, "versioned", False, "csr", "resident", False)
               for k in args.clients]
-    cells += [(dmax, k, False, "dense", False, "csr", "resident")
+    cells += [(dmax, k, False, "dense", False, "csr", "resident", False)
               for k in args.clients]
-    cells += [(dmax, k, False, "versioned", True, "csr", "resident")
+    cells += [(dmax, k, False, "versioned", True, "csr", "resident", False)
               for k in args.clients]
     # csr_q rides with EF so the dequantization error is re-offered instead
     # of dropped — the configuration the accuracy gate compares to its EF
     # f32 twin
-    cells += [(dmax, k, True, "versioned", False, "csr_q", "resident")
+    cells += [(dmax, k, True, "versioned", False, "csr_q", "resident", False)
               for k in args.clients]
     # the paged twin rides with EF too: residual pages are the per-client
     # state whose device footprint the store removes, and its resident EF
     # twin above shares the same (K, D) for the throughput gate
-    cells += [(dmax, k, True, "versioned", False, "csr", "paged")
+    cells += [(dmax, k, True, "versioned", False, "csr", "paged", False)
+              for k in args.clients]
+    # crash-consistent checkpointing cell per K (EF, so the snapshot carries
+    # the residual store too): reports snapshot bytes + per-save wall time,
+    # and interleaves a no-checkpoint twin for the 0.95x overhead gate
+    cells += [(dmax, k, True, "versioned", False, "csr", "resident", True)
               for k in args.clients]
     return cells
 
@@ -342,14 +424,14 @@ def driver(args):
     # (measured 4-5x on the later cell — lingering executables and
     # allocator state), so every cell gets a pristine runtime
     results = []
-    for d, k, ef, store, faults, wire, cstore in _cells(args):
+    for d, k, ef, store, faults, wire, cstore, ckpt in _cells(args):
         env = dict(os.environ)
         flags = [f for f in env.get("XLA_FLAGS", "").split()
                  if "--xla_force_host_platform_device_count" not in f]
         env["XLA_FLAGS"] = " ".join(
             flags + [f"--xla_force_host_platform_device_count={d}"])
         out = f".bench_fleet_worker_{d}_{k}_{int(ef)}_{store}_{int(faults)}" \
-              f"_{wire}_{cstore}.json"
+              f"_{wire}_{cstore}_{int(ckpt)}.json"
         cmd = [sys.executable, "-m", "benchmarks.bench_fleet",
                "--worker", "--out", out, "--rounds", str(args.rounds),
                "--seed", str(args.seed), "--clients", str(k),
@@ -359,8 +441,11 @@ def driver(args):
             cmd.append("--ef")
         if faults:
             cmd.append("--faults")
+        if ckpt:
+            cmd.append("--checkpoint")
         print(f"[bench_fleet] K={k} devices={d} ef={ef} store={store} "
-              f"faults={faults} wire={wire} cstore={cstore}", flush=True)
+              f"faults={faults} wire={wire} cstore={cstore} ckpt={ckpt}",
+              flush=True)
         subprocess.run(cmd, env=env, check=True)
         with open(out) as f:
             results.extend(json.load(f))
@@ -415,10 +500,11 @@ def driver(args):
     for r in results:
         tag = f" {r['model']}" if r.get("model", "cnn") != "cnn" else \
             " pg" if r.get("client_store", "resident") == "paged" else \
-            (" q8" if r.get("wire_format", "csr") == "csr_q" else
-             (" ef" if r["error_feedback"] else
-              (" fx" if r.get("faults") else
-               (" db" if r.get("base_store") == "dense" else ""))))
+            (" ck" if r.get("checkpoint") else
+             (" q8" if r.get("wire_format", "csr") == "csr_q" else
+              (" ef" if r["error_feedback"] else
+               (" fx" if r.get("faults") else
+                (" db" if r.get("base_store") == "dense" else "")))))
         print(f"  K={r['clients']:5d} D={r['devices']}{tag:3s} "
               f"{r['rounds_per_sec']:7.3f} rounds/s "
               f"({r['s_per_round']*1e3:8.1f} ms/round)  "
@@ -433,6 +519,12 @@ def driver(args):
                   f"degraded {r['degraded_rounds']} "
                   f"crashes {r['crashes']} lost {r['lost_uploads']} "
                   f"resyncs {r['resyncs']}")
+        if r.get("checkpoint"):
+            print(f"        checkpoint: "
+                  f"{r['checkpoint_bytes']/1e6:.2f} MB/snapshot, "
+                  f"{r['checkpoint_save_s_mean']*1e3:.1f} ms/save "
+                  f"(every {r['checkpoint_every']} rounds; twin "
+                  f"{r['no_ckpt_twin_rounds_per_sec']:.3f} rounds/s)")
         if r.get("client_store", "resident") == "paged":
             print(f"        client state: device "
                   f"{r['client_state_device_bytes']/1e6:.2f} MB (window), "
@@ -491,6 +583,8 @@ def main():
     ap.add_argument("--model", default=None, choices=tuple(LM_PRESETS),
                     help=argparse.SUPPRESS)
     ap.add_argument("--chunk-size", dest="chunk_size", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--checkpoint", action="store_true",
                     help=argparse.SUPPRESS)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)

@@ -3,7 +3,7 @@
 Diffs a fresh smoke run of ``benchmarks.bench_fleet`` against the committed
 baseline (BENCH_fleet.json) cell by cell — cells are keyed by
 (clients, devices, error_feedback, base_store, faults, wire_format,
-client_store, model) — and fails the job when:
+client_store, model, checkpoint) — and fails the job when:
 
 * throughput regresses by more than ``--max-slowdown`` (default 30%) on
   the GEOMETRIC MEAN across cells, or by more than twice that on any
@@ -55,6 +55,14 @@ client_store, model) — and fails the job when:
   (The 4x slop absorbs padded-batch-count variation between the pooled
   scale dataset and the per-K fleet datasets; a resident layout would blow
   past it by orders of magnitude at 1M clients.), or
+* the checkpoint-overhead gate fails on a ``checkpoint=True`` cell:
+  crash-consistent snapshots every ``checkpoint_every=5`` rounds
+  (tmp-write + fsync + rename of every section, sha256 manifest commit)
+  must keep at least 0.95x the rounds/sec of the cell's same-process
+  no-checkpoint twin — checkpointing is supposed to cost <5% wall time —
+  and the cell must actually have written at least one non-empty
+  snapshot (a zero-byte or zero-save report means the cadence silently
+  stopped firing, which would green-light a broken save path), or
 * the chunked-memory scale gate fails on the large-model cells: across
   the ``model != "cnn"`` cells sharing one chunk_size (two reduced
   transformers whose parameter counts differ by >= 2x),
@@ -97,7 +105,7 @@ def _cells(path):
                r.get("base_store", "versioned"), bool(r.get("faults")),
                r.get("wire_format", "csr"),
                r.get("client_store", "resident"),
-               r.get("model", "cnn"))
+               r.get("model", "cnn"), bool(r.get("checkpoint")))
         out[key] = r
     return out
 
@@ -106,13 +114,14 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
     failures, skipped, rows, speeds = [], [], [], []
     for key, cand in sorted(candidate.items()):
         base = baseline.get(key)
-        k, d, ef, store, faults, wire, cstore, model = key
+        k, d, ef, store, faults, wire, cstore, model, ckpt = key
         name = f"K={k} D={d}{' ef' if ef else ''}" + \
             (f" {store}" if store != "versioned" else "") + \
             (" faults" if faults else "") + \
             (f" {wire}" if wire != "csr" else "") + \
             (f" {cstore}" if cstore != "resident" else "") + \
-            (f" {model}" if model != "cnn" else "")
+            (f" {model}" if model != "cnn" else "") + \
+            (" ckpt" if ckpt else "")
         # base-store memory gate: the versioned store must stay sublinear —
         # strictly below the dense (M, N) equivalent — at every committed
         # fleet size (candidate-only check, no baseline cell needed)
@@ -125,7 +134,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                     f"dense equivalent "
                     f"{cand['base_store_dense_equiv_bytes']} B")
             dense_twin = candidate.get((k, d, ef, "dense", faults, wire,
-                                        cstore, model))
+                                        cstore, model, ckpt))
             if dense_twin is not None:
                 if cand["base_store_bytes"] >= \
                         dense_twin.get("base_store_bytes", float("inf")):
@@ -146,7 +155,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
         # insulated from runner drift (candidate-only, no baseline needed)
         if wire == "csr_q":
             twin = candidate.get((k, d, ef, store, faults, "csr", cstore,
-                                  model))
+                                  model, ckpt))
             if twin is None:
                 skipped.append(f"{name} (no f32 csr twin cell)")
             else:
@@ -193,7 +202,7 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                 tspeed = cand.get("resident_twin_rounds_per_sec")
                 if not tspeed:
                     rtwin = candidate.get((k, d, ef, store, faults, wire,
-                                           "resident", model))
+                                           "resident", model, ckpt))
                     tspeed = rtwin["rounds_per_sec"] if rtwin else None
                 if tspeed is None:
                     skipped.append(f"{name} (no resident twin cell)")
@@ -206,6 +215,39 @@ def compare(baseline, candidate, *, max_slowdown, bytes_tol, quorum_tol):
                             f"{name}: paged throughput is x{pspeed:.2f} of "
                             f"the resident twin (gate: >=0.9 — the page "
                             f"gather/scatter must overlap, not serialize)")
+        # checkpoint-overhead gate: a checkpointing cell is judged against
+        # its same-process no-checkpoint twin — atomic snapshots every
+        # checkpoint_every rounds must cost <5% throughput, and at least
+        # one non-empty snapshot must actually have been committed
+        # (candidate-only, no baseline cell needed)
+        if ckpt:
+            tspeed = cand.get("no_ckpt_twin_rounds_per_sec")
+            if not tspeed:
+                ntwin = candidate.get((k, d, ef, store, faults, wire,
+                                       cstore, model, False))
+                tspeed = ntwin["rounds_per_sec"] if ntwin else None
+            if tspeed is None:
+                skipped.append(f"{name} (no no-checkpoint twin cell)")
+            else:
+                cspeed = cand["rounds_per_sec"] / tspeed
+                rows.append(
+                    f"  {name:16s} vs no-ckpt twin: rounds/s x{cspeed:5.2f} "
+                    f"({cand.get('checkpoint_bytes', 0)/1e6:.2f} MB/snap, "
+                    f"{cand.get('checkpoint_save_s_mean', 0)*1e3:.1f} "
+                    f"ms/save)")
+                if cspeed < 0.95:
+                    failures.append(
+                        f"{name}: checkpointing every "
+                        f"{cand.get('checkpoint_every')} rounds costs "
+                        f"x{cspeed:.2f} of the no-checkpoint twin's "
+                        f"throughput (gate: >=0.95)")
+            if not cand.get("checkpoint_saves") \
+                    or not cand.get("checkpoint_bytes"):
+                failures.append(
+                    f"{name}: checkpoint cell committed no snapshot "
+                    f"(saves={cand.get('checkpoint_saves')}, "
+                    f"bytes={cand.get('checkpoint_bytes')}) — the save "
+                    f"cadence stopped firing")
         if base is None:
             skipped.append(name)
             continue

@@ -1,9 +1,17 @@
-"""Minimal msgpack pytree checkpointing (params / optimizer / FL state).
+"""Minimal msgpack pytree leaf round-trip.
 
-Layout: a single .msgpack file holding {"treedef": <repr>, "leaves": [...]}
-where each leaf is {"dtype", "shape", "data"(raw bytes)}. Works for any pytree
-of jnp/np arrays + python scalars; keeps the FedS3A server restartable
-mid-training (global params, optimizer state, participation matrix, round).
+Layout: a single .msgpack file holding {"leaves": [...]} where each leaf
+is {"dtype", "shape", "data"(raw bytes)} or {"py": scalar}. Works for any
+pytree of jnp/np arrays + python scalars. The tree STRUCTURE is not
+stored: ``load_checkpoint`` restores into the structure of a caller-
+provided ``like`` tree and validates leaf count, shapes and dtypes
+against it.
+
+This is a building block, not the server restart path — crash-consistent
+full-trainer checkpointing (ring, residuals, scheduler heaps, RNG
+streams, ledgers) lives in ``core.fleet_ckpt``, which layers manifest
+checksums, atomic commit and torn-write fallback on top of plain files
+like the ones written here.
 """
 from __future__ import annotations
 
@@ -30,10 +38,8 @@ def _unpack_leaf(d):
 
 
 def save_checkpoint(path, tree):
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    leaves, _ = jax.tree_util.tree_flatten(tree)
     payload = {
-        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto()
-        if hasattr(treedef, "serialize_using_proto") else None,
         "leaves": [_pack_leaf(jax.device_get(l)) for l in leaves],
     }
     tmp = path + ".tmp"
@@ -43,8 +49,14 @@ def save_checkpoint(path, tree):
     os.replace(tmp, path)
 
 
-def load_checkpoint(path, like):
-    """Restore into the structure of ``like`` (treedef source of truth)."""
+def load_checkpoint(path, like, *, cast=False):
+    """Restore into the structure of ``like`` (treedef source of truth).
+
+    Leaf count and shapes must match ``like`` exactly. Dtypes must match
+    too: a checkpoint written as f32 silently reloaded as f16 (or int)
+    would corrupt training without a trace, so a mismatch raises unless
+    the caller opts in with ``cast=True`` (an explicit, lossy decision).
+    """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
@@ -56,7 +68,13 @@ def load_checkpoint(path, like):
     for got, want in zip(leaves, leaves_like):
         if hasattr(want, "shape") and tuple(np.shape(got)) != tuple(want.shape):
             raise ValueError(f"shape mismatch {np.shape(got)} vs {want.shape}")
-        if hasattr(want, "dtype") and hasattr(got, "astype"):
+        if hasattr(want, "dtype") and hasattr(got, "dtype") \
+                and got.dtype != np.dtype(want.dtype):
+            if not cast:
+                raise ValueError(
+                    f"dtype mismatch: checkpoint leaf is {got.dtype}, "
+                    f"expected {np.dtype(want.dtype)} — pass cast=True to "
+                    f"convert explicitly")
             got = got.astype(want.dtype)
         out.append(got)
     return jax.tree_util.tree_unflatten(treedef, out)

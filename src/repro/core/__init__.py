@@ -6,5 +6,7 @@ from repro.core.param_layout import ParamLayout  # noqa: F401
 from repro.core.base_store import VersionedBaseStore  # noqa: F401
 from repro.core.client_store import PagedClientStore  # noqa: F401
 from repro.core.scheduler import FleetStalledError  # noqa: F401
+from repro.core.sparse_comm import (MALFORM_KINDS,  # noqa: F401
+                                    WireIntegrityError)
 from repro.core.traffic import REFERENCE_CHURN, TrafficModel  # noqa: F401
 from repro.core.baselines import FedAvgSSL, FedAsyncSSL, LocalSSL  # noqa: F401

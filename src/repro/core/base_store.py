@@ -263,6 +263,91 @@ class VersionedBaseStore:
             self.client_version[targets] = self.version
             self.detached[targets] = False
 
+    # -- checkpoint / restore ----------------------------------------------
+    def state_dict(self, *, defer=False):
+        """Complete mutable state: the reconstruction ring, chain payloads
+        (device arrays and stored-count scalars materialized to host —
+        value-neutral, counts are exact integers and the deferred byte fold
+        is order-preserving), per-client versions and the detached mask.
+        Arrays come back as numpy; the caller owns serialization.
+
+        ``defer=True`` (the checkpoint writer path) blocks on NOTHING:
+        immutable device arrays are returned by reference and every
+        host materialization — the stored counts and the pending
+        distribution-byte fold — is wrapped in :class:`fleet_ckpt.Lazy`
+        over references captured now, so the writer thread pays the
+        device sync and the value is bit-identical to the eager fold
+        (same entries, same order, same float64 host arithmetic). The
+        live store's pending list is left untouched."""
+        from repro.core import fleet_ckpt
+        if defer:
+            base = float(self._dist_host)
+            pend = list(self._dist_pending)
+
+            def _dist():
+                # per-element np.asarray: the writer thread must never
+                # LAUNCH device programs (a jnp.stack dispatched
+                # concurrently with the training thread's multi-device
+                # round can interleave collective rendezvous and deadlock
+                # XLA:CPU) — transfers only. Counts are exact integers, so
+                # the float64 fold matches the eager stack path exactly.
+                out = base
+                for cnt, eb in pend:
+                    out += float(np.asarray(cnt)) * eb
+                return out
+
+            dist = fleet_ckpt.Lazy(_dist)
+
+            def conv(k, arr):
+                if k == "stored":
+                    return fleet_ckpt.Lazy(
+                        lambda a=arr: int(np.asarray(a)))
+                return arr
+
+            ring, latest = self.ring, self._latest
+        else:
+            self.dist_payload_bytes()       # fold pending device scalars
+            dist = float(self._dist_host)
+
+            def conv(k, arr):
+                return int(np.asarray(arr)) if k == "stored" \
+                    else np.asarray(arr)
+
+            ring, latest = np.asarray(self.ring), np.asarray(self._latest)
+        chain = []
+        for v in sorted(self._chain):
+            entry = {k: conv(k, arr) for k, arr in self._chain[v].items()}
+            chain.append([int(v), entry])
+        return {"n": self.n, "M": self.M, "tau": self.tau,
+                "ring": ring,
+                "latest": latest,
+                "slot_version": self.slot_version.copy(),
+                "client_version": self.client_version.copy(),
+                "detached": self.detached.copy(),
+                "version": int(self.version),
+                "chain": chain,
+                "dist_host": dist}
+
+    def load_state_dict(self, d):
+        """Restore :meth:`state_dict` output onto a store built with the
+        same geometry (n / M / tau are checked)."""
+        for k in ("n", "M", "tau"):
+            if int(d[k]) != getattr(self, k):
+                raise ValueError(f"base-store state has {k}={d[k]}, this "
+                                 f"store has {k}={getattr(self, k)}")
+        self.ring = jnp.asarray(np.asarray(d["ring"]), jnp.float32)
+        self._latest = jnp.asarray(np.asarray(d["latest"]), jnp.float32)
+        self.slot_version = np.asarray(d["slot_version"],
+                                       np.int64).reshape(self.depth).copy()
+        self.client_version = np.asarray(d["client_version"],
+                                         np.int64).reshape(self.M).copy()
+        self.detached = np.asarray(d["detached"],
+                                   bool).reshape(self.M).copy()
+        self.version = int(d["version"])
+        self._chain = {int(v): dict(entry) for v, entry in d["chain"]}
+        self._dist_pending = []
+        self._dist_host = float(d["dist_host"])
+
     # -- reporting ---------------------------------------------------------
     def dist_payload_bytes(self):
         """Cumulative distribution bytes-on-wire (broadcast payloads only,

@@ -180,6 +180,50 @@ class PagedClientStore:
             self.part_count[rows] += 1
             self.last_round[rows] = int(round_no)
 
+    # -- checkpoint / restore ----------------------------------------------
+    def state_dict(self):
+        """Snapshot the paged state: the write queue is drained first (and
+        memmap pages are fsynced to their backing files), then only the
+        VALID pages are captured, sparsely — invalid pages read as zero by
+        contract, so a fleet where most clients never participated
+        checkpoints at O(touched), not O(M * page)."""
+        self.flush()
+        for p in self._pages:
+            if isinstance(p, np.memmap):
+                p.flush()
+        ids = np.nonzero(self.valid)[0].astype(np.int64)
+        return {"M": self.M, "n": self.n, "rcap": self.rcap,
+                "layout": self.layout,
+                "ids": ids,
+                "pages": [np.ascontiguousarray(p[ids])
+                          for p in self._pages],
+                "part_count": self.part_count.copy(),
+                "last_round": self.last_round.copy()}
+
+    def load_state_dict(self, d):
+        """Restore :meth:`state_dict` output onto a store of the same
+        geometry. Pages not in the snapshot are invalidated (they read as
+        zero); their stale bytes are never touched."""
+        for k in ("M", "n", "rcap"):
+            if int(d[k]) != getattr(self, k):
+                raise ValueError(f"paged-store state has {k}={d[k]}, this "
+                                 f"store has {k}={getattr(self, k)}")
+        if d["layout"] != self.layout:
+            raise ValueError(f"paged-store state has layout "
+                             f"{d['layout']!r}, this store has "
+                             f"{self.layout!r}")
+        self._queue = []
+        self.valid[:] = False
+        ids = np.asarray(d["ids"], np.int64)
+        for dst, src in zip(self._pages, d["pages"]):
+            dst[ids] = np.asarray(src).reshape((ids.size,) + dst.shape[1:])
+        self.valid[ids] = True
+        self.part_count[:] = np.asarray(d["part_count"],
+                                        np.int64).reshape(self.M)
+        self.last_round[:] = np.asarray(d["last_round"],
+                                        np.int64).reshape(self.M)
+        self._window_bytes = 0
+
     # -- inspection ---------------------------------------------------------
     def residual_row(self, i):
         """Dense (n,) host residual of client ``i`` (test/debug accessor;

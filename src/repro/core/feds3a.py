@@ -56,6 +56,9 @@ suite pins against the sequential reference.
 """
 from __future__ import annotations
 
+import os
+import queue
+import threading
 import warnings
 from dataclasses import dataclass, field
 
@@ -67,6 +70,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.feds3a_cnn import CONFIG as CNN_CONFIG
 from repro.core import aggregation as agg
+from repro.core import fleet_ckpt
 from repro.core.base_store import VersionedBaseStore
 from repro.core.client_store import PagedClientStore
 from repro.core.functions import (adaptive_learning_rates, staleness_fn,
@@ -76,8 +80,9 @@ from repro.core.metrics import fleet_health, weighted_metrics
 from repro.core.model_adapter import make_adapter
 from repro.core.param_layout import ParamLayout
 from repro.core.scheduler import SemiAsyncScheduler, paper_latency
-from repro.core.sparse_comm import (CSR_FORMATS, SparseComm, flatten_tree,
-                                    unflatten_like)
+from repro.core.sparse_comm import (CSR_FORMATS, MALFORM_KINDS, Q_BLOCK,
+                                    SparseComm, WireIntegrityError,
+                                    flatten_tree, unflatten_like)
 from repro.distributed.sharding import (CLIENT_AXIS, CLIENT_PAYLOAD_SPECS,
                                         CLIENT_STACK_SPEC, CLIENT_VEC_SPEC,
                                         REPLICATED_SPEC, RING_SLOT_SPEC,
@@ -245,6 +250,15 @@ class FedS3AConfig:
     quorum_floor: int = 1               # minimum uploads a degraded round
                                         # may aggregate; below it the
                                         # scheduler raises FleetStalledError
+    checkpoint_dir: object = None       # crash-consistent fleet checkpoints
+                                        # (core.fleet_ckpt): atomic,
+                                        # manifest-checksummed snapshots of
+                                        # the COMPLETE round-boundary state;
+                                        # ``restore()`` resumes bit-exactly.
+                                        # Requires base_store="versioned"
+    checkpoint_every: int = 0           # rounds between automatic train()
+                                        # checkpoints (0 = only explicit
+                                        # ``save_checkpoint()`` calls)
 
 
 @dataclass
@@ -269,6 +283,10 @@ class RoundLog:
     resynced: list = field(default_factory=list)  # rejoiners needing the
                                                   # full-model resync (ring
                                                   # version evicted)
+    corrupted: list = field(default_factory=list)  # uploads quarantined by
+                                                   # the wire-integrity
+                                                   # gauntlet (never decoded,
+                                                   # never booked)
 
 
 class FedS3ATrainer:
@@ -335,6 +353,12 @@ class FedS3ATrainer:
                 "fault injection (traffic=) requires base_store='versioned':"
                 " rejoin re-basing (chain suffix vs full-model resync) is "
                 "defined against the reconstruction ring")
+        if self.cfg.checkpoint_dir is not None \
+                and self.base_store != "versioned":
+            raise ValueError(
+                "checkpoint_dir requires base_store='versioned': the "
+                "checkpoint snapshots the reconstruction ring + chain; the "
+                "legacy dense per-client base state has no serialized form")
         self.scheduler = SemiAsyncScheduler(
             self.latencies, C=self.cfg.C, tau=self.cfg.tau,
             jitter=self.cfg.latency_jitter, seed=self.cfg.seed,
@@ -377,6 +401,13 @@ class FedS3ATrainer:
         self.participation = np.zeros((0, self.M))
         self._data_window_bytes = 0
         self.logs: list[RoundLog] = []
+        # checkpoint machinery: per-log packed-bytes cache (logs are
+        # append-only, so each is encoded once per run) and the lazily
+        # started persistent writer thread (at most one write in flight)
+        self._log_pack: list[bytes] = []
+        self._ckpt_thread = None
+        self._ckpt_queue = None
+        self._ckpt_exc = None
 
         self._init_models()
 
@@ -742,7 +773,8 @@ class FedS3ATrainer:
             chain, resync = self.store.split_rejoined(
                 ev.rejoined, self.global_version)
         targets = sorted(set(i for i in part_ids if online[i])
-                         | set(ev.forced) | set(ev.lost) | set(chain))
+                         | set(ev.forced) | set(ev.lost)
+                         | set(ev.corrupted) | set(chain))
         ev.resynced = resync
         return targets, resync
 
@@ -755,9 +787,11 @@ class FedS3ATrainer:
         re-offered as drift on rejoin). Retiring happens in the
         distribution phase — AFTER the upload encode — because a departed
         participant's encode this round legitimately consumed its
-        then-current residual."""
-        return sorted(set(ev.forced) | set(ev.lost) | set(ev.departed)
-                      | set(ev.rejoined))
+        then-current residual. Quarantined (corrupt) uploads retire
+        exactly like lost ones: the payload was produced (consuming the
+        residual) but never aggregated."""
+        return sorted(set(ev.forced) | set(ev.lost) | set(ev.corrupted)
+                      | set(ev.departed) | set(ev.rejoined))
 
     def _advance_versioned(self, recon, payload, ev, part_ids):
         """Install the new reconstruction + chain delta, detach departures,
@@ -813,6 +847,52 @@ class FedS3ATrainer:
             for i in ids:
                 self.clients[i].pop("residual", None)
 
+    def _quarantine_uploads(self, ev):
+        """Run every corrupt-fated upload through the wire-integrity
+        gauntlet at the trust boundary. The scheduler decided WHICH runs
+        the traffic model damaged (``ev.corrupted``); here the damage is
+        materialized deterministically — a nominal payload malformed by
+        one class from :data:`MALFORM_KINDS`, picked by a client/round
+        hash so the trace is engine-independent and replays bit-exactly —
+        and :meth:`SparseComm.validate_payload` must reject it. Rejection
+        IS the quarantine: the payload is never decoded, never aggregated
+        and never booked (the same no-delivery path lost uploads take; EF
+        retirement happens in ``_retired_ids``). A malformed payload that
+        somehow passed validation would silently poison the aggregate, so
+        that raises outright. Host-only and outside every jitted round
+        body — rounds without corruption pay nothing."""
+        if not ev.corrupted or not self._csr_wire:
+            # dense-family messages carry no payload arrays to damage;
+            # the scheduler's no-delivery quarantine already applied
+            return
+        n = int(self._global_flat.shape[0])
+        cap = 4                       # any capacity: validation infers it
+        stored = np.full(1, cap, np.int64)
+        if self.wire_fmt == "csr_q":
+            vdt = np.int8 if self.comm.q_dtype == "int8" else np.float16
+            blocks = np.zeros((1, (n + Q_BLOCK - 1) // Q_BLOCK), np.int64)
+            blocks[0, 0] = cap
+            nominal = {"nnz": stored, "total": n, "rows": 1,
+                       "values": np.zeros((1, cap), vdt),
+                       "indices": np.zeros((1, cap), np.int16),
+                       "blocks": blocks,
+                       "scales": np.ones(1, np.float32)}
+        else:
+            nominal = {"nnz": stored, "total": n, "rows": 1,
+                       "values": np.zeros((1, cap), np.float32),
+                       "indices": np.zeros((1, cap), np.int32)}
+        for c in ev.corrupted:
+            kind = MALFORM_KINDS[
+                (c * 2654435761 + self.global_version) % len(MALFORM_KINDS)]
+            bad = self.comm.malform_stats(nominal, kind)
+            try:
+                self.comm.validate_payload(bad)
+            except WireIntegrityError:
+                continue              # quarantined
+            raise RuntimeError(
+                f"malformed upload (client {c}, kind {kind!r}) passed "
+                f"wire-integrity validation — quarantine is broken")
+
     # ------------------------------------------------------------------
     def run_round(self):
         if self.chunked:
@@ -836,6 +916,7 @@ class FedS3ATrainer:
             # inter-round host work; drain them before this round gathers
             self.cstore.flush()
         ev = self.scheduler.next_round()
+        self._quarantine_uploads(ev)
         lrs = adaptive_learning_rates(
             self.participation, base_lr=self.cfg.lr,
             round_weight=self.cfg.round_weight_function,
@@ -857,7 +938,8 @@ class FedS3ATrainer:
                        deadline_hit=ev.deadline_hit, quorum=ev.quorum,
                        target_k=ev.target_k, crashes=ev.crashes,
                        lost=ev.lost, departed=ev.departed,
-                       rejoined=ev.rejoined, resynced=ev.resynced)
+                       rejoined=ev.rejoined, resynced=ev.resynced,
+                       corrupted=ev.corrupted)
         self.logs.append(log)
         return log
 
@@ -1983,6 +2065,272 @@ class FedS3ATrainer:
                 total += self.M * n * 4
         return total
 
+    # ------------------------------------------------------------------
+    # crash-consistent checkpointing (core.fleet_ckpt)
+    def _ef_kind(self):
+        """Which serialized form this trainer's EF residual state takes
+        (part of the checkpoint fingerprint: the layouts are engine-
+        specific and do not cross-load)."""
+        if not self.cfg.error_feedback:
+            return "none"
+        if self.paged:
+            return "paged"            # pages ride in the cstore section
+        if self.chunked or (self.engine == "sharded" and self._csr_wire):
+            return "csr"
+        if self.engine == "sharded":
+            return "dense_mat"
+        if self.engine == "batched":
+            return "rows"
+        return "trees"
+
+    def _ef_state(self):
+        """Device-resident EF snapshot; ``save_checkpoint`` batches the
+        host transfer for all layouts in one ``jax.device_get``."""
+        kind = self._ef_kind()
+        if kind == "csr":
+            return {"kind": kind, "vals": self._res_vals,
+                    "idx": self._res_idx}
+        if kind == "dense_mat":
+            return {"kind": kind, "mat": self._residual_mat}
+        if kind == "rows":
+            rows = tuple(self._residual_rows)   # immutable device refs
+            # host-side stack: the writer thread must never LAUNCH device
+            # programs (a jnp.stack dispatched concurrently with the main
+            # thread's multi-device round program can interleave collective
+            # rendezvous across the two programs and deadlock XLA:CPU) —
+            # np.asarray is a pure transfer, np.stack is host memcpy
+            return {"kind": kind,
+                    "rows": fleet_ckpt.Lazy(
+                        lambda: np.stack([np.asarray(r) for r in rows]))}
+        if kind == "trees":
+            items = [[int(i), list(jax.tree.leaves(c["residual"]))]
+                     for i, c in enumerate(self.clients)
+                     if "residual" in c]
+            return {"kind": kind, "items": items}
+        return {"kind": kind}
+
+    def _load_ef_state(self, d):
+        kind = self._ef_kind()
+        if d["kind"] != kind:
+            raise ValueError(f"checkpoint EF state is {d['kind']!r}, this "
+                             f"trainer stores {kind!r}")
+        if kind == "csr":
+            self._res_vals = jnp.asarray(np.asarray(d["vals"], np.float32))
+            self._res_idx = jnp.asarray(np.asarray(d["idx"], np.int32))
+        elif kind == "dense_mat":
+            self._residual_mat = jnp.asarray(np.asarray(d["mat"],
+                                                        np.float32))
+        elif kind == "rows":
+            rows = jnp.asarray(np.asarray(d["rows"], np.float32))
+            self._residual_rows = [rows[i] for i in range(rows.shape[0])]
+        elif kind == "trees":
+            tmpl, treedef = jax.tree_util.tree_flatten(self._template)
+            for c in self.clients:
+                c.pop("residual", None)
+            for i, leaves in d["items"]:
+                self.clients[int(i)]["residual"] = \
+                    jax.tree_util.tree_unflatten(treedef, [
+                        jnp.asarray(np.asarray(l), t.dtype)
+                        for l, t in zip(leaves, tmpl)])
+
+    def _ckpt_fingerprint(self):
+        """Config/layout identity a checkpoint must match to restore: the
+        mutable state's meaning depends on all of it (the ParamLayout
+        chunking via the chunk plan, the wire format via payload shapes,
+        the engine via the EF layout, the seed via every RNG stream)."""
+        cfg = self.cfg
+        chunks = [[int(p["s"]), int(p["e"])]
+                  for p in self.comm.chunk_plan()] if self.chunked else None
+        return {"format": fleet_ckpt.FORMAT_VERSION,
+                "M": int(self.M), "n": int(self._global_flat.shape[0]),
+                "engine": self.engine, "wire_fmt": self.wire_fmt,
+                "q_dtype": str(cfg.q_dtype),
+                "base_store": self.base_store,
+                "client_store": str(cfg.client_store),
+                "error_feedback": bool(cfg.error_feedback),
+                "ef_kind": self._ef_kind(),
+                "tau": int(cfg.tau), "C": float(cfg.C),
+                "seed": int(cfg.seed),
+                "sparse_comm": bool(cfg.sparse_comm),
+                "sparse_threshold": str(cfg.sparse_threshold),
+                "chunks": chunks}
+
+    def _ckpt_drain(self):
+        """Wait for the in-flight background checkpoint write, if any,
+        and re-raise whatever it failed with."""
+        if self._ckpt_queue is not None:
+            self._ckpt_queue.join()
+        if self._ckpt_exc is not None:
+            exc, self._ckpt_exc = self._ckpt_exc, None
+            raise exc
+
+    def _ckpt_submit(self, job):
+        """Hand ``job`` to the persistent checkpoint writer thread
+        (started lazily; spawning a thread per save costs milliseconds).
+        Exceptions surface on the next :meth:`_ckpt_drain`."""
+        if self._ckpt_thread is None:
+            self._ckpt_queue = queue.Queue()
+
+            def _loop(q=self._ckpt_queue):
+                while True:
+                    j = q.get()
+                    try:
+                        j()
+                    except BaseException as exc:
+                        self._ckpt_exc = exc
+                    finally:
+                        q.task_done()
+
+            self._ckpt_thread = threading.Thread(
+                target=_loop, name="fleet-ckpt-writer", daemon=True)
+            self._ckpt_thread.start()
+        self._ckpt_queue.put(job)
+
+    def _ckpt_sections(self):
+        """Snapshot every checkpoint section on the CALLING thread.
+        Device-resident tensors are captured by reference — JAX arrays
+        are immutable, so the writer thread can transfer and serialize
+        them later with no consistency risk — while everything mutable
+        on the host (participation matrix, scheduler/store/ledger state,
+        the log history) is copied or frozen to bytes here. Round logs
+        are append-only and never mutate once their round has closed, so
+        each is packed exactly once per run and the section is assembled
+        from cached bytes (re-encoding the whole history made save cost
+        grow linearly with the round index)."""
+        flat = self._global_flat if self._gp_tree is None \
+            else flatten_tree(self._gp_tree)
+        # capture the new logs by reference; the writer thread packs them
+        # into the shared cache (exclusive: at most one write in flight,
+        # and the training thread only touches the cache after a drain)
+        cache = self._log_pack
+        new_logs = self.logs[len(cache):]
+
+        def _logs_bytes():
+            for log in new_logs:
+                cache.append(fleet_ckpt.pack(vars(log)))
+            return fleet_ckpt.pack_array_of_packed(cache)
+
+        sections = {
+            "trainer": {
+                "round": int(self.global_version),
+                "rng": self.rng,
+                "global_flat": flat,
+                "server_opt": list(jax.tree.leaves(self.server_opt)),
+                "participation": self.participation.copy(),
+                "ef": self._ef_state(),
+            },
+            "scheduler": self.scheduler.state_dict(),
+            # defer=True: the snapshot must not block on the round's
+            # still-in-flight device work — the writer thread resolves
+            # the Lazy folds (bit-identical to the eager path)
+            "store": self.store.state_dict(defer=True),
+            "comm": self.comm.ledger_state(defer=True),
+            "logs": fleet_ckpt.PrePacked(_logs_bytes),
+        }
+        if self.paged:
+            sections["cstore"] = self.cstore.state_dict()
+        return sections
+
+    def save_checkpoint(self, *, wait=True):
+        """Write one crash-consistent checkpoint of the COMPLETE round-
+        boundary state: global model + server Adam state, EF residuals,
+        the versioned base store (ring, chain, versions, detached mask),
+        paged client pages, scheduler heaps + fault-RNG positions, comm
+        ledgers, participation matrix and round logs — committed by a
+        checksummed MANIFEST written tmp+fsync+rename LAST, so a crash
+        mid-write leaves the previous good checkpoint restorable.
+
+        With ``wait=False`` the host transfer, serialization and disk
+        protocol run on a background writer thread (at most one in
+        flight; a new save or :meth:`restore` joins it first), keeping
+        the training loop's exposure to a few hundred microseconds of
+        snapshotting — ``train()`` checkpoints this way. Errors from a
+        background write surface on the next save/drain. Returns the
+        checkpoint directory path."""
+        root = self.cfg.checkpoint_dir
+        if not root:
+            raise ValueError(
+                "save_checkpoint() needs FedS3AConfig(checkpoint_dir=...)")
+        self._ckpt_drain()
+        rnd = int(self.global_version)
+        sections = self._ckpt_sections()
+        fingerprint = self._ckpt_fingerprint()
+
+        def _write():
+            # one batched host transfer for every device-resident tensor
+            # (per-leaf np.asarray would pay a dispatch+sync each); this
+            # also absorbs the wait for the round's still-in-flight async
+            # dispatch, which is the bulk of a synchronous save's cost
+            return fleet_ckpt.write_checkpoint(
+                root, rnd, jax.device_get(sections), fingerprint)
+
+        if wait:
+            return _write()
+        self._ckpt_submit(_write)
+        return os.path.join(root, f"ckpt-{rnd:08d}")
+
+    def restore(self, checkpoint_dir=None):
+        """Resume from the newest restorable checkpoint (torn writes fall
+        back to the previous good one). Call on a freshly constructed
+        trainer with the same data and config as the writer — the
+        fingerprint is validated — then ``train()`` continues bit-exactly
+        where the checkpoint left off: schedules, metrics, ACO, fault
+        traces and fleet health all match an uninterrupted run. Returns
+        the restored round index."""
+        self._ckpt_drain()
+        root = checkpoint_dir if checkpoint_dir is not None \
+            else self.cfg.checkpoint_dir
+        if not root:
+            raise ValueError("restore() needs a checkpoint directory")
+        path, manifest = fleet_ckpt.find_restorable(root)
+        if path is None:
+            raise FileNotFoundError(
+                f"no restorable checkpoint under {root!r}")
+        fp = self._ckpt_fingerprint()
+        if manifest.get("fingerprint") != fp:
+            raise ValueError(
+                "checkpoint fingerprint mismatch: the checkpoint was "
+                "written under a different configuration/layout than this "
+                "trainer's")
+        tr = fleet_ckpt.read_section(path, "trainer")
+        self.global_version = int(tr["round"])
+        self.rng = jnp.asarray(np.asarray(tr["rng"]), jnp.uint32)
+        self._global_flat = jnp.asarray(np.asarray(tr["global_flat"]),
+                                        jnp.float32)
+        self._gp_tree = None
+        leaves, treedef = jax.tree_util.tree_flatten(self.server_opt)
+        if len(tr["server_opt"]) != len(leaves):
+            raise ValueError(
+                f"checkpoint server_opt has {len(tr['server_opt'])} "
+                f"leaves, expected {len(leaves)}")
+        self.server_opt = jax.tree_util.tree_unflatten(treedef, [
+            jnp.asarray(np.asarray(s).reshape(np.shape(t)),
+                        jnp.asarray(t).dtype)
+            for s, t in zip(tr["server_opt"], leaves)])
+        self.participation = np.asarray(
+            tr["participation"], np.float64).reshape(-1, self.M)
+        self._load_ef_state(tr["ef"])
+        self.scheduler.load_state_dict(
+            fleet_ckpt.read_section(path, "scheduler"))
+        self.store.load_state_dict(fleet_ckpt.read_section(path, "store"))
+        self.comm.load_ledger_state(fleet_ckpt.read_section(path, "comm"))
+        if self.paged:
+            self.cstore.load_state_dict(
+                fleet_ckpt.read_section(path, "cstore"))
+            # the store's load reassigned its version arrays; re-adopt the
+            # references so host-byte reporting tracks the live objects
+            self.cstore.adopt_versions(self.store.client_version,
+                                       self.store.detached)
+        self.logs = []
+        self._log_pack = []
+        for d in fleet_ckpt.read_section(path, "logs"):
+            d = dict(d)
+            d["stalenesses"] = {int(k): float(v)
+                                for k, v in d["stalenesses"].items()}
+            self.logs.append(RoundLog(**d))
+        self._data_window_bytes = 0
+        return int(tr["round"])
+
     def evaluate(self, params=None):
         params = params if params is not None else self.global_params
         test = self.data["test"]
@@ -1991,10 +2339,24 @@ class FedS3ATrainer:
 
     def train(self, rounds=None, *, eval_every=0):
         rounds = rounds or self.cfg.rounds
+        cfg = self.cfg
         for _ in range(rounds):
             log = self.run_round()
             if eval_every and (log.round + 1) % eval_every == 0:
                 log.metrics = self.evaluate()
+            # checkpoint cadence keyed to the GLOBAL round index, not this
+            # call's loop counter, so train(50) and train(25)+train(25)
+            # write identical checkpoints
+            if cfg.checkpoint_dir and cfg.checkpoint_every \
+                    and self.global_version % cfg.checkpoint_every == 0:
+                self.save_checkpoint(wait=False)
+        # final checkpoint at the last round, unless the cadence just
+        # wrote one — a resumed run continues from exactly where this
+        # train() call stopped, not the last multiple of checkpoint_every
+        if cfg.checkpoint_dir and cfg.checkpoint_every \
+                and self.global_version % cfg.checkpoint_every != 0:
+            self.save_checkpoint(wait=False)
+        self._ckpt_drain()
         final = self.evaluate()
         art = float(np.mean([l.art for l in self.logs]))
         return {"metrics": final, "art": art, "aco": self.comm.aco,

@@ -1,0 +1,249 @@
+"""Crash-consistent fleet checkpointing: atomic, checksummed, restartable.
+
+One checkpoint is a directory ``<root>/ckpt-{round:08d}/`` holding one
+msgpack section file per state owner (trainer tensors, scheduler heaps,
+base-store ring, comm ledgers, paged client pages, round logs) plus a
+``MANIFEST.msgpack`` carrying a sha256 digest of every section and the
+trainer's configuration fingerprint. Write protocol:
+
+1. section files are written directly (no per-file fsync or rename):
+   until the manifest lands the whole directory is uncommitted, and the
+   manifest digests make a section that was torn mid-write or never
+   reached disk indistinguishable from bit-rot — restore detects it
+   instead of trusting it. Per-section durability ceremony buys nothing
+   that validation does not already give, and fsync-per-file is
+   otherwise the entire cost of a save;
+2. the MANIFEST is written LAST, by tmp + fsync + rename — it is the
+   single commit (and durability) point. A crash at any earlier moment
+   leaves a directory with no (or a stale) manifest, or a manifest
+   whose digests do not match the files on disk; a power cut at worst
+   invalidates the newest checkpoint, which restore skips;
+3. retention prunes all but the newest ``keep`` checkpoints — the
+   previous good checkpoint survives precisely so an invalidated newest
+   write has a fallback. Directory entries are not fsynced: against
+   SIGKILL (the primary threat model — the kernel keeps dirty pages) a
+   committed checkpoint is always visible, and a power cut that loses
+   the rename at worst hides the newest checkpoint, which is the same
+   graceful fallback as every other torn-write shape above.
+
+Restore (:func:`find_restorable`) scans checkpoints newest-first and
+returns the first whose manifest parses and whose every section matches
+its digest — a torn or bit-rotted newest checkpoint falls back to the
+previous good one instead of poisoning the resume. The subprocess
+kill-resume suite (tests/test_kill_resume.py) SIGKILLs a training run
+mid-round and pins the restored twin bit-identical to an uninterrupted
+run.
+
+Serialization is a small self-describing encoding on top of msgpack:
+numpy/JAX arrays keep dtype+shape+raw bytes, dicts keep non-string keys
+(scheduler version maps, staleness logs), and integers wider than 64
+bits — the 128-bit PCG64 state words inside ``np.random.Generator``
+snapshots — ride as tagged hex strings, so RNG stream positions restore
+exactly.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import re
+import shutil
+
+import msgpack
+import numpy as np
+
+MANIFEST_NAME = "MANIFEST.msgpack"
+FORMAT_VERSION = 1
+_CKPT_RE = re.compile(r"^ckpt-(\d{8})$")
+# msgpack packs ints in [-2^63, 2^64); anything wider is tagged hex
+_INT_LO, _INT_HI = -(1 << 63), 1 << 64
+
+
+# -- value encoding ---------------------------------------------------------
+class Lazy:
+    """A value whose host materialization is deferred to serialization
+    time: ``fn`` is a thunk closed over IMMUTABLE state (device arrays,
+    already-copied host numbers) that :func:`pack` resolves when it
+    encodes. Lets a snapshot taken on the training thread avoid blocking
+    on in-flight device work — the checkpoint writer thread pays the
+    sync instead."""
+    __slots__ = ("fn",)
+
+    def __init__(self, fn):
+        self.fn = fn
+
+
+def _encode(obj):
+    """Lower ``obj`` to msgpack-packable types, recursively, reversibly."""
+    if isinstance(obj, Lazy):
+        return _encode(obj.fn())
+    if obj is None or isinstance(obj, (bool, str, bytes)):
+        return obj
+    if isinstance(obj, int):
+        if _INT_LO <= obj < _INT_HI:
+            return obj
+        return {"__big__": hex(obj)}
+    if isinstance(obj, float):
+        return obj
+    if isinstance(obj, (np.integer, np.floating, np.bool_)):
+        return _encode(obj.item())
+    if isinstance(obj, dict):
+        return {"__map__": [[_encode(k), _encode(v)]
+                            for k, v in obj.items()]}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    # anything array-like (numpy, JAX device arrays) lands here
+    arr = np.asarray(obj)
+    return {"__nd__": {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                       "data": np.ascontiguousarray(arr).tobytes()}}
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if "__big__" in obj:
+            return int(obj["__big__"], 16)
+        if "__nd__" in obj:
+            d = obj["__nd__"]
+            arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"]))
+            return arr.reshape(d["shape"]).copy()
+        if "__map__" in obj:
+            return {_decode(k): _decode(v) for k, v in obj["__map__"]}
+        raise ValueError(f"unknown tagged object with keys {sorted(obj)}")
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def pack(obj) -> bytes:
+    return msgpack.packb(_encode(obj), use_bin_type=True)
+
+
+class PrePacked:
+    """A section already encoded to msgpack bytes — or a thunk producing
+    them, resolved at write time (so a background writer can pay the
+    encoding cost); :func:`write_checkpoint` stores the bytes verbatim."""
+    __slots__ = ("_src",)
+
+    def __init__(self, src):
+        self._src = src
+
+    @property
+    def data(self) -> bytes:
+        return self._src() if callable(self._src) else self._src
+
+
+def pack_array_of_packed(items):
+    """A msgpack array assembled from already-:func:`pack`-ed element
+    bytes. msgpack is context-free, so concatenation under an array
+    header is byte-identical to ``pack`` of the whole list and
+    :func:`unpack` reads it back as a normal list — which lets an
+    append-only history (the round logs) be encoded once per ELEMENT
+    over a run instead of once per checkpoint, keeping save cost flat
+    instead of growing with the round index."""
+    n = len(items)
+    if n < 16:
+        header = bytes([0x90 | n])
+    elif n < 1 << 16:
+        header = b"\xdc" + n.to_bytes(2, "big")
+    else:
+        header = b"\xdd" + n.to_bytes(4, "big")
+    return header + b"".join(items)
+
+
+def unpack(data: bytes):
+    return _decode(msgpack.unpackb(data, raw=False, strict_map_key=False))
+
+
+# -- atomic file protocol ---------------------------------------------------
+def _write_atomic(path, data: bytes):
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def checkpoint_dirs(root):
+    """All checkpoint directories under ``root`` as (round, path),
+    ascending by round. Tolerates a missing root (no checkpoints yet)."""
+    out = []
+    try:
+        names = os.listdir(root)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        m = _CKPT_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(root, name)))
+    out.sort()
+    return out
+
+
+def write_checkpoint(root, round_no, sections, fingerprint, *, keep=2):
+    """Write one checkpoint atomically; returns its directory path.
+
+    ``sections`` maps section name -> serializable state dict. The
+    MANIFEST (digests + ``fingerprint`` + ``round``) commits the write;
+    until it lands, :func:`find_restorable` does not see this checkpoint.
+    Retention then drops all but the newest ``keep`` checkpoints (the
+    previous good one survives precisely so a torn NEXT write has a
+    fallback).
+    """
+    os.makedirs(root, exist_ok=True)
+    path = os.path.join(root, f"ckpt-{int(round_no):08d}")
+    os.makedirs(path, exist_ok=True)
+    files = {}
+    for name, obj in sections.items():
+        data = obj.data if isinstance(obj, PrePacked) else pack(obj)
+        fname = f"{name}.msgpack"
+        # plain write, no fsync/rename: the digest below catches a torn or
+        # undurable section, and the fsynced manifest is the commit point
+        with open(os.path.join(path, fname), "wb") as f:
+            f.write(data)
+        files[fname] = hashlib.sha256(data).hexdigest()
+    manifest = {"format": FORMAT_VERSION, "round": int(round_no),
+                "files": files, "fingerprint": fingerprint}
+    _write_atomic(os.path.join(path, MANIFEST_NAME), pack(manifest))
+    for _, old in checkpoint_dirs(root)[:-max(int(keep), 1)]:
+        shutil.rmtree(old, ignore_errors=True)
+    return path
+
+
+def validate_checkpoint(path):
+    """Manifest dict if the checkpoint at ``path`` is complete and every
+    section matches its recorded digest; ``None`` for torn / corrupted /
+    uncommitted checkpoints (missing manifest, unparseable manifest,
+    missing section, digest mismatch)."""
+    try:
+        with open(os.path.join(path, MANIFEST_NAME), "rb") as f:
+            manifest = unpack(f.read())
+    except (OSError, ValueError, msgpack.UnpackException):
+        return None
+    if not isinstance(manifest, dict) or "files" not in manifest:
+        return None
+    for fname, digest in manifest["files"].items():
+        try:
+            with open(os.path.join(path, fname), "rb") as f:
+                data = f.read()
+        except OSError:
+            return None
+        if hashlib.sha256(data).hexdigest() != digest:
+            return None
+    return manifest
+
+
+def find_restorable(root):
+    """Newest valid checkpoint under ``root`` as (path, manifest), or
+    (None, None). Scans newest-first: a torn latest write falls back to
+    the previous good checkpoint."""
+    for _, path in reversed(checkpoint_dirs(root)):
+        manifest = validate_checkpoint(path)
+        if manifest is not None:
+            return path, manifest
+    return None, None
+
+
+def read_section(path, name):
+    """Load one section of a checkpoint directory."""
+    with open(os.path.join(path, f"{name}.msgpack"), "rb") as f:
+        return unpack(f.read())

@@ -57,6 +57,7 @@ def fleet_health(logs):
         "mean_quorum_frac": float(np.mean(fracs)) if fracs else 1.0,
         "crashes": sum(l.crashes for l in logs),
         "lost_uploads": sum(len(l.lost) for l in logs),
+        "quarantined": sum(len(l.corrupted) for l in logs),
         "departures": sum(len(l.departed) for l in logs),
         "rejoins": sum(len(l.rejoined) for l in logs),
         "resyncs": sum(len(l.resynced) for l in logs),

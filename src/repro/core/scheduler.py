@@ -69,7 +69,8 @@ class ClientRun:
     client: int
     base_version: int      # global round the client's base model came from
     finish_time: float     # upload arrival (or crash) instant
-    fate: str = "ok"       # "ok" | "crash" | "lost" — sampled at start
+    fate: str = "ok"       # "ok" | "crash" | "lost" | "corrupt" —
+                           # sampled at start
 
 
 @dataclass
@@ -83,6 +84,9 @@ class RoundResult:
     forced: list           # clients force-restarted (version gap > tau)
     time: float            # simulated clock at aggregation
     lost: list = field(default_factory=list)      # uploads lost in transit
+    corrupted: list = field(default_factory=list)  # uploads that arrived
+                                                   # malformed and were
+                                                   # quarantined
     departed: list = field(default_factory=list)  # clients that left
     rejoined: list = field(default_factory=list)  # clients back online
     resynced: list = field(default_factory=list)  # filled by the trainer:
@@ -112,6 +116,7 @@ class SchedulerState:
     live_runs: int = 0
     # per-round scratch, drained at each boundary
     pending_lost: list = field(default_factory=list)
+    pending_corrupt: list = field(default_factory=list)
     pending_rejoin: set = field(default_factory=set)
     pending_departed: list = field(default_factory=list)
     _seq: int = 0
@@ -219,6 +224,8 @@ class SemiAsyncScheduler:
                 st.pending_departed.append(client)
             if client in st.pending_lost:
                 st.pending_lost.remove(client)
+            if client in st.pending_corrupt:
+                st.pending_corrupt.remove(client)
             self._schedule_join(client, t)
         else:  # join
             if st.online[client]:
@@ -293,6 +300,11 @@ class SemiAsyncScheduler:
                 # the upload evaporated in transit; the client waits for
                 # the next broadcast like any other uploader
                 st.pending_lost.append(run.client)
+            elif run.fate == "corrupt":
+                # the payload arrived malformed; the server's wire
+                # validation quarantines it and the client — like a lost
+                # uploader — waits for the next broadcast
+                st.pending_corrupt.append(run.client)
             else:
                 arrivals.append(run)
 
@@ -336,9 +348,13 @@ class SemiAsyncScheduler:
                 st.versions[run.client] = new_version
                 self._start_run(run.client, new_version, st.time)
 
-        # lost-upload clients receive the broadcast and start over
+        # lost-upload clients receive the broadcast and start over;
+        # quarantined uploaders follow the identical path (their payload
+        # arrived but was rejected, so from the model's point of view it
+        # was never delivered)
         lost = sorted(st.pending_lost)
-        for c in lost:
+        corrupted = sorted(st.pending_corrupt)
+        for c in lost + corrupted:
             st.versions[c] = new_version
             self._start_run(c, new_version, st.time)
 
@@ -355,6 +371,7 @@ class SemiAsyncScheduler:
 
         departed = sorted(set(st.pending_departed))
         st.pending_lost = []
+        st.pending_corrupt = []
         st.pending_rejoin = set()
         st.pending_departed = []
 
@@ -362,6 +379,78 @@ class SemiAsyncScheduler:
         return RoundResult(
             participants=participants, stale=stale,
             forced=[r.client for r in forced], time=st.time,
-            lost=lost, departed=departed, rejoined=rejoined,
+            lost=lost, corrupted=corrupted, departed=departed,
+            rejoined=rejoined,
             crashes=crashes, degraded=degraded, deadline_hit=deadline_hit,
             quorum=len(participants), target_k=self.k)
+
+    # -- checkpoint / restore ----------------------------------------------
+    def state_dict(self):
+        """The scheduler's complete mutable state as plain data (lists,
+        dicts, numbers, strings) — both heaps in their underlying list
+        order (which already satisfies the heap invariant, so restore is a
+        straight copy-in), every pending scratch list, and the exact
+        bit-generator state of BOTH RNG streams (latency jitter and fault
+        traffic). Restoring onto a scheduler built with the same
+        constructor arguments reproduces the identical ``next_round()``
+        sequence, draw for draw.
+
+        The RNG entries are ``numpy`` ``bit_generator.state`` dicts and may
+        contain >64-bit integers; callers serializing to formats without
+        bignums (msgpack) must encode those themselves.
+        """
+        st = self.state
+        return {
+            "M": self.M,
+            "time": float(st.time),
+            "round": int(st.round),
+            "runs": [[float(t), int(seq),
+                      [int(r.client), int(r.base_version),
+                       float(r.finish_time), str(r.fate)]]
+                     for (t, seq, r) in st.runs],
+            "events": [[float(t), int(seq), str(kind), int(c)]
+                       for (t, seq, kind, c) in st.events],
+            "versions": [[int(c), int(v)] for c, v in st.versions.items()],
+            "online": [[int(c), bool(v)] for c, v in st.online.items()],
+            "run_seq": [[int(c), int(s)] for c, s in st.run_seq.items()],
+            "cancelled": sorted(int(s) for s in st.cancelled),
+            "live_runs": int(st.live_runs),
+            "pending_lost": [int(c) for c in st.pending_lost],
+            "pending_corrupt": [int(c) for c in st.pending_corrupt],
+            "pending_rejoin": sorted(int(c) for c in st.pending_rejoin),
+            "pending_departed": [int(c) for c in st.pending_departed],
+            "seq": int(st._seq),
+            "rng": self._rng.bit_generator.state,
+            "traffic_rng": self._traffic_rng.bit_generator.state,
+        }
+
+    def load_state_dict(self, d):
+        """Restore :meth:`state_dict` output. The scheduler must have been
+        constructed with the same fleet (``M`` is checked; the caller owns
+        matching C/tau/jitter/traffic/seed — a mismatch there silently
+        diverges, which is why the trainer fingerprints its full config)."""
+        if int(d["M"]) != self.M:
+            raise ValueError(f"scheduler state is for a fleet of "
+                             f"{d['M']} clients, this scheduler has "
+                             f"{self.M}")
+        st = SchedulerState()
+        st.time = float(d["time"])
+        st.round = int(d["round"])
+        st.runs = [(float(t), int(seq),
+                    ClientRun(int(c), int(b), float(f), str(fate)))
+                   for (t, seq, (c, b, f, fate)) in d["runs"]]
+        st.events = [(float(t), int(seq), str(kind), int(c))
+                     for (t, seq, kind, c) in d["events"]]
+        st.versions = {int(c): int(v) for c, v in d["versions"]}
+        st.online = {int(c): bool(v) for c, v in d["online"]}
+        st.run_seq = {int(c): int(s) for c, s in d["run_seq"]}
+        st.cancelled = set(int(s) for s in d["cancelled"])
+        st.live_runs = int(d["live_runs"])
+        st.pending_lost = [int(c) for c in d["pending_lost"]]
+        st.pending_corrupt = [int(c) for c in d.get("pending_corrupt", [])]
+        st.pending_rejoin = set(int(c) for c in d["pending_rejoin"])
+        st.pending_departed = [int(c) for c in d["pending_departed"]]
+        st._seq = int(d["seq"])
+        self._rng.bit_generator.state = d["rng"]
+        self._traffic_rng.bit_generator.state = d["traffic_rng"]
+        self.state = st

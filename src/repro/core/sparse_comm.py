@@ -151,6 +151,23 @@ def unflatten_stacked(flat, template_tree):
 WIRE_FORMATS = ("csr", "csr_q", "dense_masked")
 CSR_FORMATS = ("csr", "csr_q")
 Q_DTYPES = ("int8", "fp16")
+Q_BLOCK = 512             # csr_q in-block offset range (csr_compact's
+                          # stage-1 block size): offsets are int16 in
+                          # [0, Q_BLOCK) and the block-count table has
+                          # ceil(n / Q_BLOCK) entries per row
+# the fault injector's malformed-payload menu: every class of corruption
+# the wire validator must catch. Each kind maps to one specific mutilation
+# in SparseComm.malform_stats and every kind raises WireIntegrityError
+# under every CSR-family wire format.
+MALFORM_KINDS = ("row_ptr", "oob_index", "nan_value", "bad_scale",
+                 "arity", "truncated", "dtype")
+
+
+class WireIntegrityError(ValueError):
+    """An incoming upload failed wire validation (malformed row_ptr,
+    out-of-bounds index, non-finite value/scale, wrong arity/dtype/shape,
+    truncated buffer). The payload must be quarantined — never decoded,
+    never aggregated, never booked."""
 CAP_FACTOR = 2.5          # payload capacity slack over the target keep_frac:
                           # near-tied delta magnitudes (e.g. sign-like early
                           # Adam steps) push the kept fraction past the
@@ -707,6 +724,229 @@ class SparseComm:
         if self.wire_format == "csr_q":
             stats["blocks"], stats["scales"] = payload[2], payload[3]
         return stats
+
+    # -- wire integrity ----------------------------------------------------
+    def validate_payload(self, stats):
+        """Wire-integrity gauntlet for an incoming payload, applied at the
+        trust boundary (an upload arriving from an untrusted device) BEFORE
+        decode or accounting. Raises :class:`WireIntegrityError` on any
+        malformation; returns ``stats`` unchanged on success.
+
+        Checks, in order: arity (exactly the keys this channel's wire
+        format ships — 2 payload arrays for ``csr``, 4 for ``csr_q``),
+        buffer shapes (no truncation: every array spans ``rows`` x the
+        shared capacity), dtypes (integer indices/counts, the format's
+        value width), the implied row_ptr (per-row stored counts
+        non-negative and within capacity, i.e. the CSR row_ptr is monotone
+        and in-capacity), index bounds (every stored column inside
+        ``[0, total)``; csr_q offsets inside their decode block), csr_q
+        block-count tables consistent with the stored counts, and finite
+        values/scales (a NaN or inf would poison the aggregate through a
+        single scatter-add).
+
+        Host-syncing by design: validation runs only on untrusted
+        boundary payloads (quarantine candidates, tests), never inside the
+        engines' jitted round bodies.
+        """
+        def fail(msg):
+            raise WireIntegrityError(f"malformed upload: {msg}")
+
+        if not isinstance(stats, dict):
+            fail(f"payload is {type(stats).__name__}, not a stats mapping")
+        for k in ("nnz", "total", "rows"):
+            if k not in stats:
+                fail(f"missing framing field {k!r}")
+        try:
+            rows, n = int(stats["rows"]), int(stats["total"])
+        except (TypeError, ValueError):
+            fail("non-integer rows/total framing")
+        if rows < 1 or n < 1:
+            fail(f"non-positive framing (rows={rows}, total={n})")
+
+        quantized = self.wire_format == "csr_q"
+        payload_keys = {"values", "indices"} | \
+            ({"blocks", "scales"} if quantized else set())
+        got = {k for k in ("values", "indices", "blocks", "scales")
+               if k in stats}
+        if got != payload_keys:
+            if not self.enabled or self.wire_format not in CSR_FORMATS:
+                # dense-family message: only the count field to check
+                stored = np.asarray(stats["nnz"], np.float64).reshape(-1)
+                if not np.isfinite(stored).all() or (stored < 0).any() \
+                        or (stored > n).any():
+                    fail("dense message count outside [0, total]")
+                return stats
+            fail(f"wrong payload arity for {self.wire_format!r}: expected "
+                 f"fields {sorted(payload_keys)}, got {sorted(got)}")
+
+        vals = np.asarray(stats["values"])
+        idx = np.asarray(stats["indices"])
+        stored = np.asarray(stats["nnz"])
+        if stored.size != rows:
+            fail(f"stored-count vector has {stored.size} entries for "
+                 f"{rows} rows")
+        if not np.issubdtype(stored.dtype, np.integer):
+            fail(f"stored counts must be integers, got {stored.dtype}")
+        stored = stored.reshape(-1).astype(np.int64)
+        if vals.size == 0 or vals.size % rows or idx.size % rows:
+            fail("truncated payload buffer: array size not divisible by "
+                 "the row count")
+        cap = vals.size // rows
+        if idx.size != rows * cap:
+            fail(f"truncated payload buffer: values span {cap} "
+                 f"columns/row, indices {idx.size // rows}")
+        vals = vals.reshape(rows, cap)
+        idx = idx.reshape(rows, cap)
+        if not np.issubdtype(idx.dtype, np.integer):
+            fail(f"indices must be integers, got {idx.dtype}")
+        want_val = (np.int8 if self.q_dtype == "int8" else np.float16) \
+            if quantized else np.float32
+        if vals.dtype != np.dtype(want_val):
+            fail(f"values dtype {vals.dtype} != {np.dtype(want_val)} for "
+                 f"wire format {self.wire_format!r}")
+        # the implied row_ptr (concat([0], cumsum(stored))) must be
+        # monotone and land inside the buffer: stored in [0, cap]
+        if (stored < 0).any() or (stored > cap).any():
+            fail(f"row_ptr not monotone in-capacity: stored counts must "
+                 f"lie in [0, {cap}], got "
+                 f"[{int(stored.min())}, {int(stored.max())}]")
+        live = np.arange(cap)[None, :] < stored[:, None]
+        bound = Q_BLOCK if quantized else n
+        if ((idx < 0) & live).any() or ((idx >= bound) & live).any():
+            fail(f"column {'offset' if quantized else 'index'} out of "
+                 f"bounds [0, {bound})")
+        if not np.isfinite(vals[live].astype(np.float64)).all():
+            fail("non-finite payload value")
+        if quantized:
+            blocks = np.asarray(stats["blocks"])
+            scales = np.asarray(stats["scales"])
+            if not np.issubdtype(blocks.dtype, np.integer):
+                fail(f"block-count table must be integers, got "
+                     f"{blocks.dtype}")
+            nblocks = blocks.size // rows if blocks.size % rows == 0 else -1
+            if nblocks < 1:
+                fail("truncated block-count table")
+            blocks = blocks.reshape(rows, nblocks).astype(np.int64)
+            if (blocks < 0).any():
+                fail("negative block count")
+            if (blocks.sum(axis=1) != stored).any():
+                fail("block-count table inconsistent with stored counts")
+            scales = scales.astype(np.float64).reshape(-1)
+            if not np.isfinite(scales).all():
+                fail("non-finite quantization scale")
+        return stats
+
+    def malform_stats(self, stats, kind):
+        """Return a copy of ``stats`` corrupted in one specific way —
+        ``kind`` from :data:`MALFORM_KINDS`. This is the fault injector's
+        bit-flip/truncation menu: the trainer uses it to materialize a
+        ``corrupt``-fated upload's damage deterministically, and the
+        quarantine tests sweep it to pin that every class is caught.
+        Every kind raises :class:`WireIntegrityError` under every
+        CSR-family wire format (pinned by tests/test_wire_integrity.py)."""
+        if kind not in MALFORM_KINDS:
+            raise ValueError(f"kind must be one of {MALFORM_KINDS}, "
+                             f"got {kind!r}")
+        out = dict(stats)
+        quantized = self.wire_format == "csr_q"
+        if kind == "row_ptr":           # negative count: row_ptr decreases
+            stored = np.asarray(out["nnz"]).reshape(-1).copy()
+            stored[0] = -1
+            out["nnz"] = stored
+        elif kind == "oob_index":       # column past the model / block edge
+            idx = np.array(out["indices"]).reshape(
+                int(out["rows"]), -1).copy()
+            idx[0, 0] = Q_BLOCK if quantized else int(out["total"])
+            stored = np.asarray(out["nnz"]).reshape(-1).copy()
+            stored[0] = max(int(stored[0]), 1)   # the bad column is live
+            out["indices"], out["nnz"] = idx, stored
+        elif kind == "nan_value":       # f32: NaN value; csr_q: inf scale
+            if quantized:
+                scales = np.array(out["scales"], np.float32).reshape(-1)
+                scales[0] = np.inf
+                out["scales"] = scales
+            else:
+                vals = np.array(out["values"], np.float32).reshape(
+                    int(out["rows"]), -1)
+                vals[0, 0] = np.nan
+                out["values"] = vals
+                stored = np.asarray(out["nnz"]).reshape(-1).copy()
+                stored[0] = max(int(stored[0]), 1)
+                out["nnz"] = stored
+        elif kind == "bad_scale":       # csr_q: NaN scale; csr: spurious
+            if quantized:               # scale field (wrong arity)
+                scales = np.array(out["scales"], np.float32).reshape(-1)
+                scales[0] = np.nan
+                out["scales"] = scales
+            else:
+                out["scales"] = np.ones(int(out["rows"]), np.float32)
+        elif kind == "arity":           # a payload array went missing
+            del out["indices"]
+        elif kind == "truncated":       # values buffer cut short in flight
+            vals = np.asarray(out["values"]).reshape(int(out["rows"]), -1)
+            out["values"] = vals[:, :-1] if vals.shape[1] > 1 \
+                else np.zeros((int(out["rows"]), 0), vals.dtype)
+        elif kind == "dtype":           # indices arrive as floats
+            out["indices"] = np.asarray(out["indices"], np.float32)
+        return out
+
+    # -- checkpoint / restore ----------------------------------------------
+    def ledger_state(self, *, defer=False):
+        """Snapshot the cumulative byte ledgers as plain host numbers.
+        Materializes the pending device scalars first — value-neutral,
+        because the fold is order-preserving and future messages append
+        after it either way.
+
+        ``defer=True`` (the checkpoint writer path) does not block on
+        in-flight device work: the pending fold is captured as
+        :class:`fleet_ckpt.Lazy` thunks over references taken now and
+        resolved on the writer thread — same entries, same order, same
+        float64 host arithmetic as the eager fold — while the LIVE
+        ledger's pending list is left untouched."""
+        if not defer:
+            self._materialize()
+            values = float(self._values_host)
+            indices = float(self._indices_host)
+        else:
+            from repro.core import fleet_ckpt
+            vb, ib = float(self._values_host), float(self._indices_host)
+            pend = list(self._pending_payload)
+
+            def _fold(base, col):
+                # per-element np.asarray: the writer thread must never
+                # LAUNCH device programs (a jnp.stack dispatched
+                # concurrently with the training thread's multi-device
+                # round can interleave collective rendezvous and deadlock
+                # XLA:CPU) — transfers only. Counts are exact integers, so
+                # the float64 fold matches the eager stack path exactly.
+                out = base
+                for entry in pend:
+                    out += float(np.asarray(entry[0])) * entry[col]
+                return out
+
+            values = fleet_ckpt.Lazy(lambda: _fold(vb, 1))
+            indices = fleet_ckpt.Lazy(lambda: _fold(ib, 2))
+        return {"values_host": values,
+                "indices_host": indices,
+                "dense_payload_host": float(self._dense_payload_host),
+                "dense_bytes": int(self.dense_bytes),
+                "row_ptr_bytes": int(self.row_ptr_bytes),
+                "scales_bytes": int(self.scales_bytes),
+                "block_table_bytes": int(self.block_table_bytes),
+                "messages": int(self.messages)}
+
+    def load_ledger_state(self, d):
+        """Restore :meth:`ledger_state` output (drops any pending
+        unmaterialized entries — the checkpoint is the truth)."""
+        self._pending_payload = []
+        self._values_host = float(d["values_host"])
+        self._indices_host = float(d["indices_host"])
+        self._dense_payload_host = float(d["dense_payload_host"])
+        self.dense_bytes = int(d["dense_bytes"])
+        self.row_ptr_bytes = int(d["row_ptr_bytes"])
+        self.scales_bytes = int(d["scales_bytes"])
+        self.block_table_bytes = int(d["block_table_bytes"])
+        self.messages = int(d["messages"])
 
     # -- single-message path (reference implementation) --------------------
     def encode(self, new_params, base_params, residual=None, *,

@@ -19,6 +19,12 @@ a faulted one:
   the next global broadcast: it becomes a distribution target of the next
   round but NOT an aggregation participant, and its upload bytes are never
   booked (bytes-on-wire counts deliveries, not encodes);
+* **payload corruption** (``corrupt_prob``) — the run finishes and its
+  payload *arrives*, but the bytes are malformed (bit flips, truncation).
+  The server's wire-integrity validation rejects it and the upload is
+  quarantined through the lost-upload path: never aggregated, never
+  booked, the client's EF residual retired, the round's ``quarantined``
+  count reported in fleet health;
 * **leave/rejoin churn** (``mean_online`` / ``mean_offline``, exponential
   session lengths) — a leaving client cancels its in-flight run and its
   server-side error-feedback residual is retired like a forced restart's; a
@@ -35,6 +41,9 @@ schedule, and the same ``(profile, seed)`` pair produces the bit-identical
 fault trace however many times — and under whichever engine — it is
 replayed.  Draw counts per decision are fixed (three uniforms per run fate,
 one per duration) so traces stay aligned across profiles that share a seed.
+A profile with ``corrupt_prob > 0`` draws one extra uniform per fate — the
+corruption axis shifts the stream ONLY when it is enabled, so every
+pre-existing trace is untouched.
 """
 from __future__ import annotations
 
@@ -54,6 +63,9 @@ class TrafficModel:
 
     crash_rate: float = 0.0        # P(run crashes mid-run; upload never born)
     upload_loss: float = 0.0       # P(finished run's upload lost in transit)
+    corrupt_prob: float = 0.0      # P(delivered payload arrives malformed
+                                   # and is quarantined by the server's
+                                   # wire-integrity validation)
     tail_sigma: float = 0.0        # lognormal sigma of the latency
                                    # multiplier (0 = deterministic); the
                                    # multiplier has unit MEAN, so the
@@ -65,7 +77,7 @@ class TrafficModel:
                                    # (joins mid-simulation via rejoin)
 
     def __post_init__(self):
-        for name in ("crash_rate", "upload_loss"):
+        for name in ("crash_rate", "upload_loss", "corrupt_prob"):
             v = getattr(self, name)
             if not 0.0 <= v <= MAX_FAULT_RATE:
                 raise ValueError(f"{name} must be in [0, {MAX_FAULT_RATE}] "
@@ -95,16 +107,21 @@ class TrafficModel:
     def run_fate(self, rng):
         """Sample one run's fate at start time.
 
-        Returns ``(fate, frac)`` with fate in {"ok", "crash", "lost"} and
-        ``frac`` the fraction of the run's duration survived before a crash
-        (meaningful only when fate == "crash").  Always exactly three
-        uniforms, so the stream stays aligned across outcomes.
+        Returns ``(fate, frac)`` with fate in {"ok", "crash", "lost",
+        "corrupt"} and ``frac`` the fraction of the run's duration survived
+        before a crash (meaningful only when fate == "crash").  Always
+        exactly three uniforms — plus one more iff ``corrupt_prob > 0`` —
+        so the stream stays aligned across outcomes, and enabling the
+        corruption axis is the only thing that can shift it.
         """
         u_crash, u_loss, frac = rng.random(), rng.random(), rng.random()
+        u_corrupt = rng.random() if self.corrupt_prob > 0 else 1.0
         if u_crash < self.crash_rate:
             return "crash", float(frac)
         if u_loss < self.upload_loss:
             return "lost", float(frac)
+        if u_corrupt < self.corrupt_prob:
+            return "corrupt", float(frac)
         return "ok", float(frac)
 
     def online_duration(self, rng) -> float:

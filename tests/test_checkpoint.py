@@ -20,3 +20,35 @@ def test_roundtrip(tmp_path, rng):
                                np.asarray(tree["params"]["w"], np.float32))
     assert out["step"] == 7
     assert out["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_dtype_mismatch_raises_unless_cast(tmp_path, rng):
+    """A checkpoint reloaded into a template with a different leaf dtype
+    must refuse (silent f32->f16 reload corrupts training invisibly)
+    unless the caller opts into the lossy cast explicitly."""
+    import pytest
+
+    tree = {"w": jax.random.normal(rng, (4, 5), jnp.float32)}
+    p = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(p, tree)
+    like = {"w": jnp.zeros((4, 5), jnp.float16)}
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        load_checkpoint(p, like)
+    out = load_checkpoint(p, like, cast=True)
+    assert out["w"].dtype == np.float16
+    np.testing.assert_allclose(
+        np.asarray(out["w"], np.float32),
+        np.asarray(tree["w"], np.float32).astype(np.float16).astype(
+            np.float32))
+
+
+def test_leaf_count_and_shape_mismatch_raise(tmp_path):
+    import pytest
+
+    p = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(p, {"a": np.ones((3,), np.float32)})
+    with pytest.raises(ValueError, match="leaves"):
+        load_checkpoint(p, {"a": np.ones((3,), np.float32),
+                            "b": np.ones((2,), np.float32)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        load_checkpoint(p, {"a": np.ones((4,), np.float32)})

@@ -1,0 +1,212 @@
+"""Crash-consistent fleet checkpointing (core.fleet_ckpt).
+
+Three layers:
+
+* **encoding** — the msgpack value codec round-trips numpy/JAX arrays
+  (dtype-exact), int-keyed dicts, and the 128-bit PCG64 state words that
+  make numpy Generator snapshots restore bit-exactly;
+* **torn-write recovery** — an interrupted or bit-rotted newest
+  checkpoint is invisible to ``find_restorable``: restore falls back to
+  the previous good checkpoint instead of loading garbage;
+* **bit-exact resume** — ``train(2k)`` and ``train(k) -> fresh trainer
+  -> restore() -> train(k)`` produce identical global models, ACO, fault
+  traces, fleet health and metrics across engines x {resident, paged} x
+  {csr, csr_q} x chunked layouts, under REFERENCE_CHURN plus corrupted
+  uploads.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.feds3a_cnn import CNNConfig
+from repro.core import (REFERENCE_CHURN, FedS3AConfig, FedS3ATrainer)
+from repro.core import fleet_ckpt
+from repro.core.sparse_comm import flatten_tree
+from repro.data import make_dataset
+
+TEST_CNN = CNNConfig(name="feds3a-cnn-ckpt", conv_filters=(8, 8), hidden=16)
+CHURN = dataclasses.replace(REFERENCE_CHURN, corrupt_prob=0.15)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("basic", scale=0.0015, seed=0)
+
+
+# -- value codec ------------------------------------------------------------
+def test_pack_roundtrips_arrays_bigints_and_int_keys():
+    rng = np.random.default_rng(7)
+    obj = {
+        "arr_f32": rng.standard_normal((3, 5)).astype(np.float32),
+        "arr_i8": np.arange(-4, 4, dtype=np.int8),
+        "bool_mask": np.array([True, False, True]),
+        "rng_state": rng.bit_generator.state,      # 128-bit state words
+        3: {"nested": [1, 2.5, None, "s"], -2: (1, 2)},
+        "big": (1 << 100) + 17,
+        "neg_big": -(1 << 90),
+    }
+    out = fleet_ckpt.unpack(fleet_ckpt.pack(obj))
+    assert np.array_equal(out["arr_f32"], obj["arr_f32"])
+    assert out["arr_f32"].dtype == np.float32
+    assert np.array_equal(out["arr_i8"], obj["arr_i8"])
+    assert out["arr_i8"].dtype == np.int8
+    assert out["bool_mask"].dtype == bool
+    assert out["rng_state"] == obj["rng_state"]
+    assert out[3]["nested"] == [1, 2.5, None, "s"]
+    assert out[3][-2] == [1, 2]                    # tuples land as lists
+    assert out["big"] == obj["big"] and out["neg_big"] == obj["neg_big"]
+    # the restored state must actually drive a Generator identically
+    g1, g2 = np.random.default_rng(7), np.random.default_rng(0)
+    g1.random(5)
+    g2.bit_generator.state = fleet_ckpt.unpack(
+        fleet_ckpt.pack(g1.bit_generator.state))
+    assert np.array_equal(g1.random(8), g2.random(8))
+
+
+# -- atomic write / torn-write recovery -------------------------------------
+def test_find_restorable_skips_torn_and_corrupt(tmp_path):
+    root = str(tmp_path)
+    a = fleet_ckpt.write_checkpoint(root, 5, {"s": {"x": 1}}, {"fp": 1})
+    b = fleet_ckpt.write_checkpoint(root, 10, {"s": {"x": 2}}, {"fp": 1})
+    path, man = fleet_ckpt.find_restorable(root)
+    assert path == b and man["round"] == 10
+
+    # bit-rot in a section: digest mismatch -> fall back to round 5
+    sec = os.path.join(b, "s.msgpack")
+    blob = bytearray(open(sec, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(sec, "wb").write(bytes(blob))
+    path, man = fleet_ckpt.find_restorable(root)
+    assert path == a and man["round"] == 5
+    assert fleet_ckpt.read_section(a, "s") == {"x": 1}
+
+    # a write that died before its MANIFEST landed is invisible
+    c = os.path.join(root, "ckpt-00000015")
+    os.makedirs(c)
+    with open(os.path.join(c, "s.msgpack"), "wb") as f:
+        f.write(fleet_ckpt.pack({"x": 3}))
+    path, _ = fleet_ckpt.find_restorable(root)
+    assert path == a
+
+    # truncated MANIFEST (torn rename target) is equally invisible
+    with open(os.path.join(c, fleet_ckpt.MANIFEST_NAME), "wb") as f:
+        f.write(b"\x82\xa6")
+    path, _ = fleet_ckpt.find_restorable(root)
+    assert path == a
+
+
+def test_retention_keeps_last_two(tmp_path):
+    root = str(tmp_path)
+    for r in (2, 4, 6, 8):
+        fleet_ckpt.write_checkpoint(root, r, {"s": {"r": r}}, {})
+    assert [r for r, _ in fleet_ckpt.checkpoint_dirs(root)] == [6, 8]
+
+
+# -- bit-exact trainer resume ----------------------------------------------
+_FULL_MATRIX = [
+    dict(engine="sequential", error_feedback=True),
+    dict(engine="batched", error_feedback=True),
+    dict(engine="sharded", error_feedback=True),
+    dict(engine="batched", error_feedback=True, wire_format="csr_q",
+         client_store="paged"),
+    dict(engine="sharded", error_feedback=True, client_store="paged"),
+    dict(engine="batched", error_feedback=True, chunk_size=400),
+]
+# Each cell compiles three trainers, so the full engine x store x wire
+# sweep costs several minutes of pure recompilation. The default (tier-1)
+# run pins two representative cells — the batched resident EF path and the
+# quantized paged path — and CI's kill-resume job sets CKPT_FULL_MATRIX=1
+# to sweep all six.
+CELLS = _FULL_MATRIX if os.environ.get("CKPT_FULL_MATRIX") \
+    else [_FULL_MATRIX[1], _FULL_MATRIX[3]]
+
+
+def _mk(data, ckpt_dir, **kw):
+    cfg = FedS3AConfig(rounds=50, cnn=TEST_CNN, seed=0, traffic=CHURN,
+                       round_deadline=700.0, quorum_floor=1,
+                       checkpoint_dir=ckpt_dir, checkpoint_every=2, **kw)
+    return FedS3ATrainer(data, cfg)
+
+
+def _flat(tr):
+    return np.asarray(tr._global_flat if tr._gp_tree is None
+                      else flatten_tree(tr.global_params))
+
+
+def _trace(tr):
+    return [(l.participants, l.forced, l.lost, l.corrupted, l.departed,
+             l.rejoined, l.resynced, l.quorum, l.target_k, l.degraded,
+             l.crashes, round(l.time, 9)) for l in tr.logs]
+
+
+@pytest.mark.parametrize("cell", CELLS,
+                         ids=["-".join(f"{v}" for v in c.values())
+                              for c in CELLS])
+def test_resume_is_bit_exact(data, tmp_path, cell):
+    """train(6) == train(3) -> fresh trainer -> restore -> train(3), to the
+    bit, for every state the round touches — under churn, losses AND
+    quarantined uploads."""
+    ta = _mk(data, str(tmp_path / "a"), **cell)
+    ra = ta.train(6)
+    tb = _mk(data, str(tmp_path / "b"),
+             **{**cell, "paged_dir": str(tmp_path / "pg_b")
+                if cell.get("client_store") == "paged" else None})
+    tb.train(3)
+    tc = _mk(data, str(tmp_path / "b"),
+             **{**cell, "paged_dir": str(tmp_path / "pg_c")
+                if cell.get("client_store") == "paged" else None})
+    assert tc.restore() == 3
+    rc = tc.train(3)
+    assert np.array_equal(_flat(ta), _flat(tc))
+    assert ra["aco"] == rc["aco"]
+    assert ra["fleet"] == rc["fleet"]
+    assert ra["metrics"] == rc["metrics"]
+    assert _trace(ta) == _trace(tc)
+    # base-store state converged too: versions, detached mask, ring
+    assert np.array_equal(ta.store.client_version, tc.store.client_version)
+    assert np.array_equal(ta.store.detached, tc.store.detached)
+    assert np.array_equal(np.asarray(ta.store.ring),
+                          np.asarray(tc.store.ring))
+
+
+def test_restore_falls_back_past_torn_trainer_checkpoint(data, tmp_path):
+    """SIGKILL-shaped damage on the NEWEST trainer checkpoint (truncated
+    section) must restore the previous one, and training onward from it
+    still matches the uninterrupted run."""
+    root = str(tmp_path / "ck")
+    ta = _mk(data, str(tmp_path / "ref"), engine="batched",
+             error_feedback=True)
+    ra = ta.train(6)
+    tb = _mk(data, root, engine="batched", error_feedback=True)
+    tb.train(4)            # checkpoints at rounds 2 and 4
+    newest = fleet_ckpt.checkpoint_dirs(root)[-1][1]
+    sec = os.path.join(newest, "trainer.msgpack")
+    blob = open(sec, "rb").read()
+    open(sec, "wb").write(blob[:len(blob) // 2])
+    tc = _mk(data, root, engine="batched", error_feedback=True)
+    assert tc.restore() == 2
+    rc = tc.train(4)
+    assert np.array_equal(_flat(ta), _flat(tc))
+    assert ra["fleet"] == rc["fleet"]
+    assert _trace(ta) == _trace(tc)
+
+
+def test_restore_rejects_mismatched_fingerprint(data, tmp_path):
+    root = str(tmp_path / "ck")
+    ta = _mk(data, root, engine="batched", error_feedback=True)
+    ta.train(2)
+    tc = _mk(data, root, engine="batched", error_feedback=False)
+    with pytest.raises(ValueError, match="fingerprint"):
+        tc.restore()
+    empty = str(tmp_path / "nothing")
+    with pytest.raises(FileNotFoundError):
+        ta.restore(empty)
+
+
+def test_checkpoint_requires_versioned_store(data, tmp_path):
+    with pytest.raises(ValueError, match="versioned"):
+        FedS3ATrainer(data, FedS3AConfig(
+            cnn=TEST_CNN, base_store="dense",
+            checkpoint_dir=str(tmp_path)))

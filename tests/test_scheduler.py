@@ -1,11 +1,15 @@
 """Semi-async scheduler: paper Fig. 3 / Table II behaviour + hypothesis
-properties of the FedS3A invariants."""
+properties of the FedS3A invariants, and checkpoint/restore round-trips."""
 import math
 
 import numpy as np
+import pytest
 from tests._hypothesis_compat import given, settings, st
 
-from repro.core.scheduler import SemiAsyncScheduler, paper_latency
+from repro.core import fleet_ckpt
+from repro.core.scheduler import (FleetStalledError, SemiAsyncScheduler,
+                                  paper_latency)
+from repro.core.traffic import TrafficModel
 
 
 def test_paper_latency_fit():
@@ -137,3 +141,94 @@ def test_all_clients_eventually_participate(seed):
         parts, _, _, _ = sch.next_round()
         seen |= {r.client for r in parts}
     assert seen == set(range(8))
+
+
+# -- checkpoint / restore ---------------------------------------------------
+_RT_TRAFFIC = TrafficModel(crash_rate=0.15, upload_loss=0.1,
+                           corrupt_prob=0.15, tail_sigma=0.4,
+                           mean_online=2000.0, mean_offline=400.0,
+                           late_join_frac=0.2)
+
+
+def _rt_sched():
+    lats = list(np.random.default_rng(3).uniform(150, 330, 10))
+    return SemiAsyncScheduler(lats, C=0.5, tau=2, jitter=0.1, seed=11,
+                              traffic=_RT_TRAFFIC, deadline=700.0,
+                              quorum_floor=1)
+
+
+def _round_trace(ev):
+    return ([(r.client, r.base_version, round(r.finish_time, 9), r.fate)
+             for r in ev.participants],
+            sorted(ev.stale.items()), ev.forced, ev.lost, ev.corrupted,
+            ev.departed, ev.rejoined, ev.crashes, ev.degraded,
+            ev.deadline_hit, ev.quorum, ev.target_k, round(ev.time, 9))
+
+
+def test_state_roundtrip_mid_stream():
+    """state_dict taken mid-stream (runs in flight, churn timers armed,
+    both RNGs advanced) restores onto a fresh scheduler and reproduces
+    the identical next_round() sequence — directly AND through the
+    fleet_ckpt msgpack codec (which must carry the 128-bit PCG64 words)."""
+    a = _rt_sched()
+    for _ in range(5):
+        a.next_round()
+    snap = a.state_dict()
+    ref = [_round_trace(a.next_round()) for _ in range(8)]
+
+    b = _rt_sched()
+    b.load_state_dict(snap)
+    assert [_round_trace(b.next_round()) for _ in range(8)] == ref
+
+    c = _rt_sched()
+    c.load_state_dict(fleet_ckpt.unpack(fleet_ckpt.pack(snap)))
+    assert [_round_trace(c.next_round()) for _ in range(8)] == ref
+
+
+def test_state_dict_rejects_wrong_fleet():
+    snap = _rt_sched().state_dict()
+    other = SemiAsyncScheduler([200.0, 250.0, 300.0])
+    with pytest.raises(ValueError, match="fleet"):
+        other.load_state_dict(snap)
+
+
+def test_stalled_diagnosis_survives_restore():
+    """A fleet that churns out raises FleetStalledError; a scheduler
+    restored from a pre-stall checkpoint replays the same healthy rounds
+    and then stalls at the same instant with the same diagnosis."""
+    def mk():
+        return SemiAsyncScheduler([200.0, 230.0, 260.0, 290.0, 310.0,
+                                   330.0], C=0.5, tau=2, seed=5,
+                                  traffic=TrafficModel(
+                                      crash_rate=0.3, mean_online=900.0,
+                                      mean_offline=5e8),
+                                  quorum_floor=1)
+
+    a = mk()
+    snaps, stall_round, stall_msg = [], None, None
+    for i in range(60):
+        snaps.append(a.state_dict())
+        try:
+            a.next_round()
+        except FleetStalledError as e:
+            stall_round, stall_msg = i, str(e)
+            break
+    assert stall_round is not None, "profile never stalled; weak test"
+    assert stall_round >= 1, "stalled before any healthy round"
+
+    # restore at the brink: the very next call raises the same diagnosis
+    b = mk()
+    b.load_state_dict(fleet_ckpt.unpack(fleet_ckpt.pack(snaps[-1])))
+    with pytest.raises(FleetStalledError) as exc:
+        b.next_round()
+    assert str(exc.value) == stall_msg
+
+    # restore earlier: healthy rounds replay, then the identical stall
+    j = max(0, stall_round - 2)
+    c = mk()
+    c.load_state_dict(snaps[j])
+    for _ in range(stall_round - j):
+        c.next_round()
+    with pytest.raises(FleetStalledError) as exc:
+        c.next_round()
+    assert str(exc.value) == stall_msg

@@ -1,0 +1,156 @@
+"""Wire-integrity gauntlet + quarantine (corrupt-fated uploads).
+
+Pins, per ISSUE 10:
+
+* every malformed-payload class in :data:`MALFORM_KINDS` — bad row_ptr,
+  out-of-bounds index, NaN/inf value or scale, wrong arity, truncated
+  buffer, wrong dtype — raises :class:`WireIntegrityError` under BOTH
+  CSR wire formats, from a nominal payload that validates cleanly;
+* rejection mutates nothing: not the byte ledgers, not the EF residuals,
+  not the global model (quarantine == the lost-upload no-delivery path);
+* the quarantine trace is engine-independent (it derives purely from the
+  scheduler's fault stream), and quarantined uploads book ZERO bytes —
+  the whole ledger stays an exact arithmetic identity of the trace.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.configs.feds3a_cnn import CNNConfig
+from repro.core import (MALFORM_KINDS, REFERENCE_CHURN, FedS3AConfig,
+                        FedS3ATrainer, WireIntegrityError)
+from repro.core.sparse_comm import SparseComm
+from repro.data import make_dataset
+
+TEST_CNN = CNNConfig(name="feds3a-cnn-wire", conv_filters=(8, 8), hidden=16)
+CHURN = dataclasses.replace(REFERENCE_CHURN, corrupt_prob=0.2)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("basic", scale=0.0015, seed=0)
+
+
+def _nominal(fmt, seed=0):
+    """A real encoded payload's delivery stats for ``fmt``."""
+    comm = SparseComm("p0.2", use_kernel=False, wire_format=fmt)
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    base = {"w": jax.random.normal(k1, (96,)), "b": jnp.zeros((32,))}
+    new = {"w": base["w"] + 0.1 * jax.random.normal(k2, (96,)),
+           "b": base["b"] + 0.05}
+    _, stats = comm.encode(new, base, deliver=False)
+    return comm, stats
+
+
+@pytest.mark.parametrize("fmt", ["csr", "csr_q"])
+def test_nominal_payload_validates(fmt):
+    comm, stats = _nominal(fmt)
+    assert comm.validate_payload(stats) is stats
+
+
+@pytest.mark.parametrize("fmt", ["csr", "csr_q"])
+@pytest.mark.parametrize("kind", MALFORM_KINDS)
+def test_every_malformation_class_is_rejected(fmt, kind):
+    comm, stats = _nominal(fmt)
+    before = comm.ledger_state()
+    bad = comm.malform_stats(stats, kind)
+    with pytest.raises(WireIntegrityError):
+        comm.validate_payload(bad)
+    # rejection booked nothing and malform copied rather than mutated
+    assert comm.ledger_state() == before
+    comm.validate_payload(stats)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(min_value=1, max_value=5),
+       cap=st.integers(min_value=1, max_value=9),
+       kind=st.sampled_from(MALFORM_KINDS),
+       seed=st.integers(min_value=0, max_value=3))
+def test_malformation_rejected_at_any_geometry(rows, cap, kind, seed):
+    """Synthetic payloads of arbitrary row/capacity geometry: the clean
+    one validates, every malformed variant is caught."""
+    comm = SparseComm("p0.2", use_kernel=False, wire_format="csr")
+    rng = np.random.default_rng(seed)
+    n = cap * 7 + 3
+    stored = rng.integers(0, cap + 1, rows)
+    stats = {"nnz": stored, "total": n, "rows": rows,
+             "values": rng.standard_normal((rows, cap)).astype(np.float32),
+             "indices": rng.integers(0, n, (rows, cap)).astype(np.int32)}
+    comm.validate_payload(stats)
+    with pytest.raises(WireIntegrityError):
+        comm.validate_payload(comm.malform_stats(stats, kind))
+
+
+def test_quarantine_mutates_no_trainer_state(data):
+    """A boundary full of corrupt uploads leaves EF residuals, ledgers and
+    the global model untouched (and raises on none of them)."""
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=8, cnn=TEST_CNN, engine="batched", error_feedback=True,
+        traffic=CHURN, round_deadline=700.0))
+    tr.train(2)
+    flat = np.asarray(tr._global_flat).copy()
+    res_v = np.asarray(tr._res_vals).copy() if hasattr(tr, "_res_vals") \
+        else np.stack([np.asarray(r) for r in tr._residual_rows])
+    ledger = tr.comm.ledger_state()
+    tr._quarantine_uploads(SimpleNamespace(corrupted=[0, 3, 7, 11, 19]))
+    assert np.array_equal(np.asarray(tr._global_flat), flat)
+    got = np.asarray(tr._res_vals) if hasattr(tr, "_res_vals") \
+        else np.stack([np.asarray(r) for r in tr._residual_rows])
+    assert np.array_equal(got, res_v)
+    assert tr.comm.ledger_state() == ledger
+
+
+@pytest.mark.parametrize("fmt", ["csr", "csr_q"])
+def test_quarantine_trace_is_engine_independent(data, fmt):
+    """The corrupt-fate stream derives purely from the scheduler's traffic
+    RNG, so every engine quarantines the identical clients at the
+    identical rounds."""
+    traces = []
+    for engine in ("sequential", "batched", "sharded"):
+        tr = FedS3ATrainer(data, FedS3AConfig(
+            rounds=6, cnn=TEST_CNN, engine=engine, wire_format=fmt,
+            error_feedback=True, traffic=CHURN, round_deadline=700.0))
+        tr.train()
+        traces.append([(l.participants, l.lost, l.corrupted,
+                        round(l.time, 9)) for l in tr.logs])
+    assert traces[0] == traces[1] == traces[2]
+    assert any(l for _, _, l, _ in traces[0]), \
+        "profile produced no quarantined uploads; weak test"
+
+
+def test_quarantined_uploads_book_zero_bytes(data):
+    """With sparsification disabled every message is exactly n*4 bytes, so
+    the ledger is an exact arithmetic identity of the fault trace: one
+    upload per DELIVERED participant (lost AND quarantined uploads
+    absent), one dense broadcast per round with targets (quarantined
+    clients DO rebase — they restart from the new global model like lost
+    ones), one dense unicast per resync."""
+    tr = FedS3ATrainer(data, FedS3AConfig(
+        rounds=15, cnn=TEST_CNN, engine="batched", sparse_comm=False,
+        traffic=CHURN, round_deadline=700.0))
+    tr.train()
+    n = int(tr._global_flat.shape[0])
+    uploads = rounds_with_targets = resyncs = quarantined = 0
+    for l in tr.logs:
+        uploads += len(l.participants)
+        resyncs += len(l.resynced)
+        quarantined += len(l.corrupted)
+        online_parts = set(l.participants) - (set(l.departed)
+                                              - set(l.rejoined))
+        chain = set(l.rejoined) - set(l.resynced)
+        if online_parts | set(l.forced) | set(l.lost) | set(l.corrupted) \
+                | chain:
+            rounds_with_targets += 1
+    assert quarantined > 0, "profile produced no quarantines; weak test"
+    expected = 4 * n * (uploads + rounds_with_targets + resyncs)
+    assert tr.comm.payload_bytes == expected
+    assert tr.comm.messages == uploads + rounds_with_targets + resyncs
+    from repro.core.metrics import fleet_health
+    assert fleet_health(tr.logs)["quarantined"] == quarantined
